@@ -1,0 +1,41 @@
+//! Ablation (paper Fig. 13): LEGEND vs LEGEND w/o LoRA-depth vs
+//! LEGEND w/o rank-distribution, on synthetic SST-2 with real
+//! gradients. Shows both factors matter, in different ways: w/o LD
+//! keeps accuracy but pays time; w/o RD keeps time but loses accuracy.
+//!
+//! Run:  cargo run --release --example ablation [-- --rounds 15]
+
+use legend::coordinator::FedConfig;
+use legend::device::FleetConfig;
+use legend::exp::{shared_target, ExpEnv};
+use legend::metrics;
+use legend::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rounds = args.get_parse("rounds", 15usize)?;
+
+    let env = ExpEnv::load("artifacts")?;
+    let cfg = FedConfig {
+        task: "sst2".into(),
+        rounds,
+        train_size: 1024,
+        test_size: 256,
+        verbose: true,
+        ..Default::default()
+    };
+    let fleet = FleetConfig::sized(10);
+
+    let mut runs = Vec::new();
+    for method in ["legend", "legend-no-ld", "legend-no-rd"] {
+        println!("--- {method} ---");
+        runs.push(env.run_method(method, &cfg, &fleet)?);
+    }
+    let target = shared_target(&runs);
+    println!("\n{}", metrics::summary_table(&runs, target));
+    println!("expected shape (paper §6.3): w/o LD ≈ LEGEND accuracy but \
+              slower; w/o RD faster than w/o LD but lower accuracy.");
+    let path = metrics::write_csv("ablation_sst2", &runs)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,244 @@
+"""AOT compile path: lower every executable the rust runtime needs.
+
+Emits HLO **text** (not serialized HloModuleProto): jax ≥ 0.5 writes
+protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir (default ../artifacts):
+  lora_train.hlo.txt     masked LoRA AdamW train step (all LoRA methods)
+  lora_eval.hlo.txt      eval step (loss_sum, correct) for the LoRA family
+  adapter_train.hlo.txt  FedAdapter family train step
+  adapter_eval.hlo.txt   FedAdapter family eval step
+  lora_kernel.hlo.txt    the L1 Pallas fused LoRA-linear (interpret) —
+                         loaded by examples/quickstart.rs to prove the
+                         three layers compose
+  base_weights.bin       MLM-pretrained frozen base (f32, BASE_ORDER)
+  manifest.json          tensor names/shapes/orderings + model config
+  vocab.json             synthetic-task grammar spec for rust/src/data/
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, pretrain
+from .configs import ModelConfig
+
+EVAL_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _named(shapes: Dict[str, tuple], order: List[str]):
+    return [{"name": n, "shape": list(shapes[n])} for n in order]
+
+
+def lower_family(cfg: ModelConfig, family: str):
+    """Returns (train_hlo_text, eval_hlo_text, manifest_fragment)."""
+    t_order = model.LORA_ORDER if family == "lora" else model.ADAPTER_ORDER
+    t_shapes = (model.lora_shapes(cfg) if family == "lora"
+                else model.adapter_shapes(cfg))
+    b_shapes = model.base_shapes(cfg)
+    o_order = model.opt_order(family)
+    L = cfg.n_layers
+    r = cfg.r_max if family == "lora" else cfg.adapter_w_max
+
+    nb, nt = len(model.BASE_ORDER), len(t_order)
+    no = len(o_order)
+    train_step = model.make_train_step(cfg, family=family)
+    eval_step = model.make_eval_step(cfg, family=family)
+
+    def train_flat(*args):
+        base = model.unflatten_base(args[:nb])
+        trainable = model.unflatten_trainable(args[nb:nb + nt], family)
+        opt = model.unflatten_opt(args[nb + nt:nb + nt + no], family)
+        rank_mask, layer_mask, tokens, labels, lr, step = \
+            args[nb + nt + no:]
+        new_t, new_o, loss, correct = train_step(
+            base, trainable, opt, rank_mask, layer_mask, tokens, labels,
+            lr, step)
+        return (tuple(model.flatten_trainable(new_t, family))
+                + tuple(model.flatten_opt(new_o, family))
+                + (loss, correct))
+
+    def eval_flat(*args):
+        base = model.unflatten_base(args[:nb])
+        trainable = model.unflatten_trainable(args[nb:nb + nt], family)
+        rank_mask, layer_mask, tokens, labels = args[nb + nt:]
+        return eval_step(base, trainable, rank_mask, layer_mask, tokens,
+                         labels)
+
+    base_specs = [_spec(b_shapes[n]) for n in model.BASE_ORDER]
+    t_specs = [_spec(t_shapes[n]) for n in t_order]
+    o_specs = [_spec(t_shapes[n[2:]]) for n in o_order]
+    mask_specs = [_spec((L, r)), _spec((L,))]
+    train_batch = [_spec((cfg.batch_size, cfg.seq_len), jnp.int32),
+                   _spec((cfg.batch_size,), jnp.int32)]
+    eval_batch = [_spec((EVAL_BATCH, cfg.seq_len), jnp.int32),
+                  _spec((EVAL_BATCH,), jnp.int32)]
+    scalar = [_spec((), jnp.float32), _spec((), jnp.float32)]
+
+    t0 = time.time()
+    train_lowered = jax.jit(train_flat).lower(
+        *(base_specs + t_specs + o_specs + mask_specs + train_batch
+          + scalar))
+    train_txt = to_hlo_text(train_lowered)
+    eval_lowered = jax.jit(eval_flat).lower(
+        *(base_specs + t_specs + mask_specs + eval_batch))
+    eval_txt = to_hlo_text(eval_lowered)
+    print(f"[aot] lowered {family} train+eval in {time.time()-t0:.1f}s "
+          f"({len(train_txt)/1e6:.2f} MB + {len(eval_txt)/1e6:.2f} MB)",
+          flush=True)
+
+    frag = {
+        "trainable": _named(t_shapes, t_order),
+        "opt": o_order,
+        "train": {
+            "artifact": f"{family}_train.hlo.txt",
+            "inputs": (list(model.BASE_ORDER) + t_order + o_order
+                       + ["rank_mask", "layer_mask", "tokens", "labels",
+                          "lr", "step"]),
+            "outputs": t_order + o_order + ["loss", "correct"],
+        },
+        "eval": {
+            "artifact": f"{family}_eval.hlo.txt",
+            "inputs": (list(model.BASE_ORDER) + t_order
+                       + ["rank_mask", "layer_mask", "tokens", "labels"]),
+            "outputs": ["loss_sum", "correct"],
+        },
+    }
+    return train_txt, eval_txt, frag
+
+
+def lower_kernel(cfg: ModelConfig):
+    """Lower the Pallas fused LoRA-linear (the L1 compose proof)."""
+    from .kernels import lora as klora
+
+    m, k, n, r = 64, cfg.d_model, cfg.d_model, cfg.r_max
+
+    def kernel_fn(x, w, a, b, mask, scale):
+        return (klora.lora_linear(x, w, a, b, mask, scale[0],
+                                  block_m=32, block_n=64),)
+
+    lowered = jax.jit(kernel_fn).lower(
+        _spec((m, k)), _spec((k, n)), _spec((r, k)), _spec((n, r)),
+        _spec((r,)), _spec((1,)))
+    txt = to_hlo_text(lowered)
+    frag = {
+        "artifact": "lora_kernel.hlo.txt",
+        "shapes": {"x": [m, k], "w": [k, n], "a": [r, k], "b": [n, r],
+                   "mask": [r], "scale": [1]},
+    }
+    return txt, frag
+
+
+def dump_stats(out_dir: str) -> None:
+    """Per-artifact HLO stats for DESIGN §Perf (fusion sanity check)."""
+    for f in sorted(os.listdir(out_dir)):
+        if not f.endswith(".hlo.txt"):
+            continue
+        txt = open(os.path.join(out_dir, f)).read()
+        n_instr = txt.count("\n  ")
+        n_fusion = txt.count(" fusion(")
+        n_dot = txt.count(" dot(")
+        n_while = txt.count(" while(")
+        print(f"[stats] {f}: {len(txt)/1e6:.2f} MB, ~{n_instr} instrs, "
+              f"{n_dot} dots, {n_fusion} fusions, {n_while} whiles")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="default",
+                    choices=["default", "tiny", "large"])
+    ap.add_argument("--pretrain-steps", type=int, default=300)
+    ap.add_argument("--force-pretrain", action="store_true")
+    ap.add_argument("--skip-pretrain", action="store_true",
+                    help="random base (tests only; accuracy won't climb)")
+    ap.add_argument("--dump-stats", action="store_true")
+    args = ap.parse_args()
+
+    cfg = {"default": configs.DEFAULT, "tiny": configs.TINY,
+           "large": configs.LARGE}[args.config]
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    # 1. Frozen base: pretrain (or random for smoke tests). Cached —
+    # the pretraining corpus/model init do not depend on the train-step
+    # code, so an existing base_weights.bin of the right size is reused
+    # unless --force-pretrain is passed.
+    base_path = os.path.join(out, "base_weights.bin")
+    expect_bytes = 4 * sum(
+        int(np.prod(s)) for s in model.base_shapes(cfg).values())
+    if (not args.force_pretrain and not args.skip_pretrain
+            and os.path.exists(base_path)
+            and os.path.getsize(base_path) == expect_bytes):
+        print(f"[aot] reusing cached {base_path}")
+        n_bytes = expect_bytes
+    else:
+        if args.skip_pretrain:
+            print("[aot] skipping pretraining (random base)")
+            base = model.init_base(cfg, jax.random.PRNGKey(7))
+        else:
+            print(f"[aot] pretraining base ({args.pretrain_steps} steps)...")
+            base = pretrain.pretrain_base(cfg, steps=args.pretrain_steps)
+        n_bytes = pretrain.save_base(base, base_path)
+        print(f"[aot] wrote {base_path} ({n_bytes/1e6:.1f} MB)")
+
+    # 2. Lower both model families + the Pallas kernel.
+    families = {}
+    for family in ("lora", "adapter"):
+        train_txt, eval_txt, frag = lower_family(cfg, family)
+        with open(os.path.join(out, f"{family}_train.hlo.txt"), "w") as f:
+            f.write(train_txt)
+        with open(os.path.join(out, f"{family}_eval.hlo.txt"), "w") as f:
+            f.write(eval_txt)
+        families[family] = frag
+
+    kern_txt, kern_frag = lower_kernel(cfg)
+    with open(os.path.join(out, "lora_kernel.hlo.txt"), "w") as f:
+        f.write(kern_txt)
+
+    # 3. Manifest + grammar spec.
+    manifest = {
+        "version": 1,
+        "model": cfg.to_json_dict(),
+        "eval_batch": EVAL_BATCH,
+        "base": _named(model.base_shapes(cfg), model.BASE_ORDER),
+        "base_bytes": n_bytes,
+        "families": families,
+        "kernel": kern_frag,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out, "vocab.json"), "w") as f:
+        json.dump(configs.task_spec(), f, indent=1)
+    print(f"[aot] wrote manifest.json + vocab.json to {out}")
+
+    if args.dump_stats:
+        dump_stats(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Model and task configuration shared across the compile path.
+
+Everything here is *build-time* configuration: the model architecture
+that gets lowered to HLO, and the synthetic-task grammar spec that is
+serialized into ``artifacts/vocab.json`` so the rust data generators
+(`rust/src/data/`) produce token streams from exactly the same vocab
+layout the python pretraining corpus used.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """RoBERTa-style encoder classifier, stacked-layer layout.
+
+    The federated experiments fine-tune LoRA adapters (padded to
+    ``r_max`` per layer — see DESIGN.md "masking trick") and the
+    classification head on top of a frozen base pretrained by
+    ``pretrain.py``.
+    """
+
+    n_layers: int = 12          # L — matches RoBERTa-base used in the paper
+    d_model: int = 128          # scaled for the single-core CPU testbed
+    n_heads: int = 4
+    d_ffn: int = 512
+    vocab_size: int = 2048
+    seq_len: int = 32
+    n_classes: int = 4          # superset head: binary tasks use labels {0,1}
+    r_max: int = 16             # LoRA rank padding (>= any assigned rank)
+    lora_alpha: float = 16.0
+    adapter_w_max: int = 32     # FedAdapter bottleneck width padding
+    batch_size: int = 4         # matches the paper's on-device batch size
+    dtype: str = "float32"
+
+    # AdamW hyper-parameters baked into the train-step artifact.
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_json_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+# The configuration every artifact in artifacts/ is lowered with.
+DEFAULT = ModelConfig()
+
+# A tiny config for fast unit tests (never lowered to artifacts).
+TINY = ModelConfig(
+    n_layers=2, d_model=16, n_heads=2, d_ffn=32, vocab_size=128,
+    seq_len=8, n_classes=4, r_max=4, adapter_w_max=8, batch_size=2,
+)
+
+# A larger config exercised by the e2e example (see EXPERIMENTS.md) to
+# demonstrate the stack scales beyond the default experiment size.
+LARGE = ModelConfig(
+    n_layers=12, d_model=256, n_heads=8, d_ffn=1024, vocab_size=4096,
+    seq_len=32, r_max=16,
+)
+
+
+# ---------------------------------------------------------------------------
+# Vocab layout + synthetic task grammars (shared spec with rust/src/data/)
+# ---------------------------------------------------------------------------
+
+PAD, CLS, MASK, SEP = 0, 1, 2, 3
+
+# Reserved special tokens occupy [0, 4); filler (function) words occupy
+# [4, 4+N_FILLER); task-specific word banks follow.
+N_FILLER = 100
+FILLER = (4, 4 + N_FILLER)          # half-open id range
+
+_next = FILLER[1]
+
+
+def _bank(size: int) -> Tuple[int, int]:
+    global _next
+    lo, hi = _next, _next + size
+    _next = hi
+    return (lo, hi)
+
+
+# Sentiment banks (sst2-syn): 50 "positive" / 50 "negative" words.
+SST2_POS = _bank(50)
+SST2_NEG = _bank(50)
+
+# Entailment indicator banks (qnli-syn / mnli-syn / qqp-syn share the
+# pair-grammar; each task gets its own banks so the tasks are distinct).
+QNLI_ENT = _bank(40)
+QNLI_CON = _bank(40)
+QQP_DUP = _bank(40)
+QQP_NODUP = _bank(40)
+MNLI_ENT = _bank(40)
+MNLI_NEU = _bank(40)
+
+# Topic banks (mmlu-syn): 4 academic-domain banks.
+MMLU_TOPICS = [_bank(40) for _ in range(4)]
+
+# Digit / operator tokens (gsm-syn).
+DIGITS = _bank(10)     # token DIGITS[0]+d encodes digit d
+OPS = _bank(3)         # +, -, *
+
+NOISE = (_next, DEFAULT.vocab_size)   # everything else is noise vocab
+
+assert _next < DEFAULT.vocab_size, "vocab too small for the banks"
+
+
+def task_spec() -> Dict:
+    """The grammar spec serialized to artifacts/vocab.json.
+
+    rust/src/data/grammar.rs consumes this verbatim; any change here
+    must keep the schema stable (see rust-side tests).
+    """
+    return {
+        "vocab_size": DEFAULT.vocab_size,
+        "seq_len": DEFAULT.seq_len,
+        "special": {"pad": PAD, "cls": CLS, "mask": MASK, "sep": SEP},
+        "filler": list(FILLER),
+        "noise": list(NOISE),
+        "tasks": {
+            "sst2": {
+                "kind": "single",
+                "n_classes": 2,
+                "banks": [list(SST2_POS), list(SST2_NEG)],
+                "len_range": [8, 24],
+                "bank_words": [3, 6],
+                "label_noise": 0.02,
+            },
+            "qnli": {
+                "kind": "pair",
+                "n_classes": 2,
+                "banks": [list(QNLI_ENT), list(QNLI_CON)],
+                "len_range": [6, 14],
+                "bank_words": [2, 5],
+                "label_noise": 0.03,
+            },
+            "qqp": {
+                "kind": "pair",
+                "n_classes": 2,
+                "banks": [list(QQP_DUP), list(QQP_NODUP)],
+                "len_range": [6, 14],
+                "bank_words": [2, 5],
+                "label_noise": 0.03,
+            },
+            "mnli": {
+                "kind": "pair",
+                "n_classes": 2,
+                "banks": [list(MNLI_ENT), list(MNLI_NEU)],
+                "len_range": [6, 14],
+                "bank_words": [2, 5],
+                "label_noise": 0.03,
+            },
+            "mmlu": {
+                "kind": "single",
+                "n_classes": 4,
+                "banks": [list(b) for b in MMLU_TOPICS],
+                "len_range": [8, 24],
+                "bank_words": [3, 6],
+                "label_noise": 0.05,
+            },
+            "gsm": {
+                "kind": "arith",
+                "n_classes": 4,
+                "digits": list(DIGITS),
+                "ops": list(OPS),
+                "n_terms": 3,
+                "label_noise": 0.0,
+            },
+        },
+    }

@@ -1,0 +1,134 @@
+"""Python-side synthetic task generator (build-time only).
+
+Generates the MLM pretraining corpus from the same vocab layout /
+grammar spec that the rust data generators (`rust/src/data/grammar.rs`)
+use for federated fine-tuning. The spec itself is serialized to
+``artifacts/vocab.json`` by ``aot.py``; this module and the rust module
+are two implementations of the same published grammar — they need to
+agree on the *distribution*, not bit-for-bit samples.
+
+Grammar (see DESIGN.md §2):
+  single: CLS, then a shuffled mix of `k ~ U[bank_words]` words drawn
+          from the label's bank and `ℓ-k` background words (80% filler,
+          20% noise), PAD-padded to seq_len.
+  pair:   CLS, premise of filler words, SEP, hypothesis containing the
+          label's bank words — models must attend across the SEP.
+  arith:  CLS d1 + d2 + d3 SEP, label = (d1+d2+d3) mod n_classes — the
+          model must actually add (gsm-syn's stand-in for multi-step
+          reasoning; converges slowly, like GSM-8K in the paper).
+With probability `label_noise` the label is resampled uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from . import configs
+
+
+def _bg_word(spec: Dict, rng: np.random.Generator) -> int:
+    if rng.random() < 0.8:
+        lo, hi = spec["filler"]
+    else:
+        lo, hi = spec["noise"]
+    return int(rng.integers(lo, hi))
+
+
+def sample_single(spec: Dict, task: Dict, label: int,
+                  rng: np.random.Generator) -> List[int]:
+    lo_len, hi_len = task["len_range"]
+    lo_k, hi_k = task["bank_words"]
+    length = int(rng.integers(lo_len, hi_len + 1))
+    k = int(rng.integers(lo_k, hi_k + 1))
+    blo, bhi = task["banks"][label]
+    words = [int(rng.integers(blo, bhi)) for _ in range(k)]
+    words += [_bg_word(spec, rng) for _ in range(max(length - k, 0))]
+    rng.shuffle(words)
+    return [spec["special"]["cls"]] + words
+
+
+def sample_pair(spec: Dict, task: Dict, label: int,
+                rng: np.random.Generator) -> List[int]:
+    lo_len, hi_len = task["len_range"]
+    lo_k, hi_k = task["bank_words"]
+    sep = spec["special"]["sep"]
+    prem_len = int(rng.integers(lo_len, hi_len + 1))
+    hyp_len = int(rng.integers(lo_len, hi_len + 1))
+    k = int(rng.integers(lo_k, hi_k + 1))
+    blo, bhi = task["banks"][label]
+    premise = [_bg_word(spec, rng) for _ in range(prem_len)]
+    hyp = [int(rng.integers(blo, bhi)) for _ in range(k)]
+    hyp += [_bg_word(spec, rng) for _ in range(max(hyp_len - k, 0))]
+    rng.shuffle(hyp)
+    return [spec["special"]["cls"]] + premise + [sep] + hyp
+
+
+def sample_arith(spec: Dict, task: Dict, rng: np.random.Generator
+                 ) -> Tuple[List[int], int]:
+    digits = task["digits"]
+    plus = task["ops"][0]
+    terms = [int(rng.integers(0, 10)) for _ in range(task["n_terms"])]
+    label = sum(terms) % task["n_classes"]
+    toks = [spec["special"]["cls"]]
+    for i, t in enumerate(terms):
+        if i:
+            toks.append(plus)
+        toks.append(digits[0] + t)
+    toks.append(spec["special"]["sep"])
+    return toks, label
+
+
+def sample_example(spec: Dict, task_name: str,
+                   rng: np.random.Generator) -> Tuple[List[int], int]:
+    """One (token_ids, label) example, PADed/truncated to seq_len."""
+    task = spec["tasks"][task_name]
+    n = task["n_classes"]
+    if task["kind"] == "arith":
+        toks, label = sample_arith(spec, task, rng)
+    else:
+        label = int(rng.integers(0, n))
+        fn = sample_single if task["kind"] == "single" else sample_pair
+        toks = fn(spec, task, label, rng)
+    if rng.random() < task.get("label_noise", 0.0):
+        label = int(rng.integers(0, n))
+    s = spec["seq_len"]
+    pad = spec["special"]["pad"]
+    toks = toks[:s] + [pad] * max(0, s - len(toks))
+    return toks, label
+
+
+def corpus_batch(spec: Dict, batch: int, rng: np.random.Generator
+                 ) -> np.ndarray:
+    """Unlabeled pretraining batch: sentences mixed across all tasks."""
+    names = list(spec["tasks"].keys())
+    rows = []
+    for _ in range(batch):
+        task = names[int(rng.integers(0, len(names)))]
+        toks, _ = sample_example(spec, task, rng)
+        rows.append(toks)
+    return np.asarray(rows, dtype=np.int32)
+
+
+def mlm_mask_batch(tokens: np.ndarray, rng: np.random.Generator,
+                   mask_id: int, pad_id: int, rate: float = 0.15
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """BERT-style masking: returns (inputs, targets, loss_mask)."""
+    targets = tokens.copy()
+    can_mask = tokens != pad_id
+    chosen = (rng.random(tokens.shape) < rate) & can_mask
+    inputs = tokens.copy()
+    replace = chosen & (rng.random(tokens.shape) < 0.8)
+    inputs[replace] = mask_id
+    return inputs, targets, chosen.astype(np.float32)
+
+
+def labeled_batch(spec: Dict, task_name: str, batch: int,
+                  rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+    xs, ys = [], []
+    for _ in range(batch):
+        t, l = sample_example(spec, task_name, rng)
+        xs.append(t)
+        ys.append(l)
+    return np.asarray(xs, dtype=np.int32), np.asarray(ys, dtype=np.int32)

@@ -1,0 +1,84 @@
+"""L1: fused bottleneck-adapter Pallas kernel (FedAdapter family).
+
+Same TPU framing as the LoRA kernel (see lora.py): grid over [bm, D]
+activation strips; the bottleneck factors (w_max ≤ 32) stay
+VMEM-resident; width masking in-register so one kernel serves every
+FedAdapter width candidate. The adapter is residual
+(`y = x + gelu(x·(d⊙m)+b)·(u⊙m)`), matching ref.adapter_ref and the
+L2 model's adapter branch.
+
+interpret=True on CPU (Mosaic custom-calls need a real TPU plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adapter_kernel(x_ref, down_ref, up_ref, b_ref, mask_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bm, D]
+    mask = mask_ref[...].astype(jnp.float32)      # [w_max]
+    down = down_ref[...].astype(jnp.float32) * mask[None, :]  # [D, w]
+    up = up_ref[...].astype(jnp.float32) * mask[:, None]      # [w, D]
+    b = b_ref[...].astype(jnp.float32)
+
+    h = jax.lax.dot_general(
+        x, down, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [bm, w]
+    h = jax.nn.gelu(h + b[None, :]) * mask[None, :]
+    y = jax.lax.dot_general(
+        h, up, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [bm, D]
+    o_ref[...] = x + y
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def adapter_forward(x, down, up, b_down, width_mask, *, block_m=128):
+    """Fused residual adapter via Pallas. See ``ref.adapter_ref``.
+
+    Args:
+      x: [M, D]; down: [D, w_max]; up: [w_max, D]; b_down: [w_max];
+      width_mask: [w_max] {0,1}.
+
+    Returns: [M, D] f32.
+    """
+    m, d = x.shape
+    w = down.shape[1]
+    assert down.shape == (d, w)
+    assert up.shape == (w, d)
+    assert b_down.shape == (w,)
+    assert width_mask.shape == (w,)
+
+    bm = min(block_m, m)
+    mp = -(-m // bm) * bm
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    grid = (mp // bm,)
+    out = pl.pallas_call(
+        _adapter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),    # x strip
+            pl.BlockSpec((d, w), lambda i: (0, 0)),     # down resident
+            pl.BlockSpec((w, d), lambda i: (0, 0)),     # up resident
+            pl.BlockSpec((w,), lambda i: (0,)),         # bias
+            pl.BlockSpec((w,), lambda i: (0,)),         # width mask
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, d), jnp.float32),
+        interpret=True,
+    )(xp, down, up, b_down, width_mask.astype(jnp.float32))
+    return out[:m]
+
+
+def vmem_bytes(block_m, d, w_max, dtype_bytes=4):
+    """Static VMEM footprint per program (DESIGN §Perf)."""
+    return dtype_bytes * (
+        2 * block_m * d      # x strip + out
+        + 2 * d * w_max      # down + up
+        + block_m * w_max    # bottleneck intermediate
+        + 2 * w_max          # bias + mask
+    )

@@ -1,0 +1,133 @@
+"""L1: fused LoRA-linear Pallas kernel.
+
+The paper's per-device compute hot-spot is the LoRA bypass fused into
+every adapted linear layer: ``y = x·W + (α/r)·B(Ax)``. On the paper's
+Jetson GPUs that fusion is a CUDA threadblock tiling; here we re-think
+it for the TPU memory hierarchy (DESIGN.md §Hardware-Adaptation):
+
+  * grid over (M/bm, N/bn) *output* tiles — each program owns one
+    [bm, bn] MXU-shaped tile of y;
+  * the [bm, K] activation strip and [K, bn] weight strip stream
+    HBM→VMEM per program (BlockSpec index maps below express exactly
+    the schedule a CUDA kernel would do with cp.async);
+  * the LoRA factors are tiny (r_max ≤ 16), so the [r_max, K] A strip
+    and [bn, r_max] B strip stay VMEM-resident and the bypass never
+    round-trips to HBM — this is the fusion the paper gets from
+    running LoRA "for free" inside the frozen matmul's pass;
+  * rank masking happens in-register: padded rank slots multiply by 0,
+    which is how one artifact serves every rank distribution.
+
+On CPU we must run ``interpret=True`` (real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute); numerics are verified
+against ``ref.lora_linear_ref`` by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lora_linear_kernel(x_ref, w_ref, a_ref, b_ref, mask_ref, scale_ref,
+                        o_ref):
+    """One [bm, bn] output tile of y = x·w + scale·(x·(m⊙a)ᵀ)·(m⊙b)ᵀ."""
+    x = x_ref[...].astype(jnp.float32)            # [bm, K]   VMEM
+    w = w_ref[...].astype(jnp.float32)            # [K, bn]   VMEM
+    mask = mask_ref[...].astype(jnp.float32)      # [r_max]
+    a = a_ref[...].astype(jnp.float32) * mask[:, None]   # [r_max, K]
+    b = b_ref[...].astype(jnp.float32) * mask[None, :]   # [bn, r_max]
+    scale = scale_ref[0]
+
+    # Base path: MXU matmul, f32 accumulation.
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [bm, bn]
+
+    # Low-rank bypass: two skinny matmuls, fully VMEM-resident.
+    low = jax.lax.dot_general(
+        x, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [bm, r_max]
+    byp = jax.lax.dot_general(
+        low, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [bm, bn]
+
+    o_ref[...] = acc + scale * byp
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def lora_linear(x, w, a, b, rank_mask, scale, *, block_m=128, block_n=128):
+    """Fused LoRA linear via Pallas. See ``ref.lora_linear_ref``.
+
+    Args:
+      x: [M, K]; w: [K, N]; a: [r_max, K]; b: [N, r_max];
+      rank_mask: [r_max] {0,1}; scale: scalar f32.
+      block_m/block_n: output tile shape (clamped to M/N).
+
+    Returns: [M, N] f32.
+    """
+    m, k = x.shape
+    kw, n = w.shape
+    assert k == kw, f"inner dims disagree: {k} vs {kw}"
+    r_max = a.shape[0]
+    assert a.shape == (r_max, k)
+    assert b.shape == (n, r_max)
+    assert rank_mask.shape == (r_max,)
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    # Pad M/N up to tile multiples; padded rows/cols are sliced off.
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    bp = jnp.pad(b, ((0, np_ - n), (0, 0))) if np_ != n else b
+
+    scale_arr = jnp.asarray([scale], dtype=jnp.float32)
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _lora_linear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),      # x strip
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),      # w strip
+            pl.BlockSpec((r_max, k), lambda i, j: (0, 0)),   # A resident
+            pl.BlockSpec((bn, r_max), lambda i, j: (j, 0)),  # B strip
+            pl.BlockSpec((r_max,), lambda i, j: (0,)),       # mask
+            pl.BlockSpec((1,), lambda i, j: (0,)),           # scale
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, a, bp, rank_mask.astype(jnp.float32), scale_arr)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m, block_n, k, r_max, dtype_bytes=4):
+    """Static VMEM footprint estimate for one program (DESIGN §Perf).
+
+    x strip + w strip + A + B strip + out tile + f32 accumulators.
+    """
+    return dtype_bytes * (
+        block_m * k          # x
+        + k * block_n        # w
+        + r_max * k          # a
+        + block_n * r_max    # b
+        + block_m * block_n  # out
+        + block_m * r_max    # low-rank intermediate
+    )
+
+
+def mxu_utilization_estimate(m, n, k, r_max, block_m=128, block_n=128):
+    """Fraction of MXU-issue slots doing useful work, vs 128×128 tiles.
+
+    The base matmul dominates; the bypass adds 2·M·r·(K+N) MACs. Tiles
+    whose edges are padded waste (tile - actual) lanes.
+    """
+    useful = m * n * k + m * r_max * (k + n)
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    issued = mp * np_ * k + mp * r_max * (k + np_)
+    return useful / issued

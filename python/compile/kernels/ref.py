@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness references*: the Pallas kernels in
+``lora.py`` must match them (pytest + hypothesis sweep shapes, ranks,
+masks and dtypes), and the L2 model uses these same formulas on its
+default (non-pallas) path, so kernel==ref also proves kernel==model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_linear_ref(x, w, a, b, rank_mask, scale):
+    """Reference fused LoRA linear: ``y = x·w + scale·((x·(m⊙a)ᵀ)·(m⊙b)ᵀ)``.
+
+    Args:
+      x:  [M, K] activations.
+      w:  [K, N] frozen base weight.
+      a:  [r_max, K] LoRA project-down factor (rows past the active rank
+          are padding).
+      b:  [N, r_max] LoRA project-up factor (columns past the active
+          rank are padding).
+      rank_mask: [r_max] {0,1} — 1 marks an active rank slot. Encodes
+          any per-layer rank ≤ r_max (DESIGN.md "masking trick").
+      scale: scalar LoRA scaling (α / r_effective).
+
+    Returns:
+      [M, N] output in f32.
+    """
+    xf = x.astype(jnp.float32)
+    low = xf @ (a * rank_mask[:, None]).astype(jnp.float32).T      # [M, r]
+    bypass = low @ (b * rank_mask[None, :]).astype(jnp.float32).T  # [M, N]
+    return xf @ w.astype(jnp.float32) + scale * bypass
+
+
+def adapter_ref(x, down, up, b_down, width_mask):
+    """Reference bottleneck adapter: ``y = x + gelu(x·(d⊙m)+b)·(u⊙m)``.
+
+    Args:
+      x: [M, D] activations.
+      down: [D, w_max] down-projection.
+      up: [w_max, D] up-projection.
+      b_down: [w_max] bottleneck bias.
+      width_mask: [w_max] {0,1} active-width mask.
+
+    Returns:
+      [M, D] residual-added output in f32.
+    """
+    xf = x.astype(jnp.float32)
+    h = xf @ (down * width_mask[None, :]).astype(jnp.float32)
+    h = jax.nn.gelu(h + b_down.astype(jnp.float32)) * width_mask[None, :]
+    return xf + h @ (up * width_mask[:, None]).astype(jnp.float32)
+
+
+def effective_rank(rank_mask):
+    """Number of active rank slots (≥1 to keep α/r finite)."""
+    return jnp.maximum(rank_mask.sum(), 1.0)

@@ -1,0 +1,464 @@
+"""L2: RoBERTa-style encoder classifier with masked LoRA / adapters.
+
+This module defines *all* compute that runs on devices in the federated
+system: the forward pass, the LoRA (and FedAdapter) train steps with
+AdamW, the eval step, and the MLM pretraining step used to manufacture
+the frozen base (DESIGN.md §2 — no Hugging Face checkpoints offline).
+
+Layer parameters are **stacked** along a leading ``L`` axis and the
+encoder runs ``lax.scan`` over layers, so one lowered HLO module covers
+any depth/rank/position configuration through the ``layer_mask`` /
+``rank_mask`` inputs (DESIGN.md "masking trick"). LoRA is applied to
+the query and value projections, following the LoRA paper defaults the
+FedFT baselines use.
+
+Everything is lowered ONCE by ``aot.py``; Python never runs at
+federated-training time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import ModelConfig
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+# Canonical ordering of the frozen base tensors: this is the order they
+# appear in artifacts/base_weights.bin and as executable inputs.
+BASE_ORDER: List[str] = [
+    "embed", "pos",
+    "ln1_g", "ln1_b",
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2_g", "ln2_b",
+    "w1", "b1", "w2", "b2",
+    "lnf_g", "lnf_b",
+]
+
+# Trainable tensors for the LoRA family (LEGEND/FedLoRA/HetLoRA/ablations).
+LORA_ORDER: List[str] = [
+    "aq", "bq", "av", "bv", "head_w", "head_b",
+]
+
+# Trainable tensors for the FedAdapter family.
+ADAPTER_ORDER: List[str] = [
+    "down", "bdown", "up", "head_w", "head_b",
+]
+
+
+def base_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    L, d, f, V, S = (cfg.n_layers, cfg.d_model, cfg.d_ffn,
+                     cfg.vocab_size, cfg.seq_len)
+    return {
+        "embed": (V, d), "pos": (S, d),
+        "ln1_g": (L, d), "ln1_b": (L, d),
+        "wq": (L, d, d), "bq": (L, d),
+        "wk": (L, d, d), "bk": (L, d),
+        "wv": (L, d, d), "bv": (L, d),
+        "wo": (L, d, d), "bo": (L, d),
+        "ln2_g": (L, d), "ln2_b": (L, d),
+        "w1": (L, d, f), "b1": (L, f),
+        "w2": (L, f, d), "b2": (L, d),
+        "lnf_g": (d,), "lnf_b": (d,),
+    }
+
+
+def lora_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    L, d, r, C = cfg.n_layers, cfg.d_model, cfg.r_max, cfg.n_classes
+    return {
+        "aq": (L, r, d), "bq": (L, d, r),
+        "av": (L, r, d), "bv": (L, d, r),
+        "head_w": (d, C), "head_b": (C,),
+    }
+
+
+def adapter_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    L, d, w, C = cfg.n_layers, cfg.d_model, cfg.adapter_w_max, cfg.n_classes
+    return {
+        "down": (L, d, w), "bdown": (L, w), "up": (L, w, d),
+        "head_w": (d, C), "head_b": (C,),
+    }
+
+
+def init_base(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Random (pre-pretraining) base parameters.
+
+    Scaling matters on a from-scratch base: token embeddings are
+    initialized at unit per-element variance (‖e‖ ≈ √d) so the lexical
+    signal is commensurate with the residual stream, and the residual
+    output projections (wo, w2) carry the GPT-2-style 1/√(2L)
+    down-scaling so 12 layers of additions don't drown it.
+    """
+    shapes = base_shapes(cfg)
+    params = {}
+    keys = jax.random.split(key, len(BASE_ORDER))
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for k, name in zip(keys, BASE_ORDER):
+        shp = shapes[name]
+        if name.startswith(("ln", "lnf")):
+            params[name] = (jnp.ones(shp, jnp.float32) if name.endswith("_g")
+                            else jnp.zeros(shp, jnp.float32))
+        elif name == "embed":
+            params[name] = jax.random.normal(k, shp, jnp.float32)
+        elif name == "pos":
+            params[name] = 0.5 * jax.random.normal(k, shp, jnp.float32)
+        elif name.startswith("b"):
+            params[name] = jnp.zeros(shp, jnp.float32)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            std = 1.0 / jnp.sqrt(fan_in)
+            if name in ("wo", "w2"):
+                std = std * resid_scale
+            params[name] = jax.random.normal(k, shp, jnp.float32) * std
+    return params
+
+
+def init_lora(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """LoRA init: A ~ N(0, 1/d) (all slots, padded ones stay masked),
+    B = 0 so BA = 0 at init — the standard LoRA initialization."""
+    shapes = lora_shapes(cfg)
+    k_aq, k_av, k_head = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "aq": jax.random.normal(k_aq, shapes["aq"], jnp.float32) / jnp.sqrt(d),
+        "bq": jnp.zeros(shapes["bq"], jnp.float32),
+        "av": jax.random.normal(k_av, shapes["av"], jnp.float32) / jnp.sqrt(d),
+        "bv": jnp.zeros(shapes["bv"], jnp.float32),
+        "head_w": jax.random.normal(k_head, shapes["head_w"], jnp.float32)
+        / jnp.sqrt(d),
+        "head_b": jnp.zeros(shapes["head_b"], jnp.float32),
+    }
+
+
+def init_adapter(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Adapter init: near-identity (up = 0) as in Houlsby et al."""
+    shapes = adapter_shapes(cfg)
+    k_down, k_head = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "down": jax.random.normal(k_down, shapes["down"], jnp.float32)
+        / jnp.sqrt(d),
+        "bdown": jnp.zeros(shapes["bdown"], jnp.float32),
+        "up": jnp.zeros(shapes["up"], jnp.float32),
+        "head_w": jax.random.normal(k_head, shapes["head_w"], jnp.float32)
+        / jnp.sqrt(d),
+        "head_b": jnp.zeros(shapes["head_b"], jnp.float32),
+    }
+
+
+def init_opt(trainable: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """AdamW first/second-moment state, one (m, v) pair per tensor."""
+    opt = {}
+    for name, p in trainable.items():
+        opt["m_" + name] = jnp.zeros_like(p)
+        opt["v_" + name] = jnp.zeros_like(p)
+    return opt
+
+
+def trainable_masks(cfg: ModelConfig, family: str, rank_mask, layer_mask):
+    """Per-tensor {0,1} update masks (DESIGN.md: a masked slot never
+    moves off its received value — update, incl. weight decay, is
+    multiplied by this mask)."""
+    lm = layer_mask[:, None, None]
+    if family == "lora":
+        rm_down = rank_mask[:, :, None]     # for a: [L, r, d]
+        rm_up = rank_mask[:, None, :]       # for b: [L, d, r]
+        return {
+            "aq": lm * rm_down, "bq": lm * rm_up,
+            "av": lm * rm_down, "bv": lm * rm_up,
+            "head_w": jnp.ones((cfg.d_model, cfg.n_classes), jnp.float32),
+            "head_b": jnp.ones((cfg.n_classes,), jnp.float32),
+        }
+    elif family == "adapter":
+        wm_down = rank_mask[:, None, :]     # width mask for down [L, d, w]
+        wm_up = rank_mask[:, :, None]       # for up [L, w, d]
+        return {
+            "down": lm * wm_down,
+            "bdown": layer_mask[:, None] * rank_mask,
+            "up": lm * wm_up,
+            "head_w": jnp.ones((cfg.d_model, cfg.n_classes), jnp.float32),
+            "head_b": jnp.ones((cfg.n_classes,), jnp.float32),
+        }
+    raise ValueError(family)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(q, k, v, bias, n_heads):
+    b, s, d = q.shape
+    dh = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(dh)
+    probs = jax.nn.softmax(scores + bias, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def _lora_proj(h, w, bias, a, b_up, rank_mask, layer_on, alpha,
+               use_pallas: bool):
+    """LoRA-adapted projection for one layer (h: [B, S, d])."""
+    r_eff = kref.effective_rank(rank_mask)
+    scale = (alpha / r_eff) * layer_on
+    bsz, s, d = h.shape
+    h2 = h.reshape(bsz * s, d)
+    if use_pallas:
+        from .kernels import lora as klora
+        y = klora.lora_linear(h2, w, a, b_up, rank_mask, scale)
+    else:
+        y = kref.lora_linear_ref(h2, w, a, b_up, rank_mask, scale)
+    return y.reshape(bsz, s, d) + bias
+
+
+def encoder_forward(cfg: ModelConfig, base, trainable, rank_mask, layer_mask,
+                    tokens, *, family: str = "lora",
+                    use_pallas: bool = False):
+    """Run the encoder; returns (cls_logits, final_hidden).
+
+    rank_mask: [L, r_max] (LoRA) or [L, w_max] (adapter width).
+    layer_mask: [L] — which layers carry a trainable module on this
+    device (encodes LoRA depth / Fig. 3 position variants).
+    """
+    pad_id = configs.PAD
+    bsz, s = tokens.shape
+    x = base["embed"][tokens] + base["pos"][None, :s]
+    attn_bias = jnp.where(tokens == pad_id, -1e9, 0.0)[:, None, None, :]
+
+    # Stack the per-layer tensors as scan inputs. Trainable "bq" (LoRA
+    # up-factor for q) would collide with base "bq" (query bias), so the
+    # trainable slices get an "l_"/"ad_" prefix inside the scan body.
+    stacked_names = [n for n in BASE_ORDER
+                     if n not in ("embed", "pos", "lnf_g", "lnf_b")]
+    xs = {n: base[n] for n in stacked_names}
+    if family == "lora":
+        xs["l_aq"] = trainable["aq"]
+        xs["l_bq"] = trainable["bq"]
+        xs["l_av"] = trainable["av"]
+        xs["l_bv"] = trainable["bv"]
+    else:
+        xs["ad_down"] = trainable["down"]
+        xs["ad_bdown"] = trainable["bdown"]
+        xs["ad_up"] = trainable["up"]
+    xs["rank_mask"] = rank_mask
+    xs["layer_mask"] = layer_mask
+
+    def layer_step(x, p):
+        h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+        if family == "lora":
+            q = _lora_proj(h, p["wq"], p["bq"], p["l_aq"], p["l_bq"],
+                           p["rank_mask"], p["layer_mask"], cfg.lora_alpha,
+                           use_pallas)
+            v = _lora_proj(h, p["wv"], p["bv"], p["l_av"], p["l_bv"],
+                           p["rank_mask"], p["layer_mask"], cfg.lora_alpha,
+                           use_pallas)
+        else:
+            q = h @ p["wq"] + p["bq"]
+            v = h @ p["wv"] + p["bv"]
+        k = h @ p["wk"] + p["bk"]
+        attn = _attention(q, k, v, attn_bias, cfg.n_heads)
+        x = x + attn @ p["wo"] + p["bo"]
+
+        h2 = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+        ffn = jax.nn.gelu(h2 @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+        if family == "adapter":
+            wm = p["rank_mask"]  # width mask for this layer: [w_max]
+            z = ffn
+            bsz_, s_, d_ = z.shape
+            z2 = z.reshape(bsz_ * s_, d_)
+            adapted = kref.adapter_ref(z2, p["ad_down"], p["ad_up"],
+                                       p["ad_bdown"], wm)
+            ffn = ffn + p["layer_mask"] * (adapted.reshape(z.shape) - z)
+        x = x + ffn
+        return x, None
+
+    x, _ = jax.lax.scan(layer_step, x, xs)
+    x = _layer_norm(x, base["lnf_g"], base["lnf_b"])
+    # Masked mean pooling: on a from-scratch pretrained base the CLS
+    # token aggregates poorly, while the mean over non-pad positions
+    # carries the full lexical signal (DESIGN.md §2 substitutions).
+    pad_mask = (tokens != pad_id).astype(jnp.float32)[..., None]
+    pooled = (x * pad_mask).sum(axis=1) \
+        / jnp.maximum(pad_mask.sum(axis=1), 1.0)
+    logits = pooled @ trainable["head_w"] + trainable["head_b"]
+    return logits, x
+
+
+def classification_loss(logits, labels):
+    """Mean CE + correct count. labels: int32 [B]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = nll.mean()
+    correct = (logits.argmax(-1) == labels).sum().astype(jnp.float32)
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the functions lowered to HLO)
+# ---------------------------------------------------------------------------
+
+def adamw_update(cfg: ModelConfig, p, g, m, v, mask, lr, step):
+    """Masked AdamW: masked slots (padding ranks / absent layers) keep
+    their incoming value bit-exactly — including no weight decay."""
+    m = cfg.beta1 * m + (1.0 - cfg.beta1) * g
+    v = cfg.beta2 * v + (1.0 - cfg.beta2) * g * g
+    mhat = m / (1.0 - cfg.beta1 ** step)
+    vhat = v / (1.0 - cfg.beta2 ** step)
+    upd = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+    return p - upd * mask, m * mask, v * mask
+
+
+def make_train_step(cfg: ModelConfig, family: str = "lora",
+                    use_pallas: bool = False):
+    """Returns train_step(base, trainable, opt, rank_mask, layer_mask,
+    tokens, labels, lr, step) -> (trainable', opt', loss, correct)."""
+
+    order = LORA_ORDER if family == "lora" else ADAPTER_ORDER
+
+    def loss_fn(trainable, base, rank_mask, layer_mask, tokens, labels):
+        logits, _ = encoder_forward(cfg, base, trainable, rank_mask,
+                                    layer_mask, tokens, family=family,
+                                    use_pallas=use_pallas)
+        return classification_loss(logits, labels)
+
+    def train_step(base, trainable, opt, rank_mask, layer_mask, tokens,
+                   labels, lr, step):
+        (loss, correct), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(trainable, base, rank_mask, layer_mask,
+                                   tokens, labels)
+        if family == "adapter":
+            # Full-width adapters on every layer destabilize at the
+            # LoRA-tuned learning rate (the bottleneck's gelu path
+            # feeds the residual stream directly); clip the global
+            # gradient norm as FedAdapter-style trainers do.
+            gnorm = jnp.sqrt(sum((g ** 2).sum() for g in grads.values()))
+            scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-12))
+            grads = {k: g * scale for k, g in grads.items()}
+        masks = trainable_masks(cfg, family, rank_mask, layer_mask)
+        new_t, new_o = {}, {}
+        for name in order:
+            p, g = trainable[name], grads[name]
+            m, v = opt["m_" + name], opt["v_" + name]
+            p2, m2, v2 = adamw_update(cfg, p, g, m, v, masks[name], lr, step)
+            new_t[name] = p2
+            new_o["m_" + name] = m2
+            new_o["v_" + name] = v2
+        return new_t, new_o, loss, correct
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, family: str = "lora"):
+    """Returns eval_step(base, trainable, rank_mask, layer_mask, tokens,
+    labels) -> (loss_sum, correct)."""
+
+    def eval_step(base, trainable, rank_mask, layer_mask, tokens, labels):
+        logits, _ = encoder_forward(cfg, base, trainable, rank_mask,
+                                    layer_mask, tokens, family=family)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        correct = (logits.argmax(-1) == labels).sum().astype(jnp.float32)
+        return nll.sum(), correct
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# MLM pretraining step (build-time only; manufactures the frozen base)
+# ---------------------------------------------------------------------------
+
+def make_pretrain_step(cfg: ModelConfig):
+    """Full-parameter masked-LM step with a tied decoder (embedᵀ).
+
+    Used only by pretrain.py to create artifacts/base_weights.bin; the
+    federated system never trains base weights.
+    """
+
+    zero_lora_names = ("aq", "bq", "av", "bv")
+
+    def mlm_loss(base, tokens, targets, mlm_mask):
+        # Forward with LoRA disabled (zero masks): plain base encoder.
+        L, r = cfg.n_layers, cfg.r_max
+        dummy = {
+            "aq": jnp.zeros((L, r, cfg.d_model)),
+            "bq": jnp.zeros((L, cfg.d_model, r)),
+            "av": jnp.zeros((L, r, cfg.d_model)),
+            "bv": jnp.zeros((L, cfg.d_model, r)),
+            "head_w": jnp.zeros((cfg.d_model, cfg.n_classes)),
+            "head_b": jnp.zeros((cfg.n_classes,)),
+        }
+        rank_mask = jnp.zeros((L, r))
+        layer_mask = jnp.zeros((L,))
+        _, hidden = encoder_forward(cfg, base, dummy, rank_mask, layer_mask,
+                                    tokens)
+        logits = hidden @ base["embed"].T                 # [B, S, V]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mlm_mask.sum(), 1.0)
+        return (nll * mlm_mask).sum() / denom
+
+    def pretrain_step(base, opt, tokens, targets, mlm_mask, lr, step):
+        loss, grads = jax.value_and_grad(mlm_loss)(base, tokens, targets,
+                                                   mlm_mask)
+        new_b, new_o = {}, {}
+        for name in BASE_ORDER:
+            p, g = base[name], grads[name]
+            m, v = opt["m_" + name], opt["v_" + name]
+            ones = jnp.ones_like(p)
+            p2, m2, v2 = adamw_update(cfg, p, g, m, v, ones, lr, step)
+            new_b[name] = p2
+            new_o["m_" + name] = m2
+            new_o["v_" + name] = v2
+        return new_b, new_o, loss
+
+    _ = zero_lora_names
+    return pretrain_step
+
+
+# ---------------------------------------------------------------------------
+# Flattening helpers (artifact input/output ordering)
+# ---------------------------------------------------------------------------
+
+def flatten_base(base) -> List[jnp.ndarray]:
+    return [base[n] for n in BASE_ORDER]
+
+def unflatten_base(flat) -> Dict[str, jnp.ndarray]:
+    return dict(zip(BASE_ORDER, flat))
+
+def flatten_trainable(t, family="lora") -> List[jnp.ndarray]:
+    order = LORA_ORDER if family == "lora" else ADAPTER_ORDER
+    return [t[n] for n in order]
+
+def unflatten_trainable(flat, family="lora") -> Dict[str, jnp.ndarray]:
+    order = LORA_ORDER if family == "lora" else ADAPTER_ORDER
+    return dict(zip(order, flat))
+
+def opt_order(family="lora") -> List[str]:
+    order = LORA_ORDER if family == "lora" else ADAPTER_ORDER
+    out = []
+    for n in order:
+        out += ["m_" + n, "v_" + n]
+    return out
+
+def flatten_opt(o, family="lora") -> List[jnp.ndarray]:
+    return [o[n] for n in opt_order(family)]
+
+def unflatten_opt(flat, family="lora") -> Dict[str, jnp.ndarray]:
+    return dict(zip(opt_order(family), flat))

@@ -1,0 +1,77 @@
+"""Build-time MLM pretraining: manufactures the frozen base weights.
+
+The paper fine-tunes Hugging Face checkpoints (RoBERTa/DeBERTa/Llama2);
+offline we create the pretrained base ourselves by running a short
+masked-LM pass over the synthetic corpus (DESIGN.md §2). This runs once
+inside ``make artifacts`` and its output is cached in
+``artifacts/base_weights.bin``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, datagen, model
+from .configs import ModelConfig
+
+
+def pretrain_base(cfg: ModelConfig, steps: int = 300, batch: int = 16,
+                  lr: float = 3e-4, seed: int = 7,
+                  log_every: int = 50) -> Dict[str, jnp.ndarray]:
+    """Returns the pretrained base parameter dict (BASE_ORDER keys)."""
+    spec = configs.task_spec()
+    rng = np.random.default_rng(seed)
+    base = model.init_base(cfg, jax.random.PRNGKey(seed))
+    opt = model.init_opt(base)
+    step_fn = jax.jit(model.make_pretrain_step(cfg))
+
+    mask_id = spec["special"]["mask"]
+    pad_id = spec["special"]["pad"]
+    t0 = time.time()
+    losses = []
+    for t in range(1, steps + 1):
+        toks = datagen.corpus_batch(spec, batch, rng)
+        # Sentences are generated at cfg seq_len via the spec; clip in
+        # case cfg.seq_len differs from the spec (e.g. LARGE config).
+        if toks.shape[1] != cfg.seq_len:
+            toks = toks[:, :cfg.seq_len]
+        inp, tgt, mm = datagen.mlm_mask_batch(toks, rng, mask_id, pad_id)
+        # Cosine LR decay with short warmup.
+        warm = min(1.0, t / 30.0)
+        cos = 0.5 * (1.0 + np.cos(np.pi * t / steps))
+        cur_lr = lr * warm * (0.1 + 0.9 * cos)
+        base, opt, loss = step_fn(base, opt, jnp.asarray(inp),
+                                  jnp.asarray(tgt), jnp.asarray(mm),
+                                  cur_lr, float(t))
+        losses.append(float(loss))
+        if log_every and t % log_every == 0:
+            avg = sum(losses[-log_every:]) / log_every
+            print(f"[pretrain] step {t}/{steps} mlm-loss {avg:.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return base
+
+
+def save_base(base: Dict[str, jnp.ndarray], path: str) -> int:
+    """Raw little-endian f32 concat in BASE_ORDER; returns bytes written."""
+    chunks = [np.asarray(base[n], dtype=np.float32).ravel()
+              for n in model.BASE_ORDER]
+    flat = np.concatenate(chunks)
+    flat.astype("<f4").tofile(path)
+    return flat.nbytes
+
+
+def load_base(cfg: ModelConfig, path: str) -> Dict[str, jnp.ndarray]:
+    flat = np.fromfile(path, dtype="<f4")
+    shapes = model.base_shapes(cfg)
+    out, off = {}, 0
+    for n in model.BASE_ORDER:
+        size = int(np.prod(shapes[n]))
+        out[n] = jnp.asarray(flat[off:off + size].reshape(shapes[n]))
+        off += size
+    assert off == flat.size, f"base_weights.bin size mismatch: {off} vs {flat.size}"
+    return out

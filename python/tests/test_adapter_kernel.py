@@ -1,0 +1,55 @@
+"""Pallas adapter kernel vs the pure-jnp oracle (hypothesis sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adapter, ref
+
+
+def _check(m, d, w, mask_frac, block_m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, d)).astype(np.float32)
+    down = rng.standard_normal((d, w)).astype(np.float32) * 0.3
+    up = rng.standard_normal((w, d)).astype(np.float32) * 0.3
+    b = rng.standard_normal(w).astype(np.float32) * 0.1
+    mask = (rng.random(w) < mask_frac).astype(np.float32)
+    got = adapter.adapter_forward(x, down, up, b, jnp.asarray(mask),
+                                  block_m=block_m)
+    want = ref.adapter_ref(x, down, up, b, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    d=st.integers(1, 48),
+    w=st.integers(1, 32),
+    mask_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_adapter_kernel_matches_ref(m, d, w, mask_frac, seed):
+    _check(m, d, w, mask_frac, 32, seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(block_m=st.sampled_from([4, 16, 64, 128]),
+       seed=st.integers(0, 2**31))
+def test_adapter_block_invariance(block_m, seed):
+    _check(50, 24, 16, 0.7, block_m, seed)
+
+
+def test_zero_width_is_identity():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 16)).astype(np.float32)
+    down = rng.standard_normal((16, 8)).astype(np.float32)
+    up = rng.standard_normal((8, 16)).astype(np.float32)
+    b = rng.standard_normal(8).astype(np.float32)
+    got = adapter.adapter_forward(x, down, up, b, jnp.zeros(8),
+                                  block_m=8)
+    np.testing.assert_allclose(np.asarray(got), x, rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_fits_budget():
+    assert adapter.vmem_bytes(128, 128, 32) < 16 * 2**20

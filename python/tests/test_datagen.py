@@ -1,0 +1,97 @@
+"""Synthetic grammar + spec tests (python side; the rust generators
+mirror the same spec and carry their own tests)."""
+
+import numpy as np
+import pytest
+
+from compile import configs, datagen
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return configs.task_spec()
+
+
+def test_spec_banks_disjoint(spec):
+    """Task word banks must not overlap each other or the filler."""
+    ranges = [tuple(spec["filler"])]
+    for t in spec["tasks"].values():
+        for b in t.get("banks", []):
+            ranges.append(tuple(b))
+        if "digits" in t:
+            d = t["digits"]
+            ranges.append((d[0], d[-1] + 1))
+    ranges.sort()
+    for (al, ah), (bl, bh) in zip(ranges, ranges[1:]):
+        assert ah <= bl, f"overlap: ({al},{ah}) vs ({bl},{bh})"
+    assert ranges[-1][1] <= spec["vocab_size"]
+
+
+def test_examples_padded_and_labeled(spec):
+    rng = np.random.default_rng(0)
+    for task in spec["tasks"]:
+        toks, label = datagen.sample_example(spec, task, rng)
+        assert len(toks) == spec["seq_len"]
+        assert toks[0] == spec["special"]["cls"]
+        assert 0 <= label < spec["tasks"][task]["n_classes"]
+        assert all(0 <= t < spec["vocab_size"] for t in toks)
+
+
+def test_single_task_bank_words_present(spec):
+    rng = np.random.default_rng(1)
+    task = spec["tasks"]["sst2"]
+    hits = 0
+    for _ in range(50):
+        toks, label = datagen.sample_example(spec, "sst2", rng)
+        lo, hi = task["banks"][label]
+        if any(lo <= t < hi for t in toks):
+            hits += 1
+    # label_noise can flip a couple, but the vast majority must carry
+    # their bank words.
+    assert hits >= 45
+
+
+def test_arith_label_is_sum_mod_classes(spec):
+    rng = np.random.default_rng(2)
+    task = spec["tasks"]["gsm"]
+    d0 = task["digits"][0]
+    for _ in range(100):
+        toks, label = datagen.sample_example(spec, "gsm", rng)
+        digits = [t - d0 for t in toks if d0 <= t < d0 + 10]
+        assert label == sum(digits) % task["n_classes"]
+
+
+def test_pair_task_has_separator(spec):
+    rng = np.random.default_rng(3)
+    toks, _ = datagen.sample_example(spec, "qnli", rng)
+    assert spec["special"]["sep"] in toks
+
+
+def test_corpus_batch_shape(spec):
+    rng = np.random.default_rng(4)
+    batch = datagen.corpus_batch(spec, 16, rng)
+    assert batch.shape == (16, spec["seq_len"])
+    assert batch.dtype == np.int32
+
+
+def test_mlm_masking(spec):
+    rng = np.random.default_rng(5)
+    toks = datagen.corpus_batch(spec, 32, rng)
+    inp, tgt, mask = datagen.mlm_mask_batch(
+        toks, rng, spec["special"]["mask"], spec["special"]["pad"])
+    assert (tgt == toks).all()
+    rate = mask.mean()
+    assert 0.05 < rate < 0.3
+    # PAD positions never masked.
+    assert (mask[toks == spec["special"]["pad"]] == 0).all()
+    # Masked positions mostly carry the MASK token.
+    masked_inputs = inp[mask.astype(bool)]
+    frac_mask_tok = (masked_inputs == spec["special"]["mask"]).mean()
+    assert frac_mask_tok > 0.6
+
+
+def test_labels_roughly_balanced(spec):
+    rng = np.random.default_rng(6)
+    _, ys = datagen.labeled_batch(spec, "mmlu", 400, rng)
+    counts = np.bincount(ys, minlength=4)
+    assert counts.min() > 50, counts

@@ -1,0 +1,133 @@
+"""L1 correctness: the Pallas fused LoRA kernel vs the pure-jnp oracle.
+
+This is the CORE kernel correctness signal — hypothesis sweeps shapes,
+ranks, masks, block sizes and dtypes; every case must match ref.py to
+float32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lora, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def _check(m, k, n, r, mask_frac, scale, block_m, block_n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k, dtype=dtype)
+    w = _rand(rng, k, n, dtype=dtype)
+    a = _rand(rng, r, k, dtype=dtype)
+    b = _rand(rng, n, r, dtype=dtype)
+    mask = (rng.random(r) < mask_frac).astype(np.float32)
+    got = lora.lora_linear(
+        x, w, a, b, jnp.asarray(mask), scale,
+        block_m=block_m, block_n=block_n)
+    want = ref.lora_linear_ref(x, w, a, b, jnp.asarray(mask), scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    r=st.integers(1, 16),
+    mask_frac=st.floats(0.0, 1.0),
+    scale=st.floats(-4.0, 4.0),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_f32(m, k, n, r, mask_frac, scale, seed):
+    _check(m, k, n, r, mask_frac, scale, 32, 32, np.float32, seed)
+
+
+@settings(**SETTINGS)
+@given(
+    block_m=st.sampled_from([8, 16, 32, 128]),
+    block_n=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_block_shape_invariance(block_m, block_n, seed):
+    """Output must not depend on the tiling choice."""
+    _check(40, 24, 56, 7, 0.6, 1.5, block_m, block_n, np.float32, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_kernel_bf16_inputs(seed):
+    """bf16 inputs accumulate in f32 (MXU-style)."""
+    _check(16, 32, 16, 4, 1.0, 2.0, 16, 16, jnp.bfloat16, seed)
+
+
+def test_zero_mask_is_base_matmul():
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, 8, 16), _rand(rng, 16, 8)
+    a, b = _rand(rng, 4, 16), _rand(rng, 8, 4)
+    mask = jnp.zeros(4)
+    got = lora.lora_linear(x, w, a, b, mask, 3.0, block_m=8, block_n=8)
+    np.testing.assert_allclose(np.asarray(got), x @ w, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_zero_scale_is_base_matmul():
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 8, 16), _rand(rng, 16, 8)
+    a, b = _rand(rng, 4, 16), _rand(rng, 8, 4)
+    got = lora.lora_linear(x, w, a, b, jnp.ones(4), 0.0,
+                           block_m=8, block_n=8)
+    np.testing.assert_allclose(np.asarray(got), x @ w, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_full_rank_additivity():
+    """y(mask=m1) + bypass(m2) == y(mask=m1|m2) when m1 ∩ m2 = ∅."""
+    rng = np.random.default_rng(2)
+    x, w = _rand(rng, 8, 8), _rand(rng, 8, 8)
+    a, b = _rand(rng, 6, 8), _rand(rng, 8, 6)
+    m1 = jnp.asarray([1., 1., 1., 0., 0., 0.])
+    m2 = jnp.asarray([0., 0., 0., 1., 1., 1.])
+    both = jnp.asarray([1.] * 6)
+    y1 = lora.lora_linear(x, w, a, b, m1, 1.0, block_m=8, block_n=8)
+    y2 = lora.lora_linear(x, w, a, b, m2, 1.0, block_m=8, block_n=8)
+    y12 = lora.lora_linear(x, w, a, b, both, 1.0, block_m=8, block_n=8)
+    np.testing.assert_allclose(
+        np.asarray(y1 + y2 - x @ w), np.asarray(y12), rtol=1e-4,
+        atol=1e-4)
+
+
+def test_vmem_estimate_monotone_in_blocks():
+    small = lora.vmem_bytes(32, 32, 128, 16)
+    big = lora.vmem_bytes(128, 128, 128, 16)
+    assert big > small
+    # Default tiling fits a 16 MB VMEM budget (DESIGN §Perf).
+    assert lora.vmem_bytes(128, 128, 128, 16) < 16 * 2**20
+
+
+def test_mxu_utilization_penalizes_ragged_tiles():
+    aligned = lora.mxu_utilization_estimate(128, 128, 128, 8)
+    ragged = lora.mxu_utilization_estimate(129, 129, 128, 8)
+    assert aligned > 0.99
+    assert ragged < aligned
+
+
+@pytest.mark.parametrize("m,k,n,r", [(1, 1, 1, 1), (128, 128, 128, 16),
+                                     (5, 3, 2, 1)])
+def test_kernel_edge_shapes(m, k, n, r):
+    _check(m, k, n, r, 1.0, 1.0, 32, 32, np.float32, 3)
+
+
+def test_adapter_ref_identity_at_zero_width():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, 6, 8)
+    down, up = _rand(rng, 8, 4), _rand(rng, 4, 8)
+    b = _rand(rng, 4)
+    out = ref.adapter_ref(x, down, up, b, jnp.zeros(4))
+    np.testing.assert_allclose(np.asarray(out), x, rtol=1e-6, atol=1e-6)

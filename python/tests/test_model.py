@@ -1,0 +1,215 @@
+"""L2 correctness: shapes, masking semantics, optimizer behaviour,
+pallas-vs-jnp model parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+CFG = configs.TINY
+
+
+@pytest.fixture(scope="module")
+def base():
+    return model.init_base(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    k = jax.random.PRNGKey(9)
+    tokens = jax.random.randint(
+        k, (CFG.batch_size, CFG.seq_len), 4, CFG.vocab_size)
+    labels = jnp.arange(CFG.batch_size, dtype=jnp.int32) % CFG.n_classes
+    return tokens, labels
+
+
+def full_masks():
+    return (jnp.ones((CFG.n_layers, CFG.r_max)), jnp.ones(CFG.n_layers))
+
+
+def test_base_shapes_match_spec(base):
+    shapes = model.base_shapes(CFG)
+    for n in model.BASE_ORDER:
+        assert base[n].shape == shapes[n], n
+
+
+def test_forward_shapes(base, batch):
+    tokens, _ = batch
+    lora = model.init_lora(CFG, jax.random.PRNGKey(1))
+    rm, lm = full_masks()
+    logits, hidden = model.encoder_forward(CFG, base, lora, rm, lm, tokens)
+    assert logits.shape == (CFG.batch_size, CFG.n_classes)
+    assert hidden.shape == (CFG.batch_size, CFG.seq_len, CFG.d_model)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_zero_layer_mask_matches_zero_lora(base, batch):
+    """layer_mask=0 must equal a model with B=0 (no bypass at all)."""
+    tokens, _ = batch
+    lora = model.init_lora(CFG, jax.random.PRNGKey(2))
+    # Force non-zero B so masking actually does something.
+    lora = dict(lora, bq=jnp.ones_like(lora["bq"]),
+                bv=jnp.ones_like(lora["bv"]))
+    rm = jnp.ones((CFG.n_layers, CFG.r_max))
+    masked, _ = model.encoder_forward(
+        CFG, base, lora, rm, jnp.zeros(CFG.n_layers), tokens)
+    zeroed = dict(lora, bq=jnp.zeros_like(lora["bq"]),
+                  bv=jnp.zeros_like(lora["bv"]))
+    plain, _ = model.encoder_forward(
+        CFG, base, zeroed, rm, jnp.ones(CFG.n_layers), tokens)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(plain),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rank_mask_prefix_equals_truncated_factors(base, batch):
+    """rank_mask keeping r slots == physically truncating A/B to rank r."""
+    tokens, _ = batch
+    key = jax.random.PRNGKey(3)
+    lora = model.init_lora(CFG, key)
+    lora = dict(lora,
+                bq=jax.random.normal(key, lora["bq"].shape) * 0.1,
+                bv=jax.random.normal(key, lora["bv"].shape) * 0.1)
+    keep = 2
+    rm = jnp.zeros((CFG.n_layers, CFG.r_max)).at[:, :keep].set(1.0)
+    lm = jnp.ones(CFG.n_layers)
+    masked, _ = model.encoder_forward(CFG, base, lora, rm, lm, tokens)
+    # Physically zero the padded slots instead.
+    def trunc(t, axis):
+        idx = [slice(None)] * t.ndim
+        idx[axis] = slice(keep, None)
+        return t.at[tuple(idx)].set(0.0)
+    zeroed = dict(lora,
+                  aq=trunc(lora["aq"], 1), av=trunc(lora["av"], 1),
+                  bq=trunc(lora["bq"], 2), bv=trunc(lora["bv"], 2))
+    # NOTE: the LoRA scale uses the effective rank from the mask, so
+    # compare against the same mask-derived scale by keeping rm.
+    truncated, _ = model.encoder_forward(CFG, base, zeroed, rm, lm,
+                                         tokens)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(truncated),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_moves_only_active_slots(base, batch):
+    tokens, labels = batch
+    lora = model.init_lora(CFG, jax.random.PRNGKey(4))
+    opt = model.init_opt(lora)
+    rm = jnp.zeros((CFG.n_layers, CFG.r_max)).at[:, :2].set(1.0)
+    lm = jnp.zeros(CFG.n_layers).at[-1].set(1.0)  # depth 1
+    ts = model.make_train_step(CFG)
+    nt, no, loss, _ = ts(base, lora, opt, rm, lm, tokens, labels,
+                         1e-2, 1.0)
+    assert bool(jnp.isfinite(loss))
+    # Shallow layer's B untouched; deepest layer's active B moved.
+    np.testing.assert_array_equal(np.asarray(nt["bq"][0]),
+                                  np.asarray(lora["bq"][0]))
+    assert not np.allclose(np.asarray(nt["bq"][-1][:, :2]),
+                           np.asarray(lora["bq"][-1][:, :2]))
+    # Padded slots of the deep layer untouched.
+    np.testing.assert_array_equal(np.asarray(nt["bq"][-1][:, 2:]),
+                                  np.asarray(lora["bq"][-1][:, 2:]))
+    # Head always trains.
+    assert not np.allclose(np.asarray(no["m_head_w"]), 0.0)
+
+
+def test_masked_slots_resist_weight_decay(base, batch):
+    """AdamW weight decay must not leak into masked slots."""
+    tokens, labels = batch
+    lora = model.init_lora(CFG, jax.random.PRNGKey(5))
+    # Put non-zero values in padded region; they must stay bit-equal.
+    lora = dict(lora, aq=lora["aq"].at[:, -1].set(7.0))
+    opt = model.init_opt(lora)
+    rm = jnp.zeros((CFG.n_layers, CFG.r_max)).at[:, :1].set(1.0)
+    lm = jnp.ones(CFG.n_layers)
+    ts = model.make_train_step(CFG)
+    nt = lora
+    no = opt
+    for step in range(1, 4):
+        nt, no, _, _ = ts(base, nt, no, rm, lm, tokens, labels, 1e-2,
+                          float(step))
+    np.testing.assert_array_equal(np.asarray(nt["aq"][:, -1]),
+                                  np.full_like(np.asarray(nt["aq"][:, -1]),
+                                               7.0))
+
+
+def test_eval_step_counts(base, batch):
+    tokens, labels = batch
+    lora = model.init_lora(CFG, jax.random.PRNGKey(6))
+    rm, lm = full_masks()
+    es = model.make_eval_step(CFG)
+    loss_sum, correct = es(base, lora, rm, lm, tokens, labels)
+    assert float(correct) <= CFG.batch_size
+    assert float(loss_sum) > 0.0
+
+
+def test_pallas_model_parity(base, batch):
+    """The pallas-backed forward must equal the jnp-backed forward —
+    this pins L1 == L2 at the model level, not just per-kernel."""
+    tokens, _ = batch
+    lora = model.init_lora(CFG, jax.random.PRNGKey(7))
+    lora = dict(lora, bq=jnp.ones_like(lora["bq"]) * 0.05,
+                bv=jnp.ones_like(lora["bv"]) * 0.05)
+    rm = jnp.ones((CFG.n_layers, CFG.r_max)).at[:, 3:].set(0.0)
+    lm = jnp.ones(CFG.n_layers).at[0].set(0.0)
+    ref_logits, _ = model.encoder_forward(CFG, base, lora, rm, lm,
+                                          tokens, use_pallas=False)
+    pal_logits, _ = model.encoder_forward(CFG, base, lora, rm, lm,
+                                          tokens, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pal_logits),
+                               np.asarray(ref_logits), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_adapter_zero_width_is_identity_model(base, batch):
+    """Width-masked-out adapters must not change the forward pass."""
+    tokens, _ = batch
+    ad = model.init_adapter(CFG, jax.random.PRNGKey(8))
+    ad = dict(ad, up=jnp.ones_like(ad["up"]))
+    wm0 = jnp.zeros((CFG.n_layers, CFG.adapter_w_max))
+    lm = jnp.ones(CFG.n_layers)
+    with_ad, _ = model.encoder_forward(CFG, base, ad, wm0, lm, tokens,
+                                       family="adapter")
+    ad_zero = dict(ad, up=jnp.zeros_like(ad["up"]))
+    wm1 = jnp.ones((CFG.n_layers, CFG.adapter_w_max))
+    without, _ = model.encoder_forward(CFG, base, ad_zero, wm1, lm,
+                                       tokens, family="adapter")
+    np.testing.assert_allclose(np.asarray(with_ad), np.asarray(without),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flatten_roundtrip():
+    lora = model.init_lora(CFG, jax.random.PRNGKey(10))
+    flat = model.flatten_trainable(lora)
+    assert len(flat) == len(model.LORA_ORDER)
+    back = model.unflatten_trainable(flat)
+    for n in model.LORA_ORDER:
+        np.testing.assert_array_equal(np.asarray(back[n]),
+                                      np.asarray(lora[n]))
+    opt = model.init_opt(lora)
+    oflat = model.flatten_opt(opt)
+    assert len(oflat) == 2 * len(flat)
+    oback = model.unflatten_opt(oflat)
+    assert set(oback) == set(opt)
+
+
+def test_loss_decreases_under_training(base):
+    spec = configs.task_spec()
+    # tiny config has a smaller vocab than the spec; clip token ids.
+    from compile import datagen
+    rng = np.random.default_rng(0)
+    ts = jax.jit(model.make_train_step(CFG))
+    lora = model.init_lora(CFG, jax.random.PRNGKey(11))
+    opt = model.init_opt(lora)
+    rm, lm = full_masks()
+    losses = []
+    for step in range(1, 41):
+        toks, labels = datagen.labeled_batch(spec, "sst2",
+                                             CFG.batch_size, rng)
+        toks = np.clip(toks, 0, CFG.vocab_size - 1)[:, :CFG.seq_len]
+        lora, opt, loss, _ = ts(base, lora, opt, rm, lm,
+                                jnp.asarray(toks),
+                                jnp.asarray(labels % CFG.n_classes),
+                                5e-3, float(step))
+        losses.append(float(loss))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10])

@@ -1,0 +1,360 @@
+//! Benchmark harness (`cargo bench [-- filter]`).
+//!
+//! criterion is not available offline, so this is a small self-timed
+//! harness: adaptive iteration count, warmup, mean/p50/p95 per bench.
+//!
+//! Coverage (DESIGN.md §4 bench column):
+//!  * component hot paths: LCD (Alg. 1), slot-aware aggregation
+//!    (eq. 17), capacity EMA, mask construction, Dirichlet partition,
+//!    grammar generation, JSON manifest parse — the L3 costs behind
+//!    every figure;
+//!  * per-figure end-to-end rounds: fig3 variant, fig7 methods
+//!    (legend/fedlora/hetlora/fedadapter), fig13 ablations — each one
+//!    full coordinator round at the paper's 80-device scale,
+//!    mock-trained (FLOP-free, isolates the coordination cost);
+//!  * artifact-backed (skipped when artifacts/ absent): PJRT train
+//!    step (L1+L2 hot path), eval batch, one real federated round.
+
+use std::time::Instant;
+
+use legend::coordinator::aggregation::{aggregate, DeviceUpdate};
+use legend::coordinator::capacity::CapacityEstimator;
+use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
+use legend::coordinator::strategy::{self};
+use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
+use legend::coordinator::{run_federated, FedConfig, ModelMeta};
+use legend::data::{grammar, partition, Spec};
+use legend::device::{Fleet, FleetConfig};
+use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
+use legend::model::state::{init_opt, init_trainable, TensorMap};
+use legend::model::TensorSpec;
+use legend::runtime::session::SessionState;
+use legend::runtime::{Masks, Runtime};
+use legend::util::json::Value;
+use legend::util::rng::Rng;
+
+const L: usize = 12;
+const R: usize = 16;
+const D: usize = 128;
+
+fn run_bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) {
+    f(); // warmup
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1);
+    let budget = (budget_ms as u128) * 1_000_000;
+    let iters = ((budget / one).clamp(3, 10_000)) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<u64>() / samples.len() as u64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[samples.len() * 95 / 100];
+    println!(
+        "{name:<40} {:>12} {:>12} {:>12} {:>7}",
+        fmt_ns(mean),
+        fmt_ns(p50),
+        fmt_ns(p95),
+        samples.len()
+    );
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+fn toy_spec() -> Spec {
+    let json = r#"{
+      "vocab_size": 256, "seq_len": 16,
+      "special": {"pad": 0, "cls": 1, "mask": 2, "sep": 3},
+      "filler": [4, 50], "noise": [200, 256],
+      "tasks": {
+        "sst2": {"kind": "single", "n_classes": 2,
+                 "banks": [[50, 80], [80, 110]],
+                 "len_range": [5, 10], "bank_words": [2, 4],
+                 "label_noise": 0.0}
+      }
+    }"#;
+    Spec::from_json(&Value::parse(json).unwrap()).unwrap()
+}
+
+fn real_specs() -> Vec<TensorSpec> {
+    vec![
+        TensorSpec { name: "aq".into(), shape: vec![L, R, D] },
+        TensorSpec { name: "bq".into(), shape: vec![L, D, R] },
+        TensorSpec { name: "av".into(), shape: vec![L, R, D] },
+        TensorSpec { name: "bv".into(), shape: vec![L, D, R] },
+        TensorSpec { name: "head_w".into(), shape: vec![D, 4] },
+        TensorSpec { name: "head_b".into(), shape: vec![4] },
+    ]
+}
+
+fn random_updates(n: usize, seed: u64) -> Vec<DeviceUpdate> {
+    let mut rng = Rng::new(seed);
+    let specs = real_specs();
+    (0..n)
+        .map(|_| {
+            let mut t = TensorMap::zeros(&specs);
+            for (_, v) in &mut t.entries {
+                for x in v.iter_mut() {
+                    *x = rng.f32() - 0.5;
+                }
+            }
+            DeviceUpdate {
+                trainable: t,
+                config: LoraConfig {
+                    layers: LayerSet::Depth(rng.range_incl(1, L)),
+                    ranks: arithmetic_ranks(L, 1, 1, 78, R),
+                },
+                weight: 1.0,
+            }
+        })
+        .collect()
+}
+
+fn mock_round_once(method: &str, meta: &ModelMeta, spec: &Spec) {
+    let mut s = strategy::by_name(method, meta.n_layers, meta.r_max,
+                                  meta.w_max)
+        .unwrap();
+    let family = s.family();
+    let mut fleet = Fleet::new(FleetConfig::paper());
+    let mut trainer = MockTrainer::new(family);
+    let cfg = FedConfig {
+        rounds: 1,
+        train_size: 2048,
+        test_size: 64,
+        ..Default::default()
+    };
+    let global = TensorMap::zeros(&[TensorSpec {
+        name: "aq".into(),
+        shape: vec![L, meta.rank_dim(family), 8],
+    }]);
+    let _ = run_federated(&cfg, &mut fleet, s.as_mut(), &mut trainer,
+                          meta, spec, global)
+        .unwrap();
+}
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_default();
+    println!(
+        "{:<40} {:>12} {:>12} {:>12} {:>7}",
+        "benchmark", "mean", "p50", "p95", "iters"
+    );
+    let want = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    // ---- component hot paths ----------------------------------------------
+    if want("lcd_80") {
+        let mut rng = Rng::new(1);
+        let devices: Vec<LcdDevice> = (0..80)
+            .map(|_| LcdDevice {
+                capacity: legend::coordinator::capacity::Capacity {
+                    mu: rng.uniform(0.005, 0.5),
+                    beta: rng.uniform(0.01, 1.0),
+                },
+                fwd_time: 0.02,
+                n_batches: 8,
+                compute_budget: f64::MAX,
+                comm_budget: usize::MAX,
+                unit_rank_bytes: 2048,
+            })
+            .collect();
+        let params = LcdParams::paper(L, R);
+        run_bench("lcd_80_devices (Alg.1)", 300, || {
+            std::hint::black_box(lcd::determine(&params, &devices));
+        });
+    }
+    if want("aggregation") {
+        let updates = random_updates(80, 2);
+        let mut global = TensorMap::zeros(&real_specs());
+        run_bench("aggregation_80x_full_size (eq.17)", 1500, || {
+            aggregate(&mut global, &updates, L, R);
+        });
+    }
+    if want("capacity") {
+        run_bench("capacity_ema_80x100_rounds (eq.8-9)", 200, || {
+            let mut est = CapacityEstimator::paper(80);
+            for h in 0..100 {
+                for i in 0..80 {
+                    est.update(i, 0.01 + (h + i) as f64 * 1e-4, 0.1);
+                }
+            }
+            std::hint::black_box(est.get(79));
+        });
+    }
+    if want("masks") {
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(6),
+            ranks: arithmetic_ranks(L, 1, 1, 78, R),
+        };
+        run_bench("mask_construction", 200, || {
+            std::hint::black_box(cfg.rank_mask(L, R));
+            std::hint::black_box(cfg.layer_mask(L));
+        });
+    }
+    if want("partition") {
+        let spec = toy_spec();
+        let mut rng = Rng::new(3);
+        let ds =
+            grammar::generate(&spec, "sst2", 20_000, &mut rng).unwrap();
+        run_bench("dirichlet_partition_20k_80dev", 800, || {
+            let mut prng = Rng::new(4);
+            std::hint::black_box(partition::split(
+                &ds,
+                80,
+                partition::Partition::Dirichlet { alpha: 10.0 },
+                2,
+                4,
+                &mut prng,
+            ));
+        });
+    }
+    if want("grammar") {
+        let spec = toy_spec();
+        run_bench("grammar_generate_1k_examples", 500, || {
+            let mut rng = Rng::new(5);
+            std::hint::black_box(
+                grammar::generate(&spec, "sst2", 1000, &mut rng)
+                    .unwrap(),
+            );
+        });
+    }
+    if want("json") {
+        let text = std::fs::read_to_string("artifacts/manifest.json")
+            .unwrap_or_else(|_| {
+                r#"{"model":{"n_layers":12},"base":[]}"#.into()
+            });
+        run_bench("json_parse_manifest", 300, || {
+            std::hint::black_box(Value::parse(&text).unwrap());
+        });
+    }
+
+    // ---- per-figure coordinator rounds (mock, 80 devices) ------------------
+    let meta = ModelMeta::synthetic(L, R, 32);
+    let spec = toy_spec();
+    for (bench, method) in [
+        ("fig7_round_legend", "legend"),
+        ("fig7_round_fedlora", "fedlora"),
+        ("fig7_round_hetlora", "hetlora"),
+        ("fig7_round_fedadapter", "fedadapter"),
+        ("fig13_round_no_ld", "legend-no-ld"),
+        ("fig13_round_no_rd", "legend-no-rd"),
+    ] {
+        if want(bench) {
+            let name = format!("{bench} (80 dev, mock)");
+            run_bench(&name, 1200, || {
+                mock_round_once(method, &meta, &spec)
+            });
+        }
+    }
+    if want("fig3_round_layers_d") {
+        run_bench("fig3_round_layers_d (10 dev, mock)", 600, || {
+            let mut s = strategy::FixedLayers {
+                label: "Layers-D".into(),
+                layers: LayerSet::Depth(4),
+                rank: 8,
+            };
+            let mut fleet = Fleet::new(FleetConfig::pretest());
+            let mut trainer = MockTrainer::new("lora");
+            let cfg = FedConfig {
+                rounds: 1,
+                train_size: 512,
+                test_size: 64,
+                ..Default::default()
+            };
+            let global = TensorMap::zeros(&[TensorSpec {
+                name: "aq".into(),
+                shape: vec![L, R, 8],
+            }]);
+            let _ = run_federated(&cfg, &mut fleet, &mut s, &mut trainer,
+                                  &meta, &spec, global)
+                .unwrap();
+        });
+    }
+
+    // ---- artifact-backed (L1/L2 hot path) -----------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::load("artifacts").expect("runtime");
+        let dim = rt.manifest.dim.clone();
+        let rspec = Spec::load("artifacts/vocab.json").unwrap();
+        let mut rng = Rng::new(6);
+        let ds =
+            grammar::generate(&rspec, "sst2", 256, &mut rng).unwrap();
+        let lcfg = LoraConfig {
+            layers: LayerSet::Depth(4),
+            ranks: arithmetic_ranks(dim.n_layers, 1, 1, 78, dim.r_max),
+        };
+        let masks = Masks {
+            rank_mask: lcfg.rank_mask(dim.n_layers, dim.r_max),
+            layer_mask: lcfg.layer_mask(dim.n_layers),
+        };
+        if want("train_step") {
+            let mut srng = Rng::new(7);
+            let t = init_trainable(&rt.manifest, &rt.manifest.lora,
+                                   &mut srng);
+            let o = init_opt(&rt.manifest.lora);
+            let mut session = SessionState::from_maps(&t, &o).unwrap();
+            let batches = ds.batches(dim.batch_size);
+            let mut step = 0f32;
+            run_bench("pjrt_train_step (L1+L2 hot path)", 4000, || {
+                step += 1.0;
+                let b = &batches[(step as usize) % batches.len()];
+                rt.train_step("lora", &mut session, &masks, &b.0, &b.1,
+                              5e-3, step)
+                    .unwrap();
+            });
+        }
+        if want("eval_batch") {
+            let mut srng = Rng::new(8);
+            let t = init_trainable(&rt.manifest, &rt.manifest.lora,
+                                   &mut srng);
+            run_bench("pjrt_eval_256_examples", 4000, || {
+                rt.evaluate("lora", &t, &masks, &ds).unwrap();
+            });
+        }
+        if want("real_round") {
+            let rmeta = ModelMeta::from_manifest(&rt.manifest);
+            run_bench("real_federated_round_6dev", 8000, || {
+                let mut s = strategy::by_name("legend", rmeta.n_layers,
+                                              rmeta.r_max, rmeta.w_max)
+                    .unwrap();
+                let mut fleet = Fleet::new(FleetConfig::sized(6));
+                let mut trainer = PjrtTrainer::new(&rt, "lora", 1);
+                let fcfg = FedConfig {
+                    rounds: 1,
+                    train_size: 192,
+                    test_size: 64,
+                    max_batches: 4,
+                    ..Default::default()
+                };
+                let mut grng = Rng::new(1).child("global-init");
+                let global = init_trainable(&rt.manifest,
+                                            &rt.manifest.lora,
+                                            &mut grng);
+                let _ = run_federated(&fcfg, &mut fleet, s.as_mut(),
+                                      &mut trainer, &rmeta, &rspec,
+                                      global)
+                    .unwrap();
+            });
+        }
+    } else {
+        println!(
+            "(artifacts/ missing — PJRT benches skipped; run `make \
+             artifacts`)"
+        );
+    }
+}

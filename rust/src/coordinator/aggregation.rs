@@ -1,0 +1,277 @@
+//! LoRA aggregation (§4.5, eq. 17) — adaptive layer-wise averaging.
+//!
+//! Devices return heterogeneous-depth (and, for HetLoRA,
+//! heterogeneous-rank) updates. The PS averages each transformer
+//! layer's LoRA over exactly the devices holding that layer,
+//! `θ_l = (1/n_l) Σ_i θ_{i,l}`; we implement it at rank-slot
+//! granularity so HetLoRA's zero-padded mismatched ranks aggregate
+//! correctly too. Slots no device holds this round keep their previous
+//! global value.
+
+use crate::model::masks::LoraConfig;
+use crate::model::state::TensorMap;
+
+/// One device's returned update + the configuration it trained under.
+#[derive(Debug, Clone)]
+pub struct DeviceUpdate {
+    pub trainable: TensorMap,
+    pub config: LoraConfig,
+    /// Aggregation weight (1.0 = the paper's uniform 1/n_l; harnesses
+    /// may weight by shard size for FedAvg-style averaging).
+    pub weight: f64,
+}
+
+/// How a tensor's elements map to (layer, rank-slot) cells.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Pattern {
+    /// `[L, r, inner]` — slot index varies along axis 1.
+    Rows { r: usize, inner: usize },
+    /// `[L, inner, r]` — slot index varies along axis 2.
+    Cols { r: usize, inner: usize },
+    /// No (layer, slot) structure: averaged over ALL devices (head).
+    Full,
+}
+
+fn classify(shape: &[usize], n_layers: usize, rank_dim: usize) -> Pattern {
+    match shape {
+        [l, a, b] if *l == n_layers && *a == rank_dim => {
+            Pattern::Rows { r: rank_dim, inner: *b }
+        }
+        [l, a, b] if *l == n_layers && *b == rank_dim => {
+            Pattern::Cols { r: rank_dim, inner: *a }
+        }
+        [l, a] if *l == n_layers && *a == rank_dim => {
+            Pattern::Rows { r: rank_dim, inner: 1 }
+        }
+        _ => Pattern::Full,
+    }
+}
+
+/// Aggregate `updates` into `global` in place.
+///
+/// `rank_dim` is r_max for the lora family / w_max for adapters.
+pub fn aggregate(global: &mut TensorMap, updates: &[DeviceUpdate],
+                 n_layers: usize, rank_dim: usize) {
+    if updates.is_empty() {
+        return;
+    }
+    // Precompute each device's [L*rank_dim] slot mask.
+    let slot_masks: Vec<Vec<f32>> = updates
+        .iter()
+        .map(|u| u.config.rank_mask(n_layers, rank_dim))
+        .collect();
+
+    for ti in 0..global.entries.len() {
+        let (spec, g) = &mut global.entries[ti];
+        let pat = classify(&spec.shape, n_layers, rank_dim);
+        let n = g.len();
+        let mut acc = vec![0f64; n];
+        let mut wsum = vec![0f64; n];
+
+        for (u, mask) in updates.iter().zip(&slot_masks) {
+            let x = u
+                .trainable
+                .get(&spec.name)
+                .expect("device update missing tensor");
+            debug_assert_eq!(x.len(), n, "shape drift in {}", spec.name);
+            let w = u.weight;
+            match pat {
+                Pattern::Full => {
+                    for (e, &v) in x.iter().enumerate() {
+                        acc[e] += w * v as f64;
+                        wsum[e] += w;
+                    }
+                }
+                Pattern::Rows { r, inner } => {
+                    for l in 0..n_layers {
+                        for j in 0..r {
+                            let m = mask[l * r + j] as f64 * w;
+                            if m == 0.0 {
+                                continue;
+                            }
+                            let off = (l * r + j) * inner;
+                            for e in off..off + inner {
+                                acc[e] += m * x[e] as f64;
+                                wsum[e] += m;
+                            }
+                        }
+                    }
+                }
+                Pattern::Cols { r, inner } => {
+                    for l in 0..n_layers {
+                        for j in 0..r {
+                            let m = mask[l * r + j] as f64 * w;
+                            if m == 0.0 {
+                                continue;
+                            }
+                            let base = l * inner * r + j;
+                            for i in 0..inner {
+                                let e = base + i * r;
+                                acc[e] += m * x[e] as f64;
+                                wsum[e] += m;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        for e in 0..n {
+            if wsum[e] > 0.0 {
+                g[e] = (acc[e] / wsum[e]) as f32;
+            } // else: keep previous global value (n_l = 0 this round)
+        }
+    }
+}
+
+/// Number of devices contributing to each layer (n_l diagnostics).
+pub fn contributors_per_layer(updates: &[DeviceUpdate], n_layers: usize)
+                              -> Vec<usize> {
+    let mut n = vec![0usize; n_layers];
+    for u in updates {
+        for l in u.config.layers.indices(n_layers) {
+            n[l] += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::masks::LayerSet;
+    use crate::model::TensorSpec;
+
+    const L: usize = 4;
+    const R: usize = 3;
+    const D: usize = 2;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "aq".into(), shape: vec![L, R, D] },
+            TensorSpec { name: "bq".into(), shape: vec![L, D, R] },
+            TensorSpec { name: "head_w".into(), shape: vec![D, 2] },
+        ]
+    }
+
+    fn filled(val: f32) -> TensorMap {
+        let mut t = TensorMap::zeros(&specs());
+        for (_, v) in &mut t.entries {
+            v.iter_mut().for_each(|x| *x = val);
+        }
+        t
+    }
+
+    fn update(val: f32, depth: usize, ranks: Vec<usize>) -> DeviceUpdate {
+        DeviceUpdate {
+            trainable: filled(val),
+            config: LoraConfig { layers: LayerSet::Depth(depth), ranks },
+            weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn uniform_depth_is_plain_average() {
+        let mut g = filled(0.0);
+        let ups = vec![
+            update(1.0, L, vec![R; L]),
+            update(3.0, L, vec![R; L]),
+        ];
+        aggregate(&mut g, &ups, L, R);
+        for (_, v) in &g.entries {
+            assert!(v.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn layerwise_counts_only_contributors() {
+        let mut g = filled(-1.0);
+        // Device A trains all 4 layers, device B only the deepest 1.
+        let ups = vec![
+            update(2.0, L, vec![R; L]),
+            update(4.0, 1, vec![R; L]),
+        ];
+        aggregate(&mut g, &ups, L, R);
+        let aq = g.get("aq").unwrap();
+        // Layers 0..3 (shallow): only A → 2.0.
+        assert!(aq[..3 * R * D].iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        // Layer 3 (deepest): (2+4)/2 = 3.0.
+        assert!(aq[3 * R * D..].iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        // Head: all devices → 3.0.
+        assert!(g
+            .get("head_w")
+            .unwrap()
+            .iter()
+            .all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn hetlora_rank_mismatch_aggregates_per_slot() {
+        let mut g = filled(0.0);
+        // A has rank 3 everywhere, B rank 1 everywhere (zero-padded).
+        let ups = vec![
+            update(2.0, L, vec![3; L]),
+            update(6.0, L, vec![1; L]),
+        ];
+        aggregate(&mut g, &ups, L, R);
+        let aq = g.get("aq").unwrap();
+        // slot 0: both → 4.0; slots 1,2: only A → 2.0.
+        for l in 0..L {
+            let base = l * R * D;
+            assert!((aq[base] - 4.0).abs() < 1e-6);
+            assert!((aq[base + D] - 2.0).abs() < 1e-6);
+            assert!((aq[base + 2 * D] - 2.0).abs() < 1e-6);
+        }
+        // Cols layout too (bq: [L, D, R]).
+        let bq = g.get("bq").unwrap();
+        for l in 0..L {
+            for i in 0..D {
+                let base = l * D * R + i * R;
+                assert!((bq[base] - 4.0).abs() < 1e-6);
+                assert!((bq[base + 1] - 2.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn untouched_slots_keep_previous_global() {
+        let mut g = filled(9.0);
+        let ups = vec![update(1.0, 1, vec![R; L])]; // only deepest layer
+        aggregate(&mut g, &ups, L, R);
+        let aq = g.get("aq").unwrap();
+        assert!(aq[..3 * R * D].iter().all(|&x| x == 9.0));
+        assert!(aq[3 * R * D..].iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn weights_scale_contributions() {
+        let mut g = filled(0.0);
+        let mut a = update(1.0, L, vec![R; L]);
+        a.weight = 3.0;
+        let b = update(5.0, L, vec![R; L]);
+        aggregate(&mut g, &[a, b], L, R);
+        // (3·1 + 1·5)/4 = 2.0
+        assert!(g
+            .get("aq")
+            .unwrap()
+            .iter()
+            .all(|&x| (x - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn contributor_counts() {
+        let ups = vec![
+            update(0.0, L, vec![R; L]),
+            update(0.0, 2, vec![R; L]),
+            update(0.0, 1, vec![R; L]),
+        ];
+        assert_eq!(contributors_per_layer(&ups, L), vec![1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_update_set_is_noop() {
+        let mut g = filled(5.0);
+        aggregate(&mut g, &[], L, R);
+        assert!(g.get("aq").unwrap().iter().all(|&x| x == 5.0));
+    }
+}

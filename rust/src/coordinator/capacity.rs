@@ -1,0 +1,134 @@
+//! Capacity estimation (§4.3, eq. 8–9).
+//!
+//! The PS maintains a moving average of each device's reported
+//! per-layer backprop time μ̂ and unit-rank upload time β̂:
+//!   μ_i^h = ρ·μ_i^{h-1} + (1-ρ)·μ̂_i^h,
+//!   β_i^h = ρ·β_i^{h-1} + (1-ρ)·β̂_i^h,   ρ = 0.8 by default.
+//! The first observation seeds the state directly (no bias toward 0).
+
+/// One device's EMA state.
+#[derive(Debug, Clone, Copy, Default)]
+struct Ema {
+    mu: f64,
+    beta: f64,
+    seeded: bool,
+}
+
+/// PS-side estimator over the whole fleet.
+#[derive(Debug, Clone)]
+pub struct CapacityEstimator {
+    rho: f64,
+    state: Vec<Ema>,
+}
+
+/// A device's estimated capacities for the current round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Capacity {
+    /// Estimated per-layer backprop time [s/layer/batch].
+    pub mu: f64,
+    /// Estimated unit-rank upload time [s].
+    pub beta: f64,
+}
+
+impl CapacityEstimator {
+    /// `rho` = 0.8 in the paper's experiments.
+    pub fn new(n_devices: usize, rho: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rho), "rho must be in [0,1]");
+        CapacityEstimator { rho, state: vec![Ema::default(); n_devices] }
+    }
+
+    pub fn paper(n_devices: usize) -> Self {
+        Self::new(n_devices, 0.8)
+    }
+
+    /// Fold in a round's status report (μ̂, β̂) from device `i`.
+    pub fn update(&mut self, i: usize, mu_hat: f64, beta_hat: f64) {
+        let e = &mut self.state[i];
+        if !e.seeded {
+            e.mu = mu_hat;
+            e.beta = beta_hat;
+            e.seeded = true;
+        } else {
+            e.mu = self.rho * e.mu + (1.0 - self.rho) * mu_hat;
+            e.beta = self.rho * e.beta + (1.0 - self.rho) * beta_hat;
+        }
+    }
+
+    /// Current estimate for device `i` (None before first report).
+    pub fn get(&self, i: usize) -> Option<Capacity> {
+        let e = self.state[i];
+        e.seeded.then_some(Capacity { mu: e.mu, beta: e.beta })
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_seeds() {
+        let mut est = CapacityEstimator::paper(2);
+        assert!(est.get(0).is_none());
+        est.update(0, 0.01, 0.2);
+        let c = est.get(0).unwrap();
+        assert_eq!(c.mu, 0.01);
+        assert_eq!(c.beta, 0.2);
+        assert!(est.get(1).is_none());
+    }
+
+    #[test]
+    fn ema_blends_with_rho() {
+        let mut est = CapacityEstimator::new(1, 0.8);
+        est.update(0, 0.010, 0.10);
+        est.update(0, 0.020, 0.30);
+        let c = est.get(0).unwrap();
+        assert!((c.mu - (0.8 * 0.010 + 0.2 * 0.020)).abs() < 1e-12);
+        assert!((c.beta - (0.8 * 0.10 + 0.2 * 0.30)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimate_stays_within_observation_hull() {
+        let mut est = CapacityEstimator::paper(1);
+        let obs = [0.01, 0.03, 0.02, 0.05, 0.04, 0.015];
+        for &o in &obs {
+            est.update(0, o, o * 10.0);
+            let c = est.get(0).unwrap();
+            assert!(c.mu >= 0.01 - 1e-12 && c.mu <= 0.05 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn converges_to_stationary_truth() {
+        let mut est = CapacityEstimator::paper(1);
+        for _ in 0..200 {
+            est.update(0, 0.042, 1.3);
+        }
+        let c = est.get(0).unwrap();
+        assert!((c.mu - 0.042).abs() < 1e-9);
+        assert!((c.beta - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracks_mode_change() {
+        // After a DVFS reshuffle the estimate should move most of the
+        // way to the new value within ~10 rounds (1 - 0.8^10 ≈ 0.89).
+        let mut est = CapacityEstimator::paper(1);
+        for _ in 0..50 {
+            est.update(0, 0.01, 0.1);
+        }
+        for _ in 0..10 {
+            est.update(0, 0.05, 0.1);
+        }
+        let c = est.get(0).unwrap();
+        assert!(c.mu > 0.04, "estimate {0} should chase the new mode",
+                c.mu);
+    }
+}

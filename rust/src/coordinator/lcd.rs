@@ -1,0 +1,232 @@
+//! LCD — the LoRA Configuration Determination algorithm (Alg. 1, §4.4).
+//!
+//! Given per-device capacity estimates, LCD jointly picks each
+//! device's LoRA depth and the global (arithmetic, eq. 10-compliant)
+//! rank distribution, then greedily trims depths until the
+//! device-specific compute (eq. 14) and communication (eq. 15)
+//! budgets hold:
+//!
+//!  1. reference completion times t_i at full depth L;
+//!  2. depth gap  k^h = ⌈L · (t_max − t_min)/t_max⌉;
+//!  3. per-device k_i = ⌈k^h · (t_max − t_i)/t_max⌉,
+//!     depth_i = L − k^h + k_i  (fastest → L, slowest → L − k^h);
+//!  4. global ranks r_l = r_{l-1} + λ within total budget ψ;
+//!  5. trim depth while eq. (14)/(15) are violated.
+
+use crate::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
+
+use super::capacity::Capacity;
+
+/// Algorithm parameters (λ = 1, ψ defaults to Σ(1..L) as in §4.4).
+#[derive(Debug, Clone)]
+pub struct LcdParams {
+    pub n_layers: usize,
+    pub r_max: usize,
+    /// Rank arithmetic-sequence common difference λ.
+    pub lambda: usize,
+    /// Rank of the shallowest layer (r_0).
+    pub r0: usize,
+    /// Total rank budget ψ over all L layers (eq. 11).
+    pub psi: usize,
+    /// Never assign less than this depth (a device must train
+    /// something to contribute).
+    pub min_depth: usize,
+}
+
+impl LcdParams {
+    pub fn paper(n_layers: usize, r_max: usize) -> Self {
+        LcdParams {
+            n_layers,
+            r_max,
+            lambda: 1,
+            r0: 1,
+            psi: (1..=n_layers).sum(),
+            min_depth: 1,
+        }
+    }
+}
+
+/// Per-device inputs to LCD for one round.
+#[derive(Debug, Clone)]
+pub struct LcdDevice {
+    pub capacity: Capacity,
+    /// Forward time per batch [s] (t̂ of eq. 12, per batch).
+    pub fwd_time: f64,
+    /// Local batches this round.
+    pub n_batches: usize,
+    /// Compute budget C_i: max per-round compute seconds (eq. 14's
+    /// budget expressed in time — c·rank-units are seconds here).
+    pub compute_budget: f64,
+    /// Communication budget B_i: max upload bytes per round (eq. 15).
+    pub comm_budget: usize,
+    /// Bytes per unit-rank LoRA layer (to convert ranks → bytes).
+    pub unit_rank_bytes: usize,
+}
+
+impl LcdDevice {
+    /// Reference completion time at depth `k` with ranks `ranks`
+    /// (eq. 12 with estimated capacities).
+    pub fn est_completion(&self, k: usize, ranks: &[usize]) -> f64 {
+        let rank_sum: usize =
+            ranks.iter().rev().take(k).sum();
+        self.n_batches as f64
+            * (self.fwd_time + k as f64 * self.capacity.mu)
+            + rank_sum as f64 * self.capacity.beta
+    }
+
+    fn compute_seconds(&self, k: usize) -> f64 {
+        self.n_batches as f64
+            * (self.fwd_time + k as f64 * self.capacity.mu)
+    }
+
+    fn upload_bytes(&self, k: usize, ranks: &[usize]) -> usize {
+        let rank_sum: usize = ranks.iter().rev().take(k).sum();
+        rank_sum * self.unit_rank_bytes
+    }
+}
+
+/// Run Alg. 1; returns one [`LoraConfig`] per device.
+pub fn determine(params: &LcdParams, devices: &[LcdDevice])
+                 -> Vec<LoraConfig> {
+    assert!(!devices.is_empty());
+    let l = params.n_layers;
+
+    // Line 4 (order swapped, it's independent): the global rank
+    // distribution shared by all devices this round.
+    let ranks =
+        arithmetic_ranks(l, params.lambda, params.r0, params.psi,
+                         params.r_max);
+
+    // Lines 2–3: depth from completion-time gaps at full depth.
+    let t: Vec<f64> =
+        devices.iter().map(|d| d.est_completion(l, &ranks)).collect();
+    let t_max = t.iter().cloned().fold(f64::MIN, f64::max);
+    let t_min = t.iter().cloned().fold(f64::MAX, f64::min);
+    let gap = if t_max > 0.0 {
+        ((l as f64) * (t_max - t_min) / t_max).ceil() as usize
+    } else {
+        0
+    };
+    let gap = gap.min(l - params.min_depth);
+
+    // Line 3. NOTE: Alg. 1 writes k_i = ⌈k^h·(t^h − t_i)/t^h⌉, but §4.4's
+    // prose requires the most powerful device to land exactly on depth L
+    // and the weakest on L − k^h, which the literal formula misses
+    // whenever ⌈·⌉ rounds differently for k^h and k_i. We normalize by
+    // the span (t_max − t_min) so the endpoints match the stated intent.
+    let span = (t_max - t_min).max(f64::MIN_POSITIVE);
+    devices
+        .iter()
+        .zip(&t)
+        .map(|(d, &ti)| {
+            let ki = if t_max > t_min {
+                ((gap as f64) * (t_max - ti) / span).ceil() as usize
+            } else {
+                gap
+            };
+            let mut depth = (l - gap + ki.min(gap)).max(params.min_depth);
+            // Line 5: greedy trim until eq. (14)/(15) hold.
+            while depth > params.min_depth
+                && (d.compute_seconds(depth) > d.compute_budget
+                    || d.upload_bytes(depth, &ranks) > d.comm_budget)
+            {
+                depth -= 1;
+            }
+            LoraConfig { layers: LayerSet::Depth(depth), ranks: ranks.clone() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(mu: f64, beta: f64) -> LcdDevice {
+        LcdDevice {
+            capacity: Capacity { mu, beta },
+            fwd_time: 0.3 * mu * 12.0,
+            n_batches: 8,
+            compute_budget: f64::MAX,
+            comm_budget: usize::MAX,
+            unit_rank_bytes: 2048,
+        }
+    }
+
+    fn params() -> LcdParams {
+        LcdParams::paper(12, 16)
+    }
+
+    #[test]
+    fn fastest_gets_full_depth_slowest_gets_least() {
+        let devices =
+            vec![dev(0.005, 0.01), dev(0.05, 0.1), dev(0.5, 1.0)];
+        let cfgs = determine(&params(), &devices);
+        let depths: Vec<usize> =
+            cfgs.iter().map(|c| c.depth(12)).collect();
+        assert_eq!(depths[0], 12, "fastest device gets L");
+        assert!(depths[2] < depths[1] && depths[1] < depths[0],
+                "{depths:?} must decrease with slowness");
+        assert!(depths[2] >= 1);
+    }
+
+    #[test]
+    fn homogeneous_fleet_gets_uniform_full_depth() {
+        let devices = vec![dev(0.01, 0.05); 6];
+        let cfgs = determine(&params(), &devices);
+        for c in &cfgs {
+            assert_eq!(c.depth(12), 12);
+        }
+    }
+
+    #[test]
+    fn ranks_monotone_and_within_psi() {
+        let devices = vec![dev(0.005, 0.01), dev(0.08, 0.4)];
+        let cfgs = determine(&params(), &devices);
+        for c in &cfgs {
+            for w in c.ranks.windows(2) {
+                assert!(w[0] <= w[1], "eq. 10 violated: {:?}", c.ranks);
+            }
+            assert!(c.ranks.iter().sum::<usize>() <= params().psi);
+        }
+    }
+
+    #[test]
+    fn compute_budget_trims_depth() {
+        let mut d = dev(0.01, 0.001);
+        // Allow only ~forward + 4 layers of backprop per round.
+        d.compute_budget =
+            8.0 * (d.fwd_time + 4.0 * d.capacity.mu) + 1e-9;
+        let cfgs = determine(&params(), &[d]);
+        assert!(cfgs[0].depth(12) <= 4, "depth {}", cfgs[0].depth(12));
+    }
+
+    #[test]
+    fn comm_budget_trims_depth() {
+        let mut d = dev(0.001, 0.5);
+        // Budget covers only the deepest ~2 layers' ranks.
+        let ranks = arithmetic_ranks(12, 1, 1, 78, 16);
+        let two: usize = ranks[10..].iter().sum();
+        d.comm_budget = two * d.unit_rank_bytes;
+        let cfgs = determine(&params(), &[d]);
+        assert!(cfgs[0].depth(12) <= 2);
+    }
+
+    #[test]
+    fn min_depth_respected_under_impossible_budgets() {
+        let mut d = dev(1.0, 10.0);
+        d.compute_budget = 0.0;
+        d.comm_budget = 0;
+        let cfgs = determine(&params(), &[d]);
+        assert_eq!(cfgs[0].depth(12), 1);
+    }
+
+    #[test]
+    fn est_completion_matches_eq12() {
+        let d = dev(0.01, 0.1);
+        let ranks: Vec<usize> = (1..=12).collect();
+        // depth 3 → deepest ranks 10+11+12 = 33
+        let t = d.est_completion(3, &ranks);
+        let expect = 8.0 * (0.3 * 0.01 * 12.0 + 3.0 * 0.01) + 33.0 * 0.1;
+        assert!((t - expect).abs() < 1e-12);
+    }
+}

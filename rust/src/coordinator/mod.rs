@@ -1,0 +1,24 @@
+//! L3 — the paper's coordination contribution.
+//!
+//! * [`capacity`] — moving-average device capability estimation
+//!   (§4.3, eq. 8–9);
+//! * [`lcd`] — the LoRA Configuration Determination algorithm
+//!   (Alg. 1): joint depth + rank-distribution assignment under
+//!   compute/communication budgets;
+//! * [`aggregation`] — adaptive layer-wise (rank-slot-aware)
+//!   aggregation of heterogeneous updates (§4.5, eq. 17);
+//! * [`strategy`] — LEGEND, its two ablations, and the FedLoRA /
+//!   HetLoRA / FedAdapter baselines plus the §2 pre-test variants;
+//! * [`trainer`] — local fine-tuning backends (PJRT-real and mock);
+//! * [`server`] — the parameter-server round loop tying it together.
+
+pub mod aggregation;
+pub mod capacity;
+pub mod lcd;
+pub mod serialize;
+pub mod server;
+pub mod strategy;
+pub mod transport;
+pub mod trainer;
+
+pub use server::{run_federated, FedConfig, ModelMeta};

@@ -1,0 +1,245 @@
+//! Wire (de)serialization of LoRA payloads.
+//!
+//! The transport counts — and the tests round-trip — the exact bytes a
+//! deployment would put on the wire: for each active layer `l`, the
+//! first `r_l` rows of the A factors and columns of the B factors
+//! (f32 little-endian), then the full head. Padded slots never travel;
+//! this is what makes LEGEND's traffic numbers (Fig. 11) smaller than
+//! FedLoRA's even though both share one padded artifact in memory.
+
+use crate::model::masks::LoraConfig;
+use crate::model::state::TensorMap;
+use crate::model::TensorSpec;
+
+/// How a trainable tensor maps to (layer, slot) cells; mirrors the
+/// aggregation patterns.
+fn slot_layout(spec: &TensorSpec, n_layers: usize, rank_dim: usize)
+               -> Option<(bool, usize)> {
+    // Returns (slot_on_axis1, inner) for [L, r, inner] (true) or
+    // [L, inner, r] (false); None = full tensor (head).
+    match spec.shape.as_slice() {
+        [l, a, b] if *l == n_layers && *a == rank_dim => Some((true, *b)),
+        [l, a, b] if *l == n_layers && *b == rank_dim => Some((false, *a)),
+        [l, a] if *l == n_layers && *a == rank_dim => Some((true, 1)),
+        _ => None,
+    }
+}
+
+/// Bytes of the active payload for `config` (what actually travels).
+pub fn active_payload_bytes(state: &TensorMap, config: &LoraConfig,
+                            n_layers: usize, rank_dim: usize) -> usize {
+    let mask = config.rank_mask(n_layers, rank_dim);
+    let mut total = 0usize;
+    for (spec, _) in &state.entries {
+        match slot_layout(spec, n_layers, rank_dim) {
+            None => total += spec.numel() * 4,
+            Some((_, inner)) => {
+                let active: usize =
+                    mask.iter().map(|&m| m as usize).sum();
+                total += active * inner * 4;
+            }
+        }
+    }
+    total
+}
+
+/// Serialize the active slots to wire bytes (f32 LE).
+pub fn encode(state: &TensorMap, config: &LoraConfig, n_layers: usize,
+              rank_dim: usize) -> Vec<u8> {
+    let mask = config.rank_mask(n_layers, rank_dim);
+    let mut out =
+        Vec::with_capacity(active_payload_bytes(state, config, n_layers,
+                                                rank_dim));
+    let mut push = |x: f32| out.extend_from_slice(&x.to_le_bytes());
+    for (spec, data) in &state.entries {
+        match slot_layout(spec, n_layers, rank_dim) {
+            None => {
+                for &x in data {
+                    push(x);
+                }
+            }
+            Some((rows, inner)) => {
+                for l in 0..n_layers {
+                    for j in 0..rank_dim {
+                        if mask[l * rank_dim + j] == 0.0 {
+                            continue;
+                        }
+                        if rows {
+                            let off = (l * rank_dim + j) * inner;
+                            for &x in &data[off..off + inner] {
+                                push(x);
+                            }
+                        } else {
+                            let base = l * inner * rank_dim + j;
+                            for i in 0..inner {
+                                push(data[base + i * rank_dim]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("payload truncated: wanted {want} bytes, got {got}")]
+    Truncated { want: usize, got: usize },
+    #[error("trailing bytes: {0}")]
+    Trailing(usize),
+}
+
+/// Decode wire bytes into `dest`'s active slots (inactive slots are
+/// left untouched — they weren't transmitted).
+pub fn decode(bytes: &[u8], dest: &mut TensorMap, config: &LoraConfig,
+              n_layers: usize, rank_dim: usize) -> Result<(), WireError> {
+    let want = active_payload_bytes(dest, config, n_layers, rank_dim);
+    if bytes.len() < want {
+        return Err(WireError::Truncated { want, got: bytes.len() });
+    }
+    let mask = config.rank_mask(n_layers, rank_dim);
+    let mut off = 0usize;
+    let mut next = |off: &mut usize| -> f32 {
+        let v = f32::from_le_bytes(
+            bytes[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        v
+    };
+    for (spec, data) in &mut dest.entries {
+        match slot_layout(spec, n_layers, rank_dim) {
+            None => {
+                for x in data.iter_mut() {
+                    *x = next(&mut off);
+                }
+            }
+            Some((rows, inner)) => {
+                for l in 0..n_layers {
+                    for j in 0..rank_dim {
+                        if mask[l * rank_dim + j] == 0.0 {
+                            continue;
+                        }
+                        if rows {
+                            let o = (l * rank_dim + j) * inner;
+                            for x in &mut data[o..o + inner] {
+                                *x = next(&mut off);
+                            }
+                        } else {
+                            let base = l * inner * rank_dim + j;
+                            for i in 0..inner {
+                                data[base + i * rank_dim] =
+                                    next(&mut off);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if off != bytes.len() {
+        return Err(WireError::Trailing(bytes.len() - off));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::masks::LayerSet;
+    use crate::util::rng::Rng;
+
+    const L: usize = 4;
+    const R: usize = 3;
+    const D: usize = 2;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "aq".into(), shape: vec![L, R, D] },
+            TensorSpec { name: "bq".into(), shape: vec![L, D, R] },
+            TensorSpec { name: "head_w".into(), shape: vec![D, 2] },
+        ]
+    }
+
+    fn filled(seed: u64) -> TensorMap {
+        let mut rng = Rng::new(seed);
+        let mut t = TensorMap::zeros(&specs());
+        for (_, v) in &mut t.entries {
+            for x in v.iter_mut() {
+                *x = rng.f32() - 0.5;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn roundtrip_restores_active_slots_only() {
+        let src = filled(1);
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(2),
+            ranks: vec![0, 0, 1, 3],
+        };
+        let wire = encode(&src, &cfg, L, R);
+        assert_eq!(wire.len(), active_payload_bytes(&src, &cfg, L, R));
+
+        let mut dst = filled(2);
+        let before = dst.clone();
+        decode(&wire, &mut dst, &cfg, L, R).unwrap();
+
+        let mask = cfg.rank_mask(L, R);
+        let aq_src = src.get("aq").unwrap();
+        let aq_dst = dst.get("aq").unwrap();
+        let aq_old = before.get("aq").unwrap();
+        for l in 0..L {
+            for j in 0..R {
+                for i in 0..D {
+                    let e = (l * R + j) * D + i;
+                    if mask[l * R + j] > 0.0 {
+                        assert_eq!(aq_dst[e], aq_src[e], "active e={e}");
+                    } else {
+                        assert_eq!(aq_dst[e], aq_old[e],
+                                   "inactive e={e} must not travel");
+                    }
+                }
+            }
+        }
+        // Head always travels.
+        assert_eq!(dst.get("head_w").unwrap(),
+                   src.get("head_w").unwrap());
+    }
+
+    #[test]
+    fn payload_bytes_match_traffic_formula() {
+        let src = filled(3);
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(2),
+            ranks: vec![1, 1, 2, 3],
+        };
+        // active ranks = 2+3 = 5 slots; aq contributes 5·D, bq 5·D,
+        // head D·2 floats.
+        let want = (5 * D + 5 * D + D * 2) * 4;
+        assert_eq!(active_payload_bytes(&src, &cfg, L, R), want);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let src = filled(4);
+        let cfg = LoraConfig::uniform(LayerSet::All, 2, L);
+        let wire = encode(&src, &cfg, L, R);
+        let mut dst = filled(5);
+        assert!(matches!(
+            decode(&wire[..wire.len() - 4], &mut dst, &cfg, L, R),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn col_layout_roundtrips_exactly() {
+        let src = filled(6);
+        let cfg = LoraConfig::uniform(LayerSet::All, R, L);
+        let wire = encode(&src, &cfg, L, R);
+        let mut dst = TensorMap::zeros(&specs());
+        decode(&wire, &mut dst, &cfg, L, R).unwrap();
+        assert_eq!(dst.get("bq").unwrap(), src.get("bq").unwrap());
+    }
+}

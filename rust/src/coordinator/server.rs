@@ -1,0 +1,423 @@
+//! The parameter-server round loop (§3's six modules wired together).
+//!
+//! Per round: ① devices report status → capacity EMA (§4.3);
+//! ② strategy picks per-device LoRA configurations (§4.4, LCD for
+//! LEGEND); ③ LoRA assignment + download accounting (§4.6); ④ local
+//! fine-tuning through the Trainer backend (§4.2 — real gradients via
+//! PJRT); ⑤ upload accounting + adaptive layer-wise aggregation
+//! (§4.5); ⑥ virtual-clock timing via eq. (12)/(13) and global-model
+//! evaluation. Produces a [`RunRecord`] with everything Figs. 7–13
+//! need.
+
+use anyhow::Result;
+
+use crate::data::{grammar, partition, Dataset, Spec};
+use crate::device::profile::calib;
+use crate::device::Fleet;
+use crate::metrics::{RoundRecord, RunRecord};
+use crate::model::state::TensorMap;
+use crate::model::Manifest;
+use crate::runtime::Masks;
+use crate::sim::clock::{simulate_round, DeviceRound, VirtualClock};
+use crate::util::rng::Rng;
+
+use super::aggregation::{aggregate, DeviceUpdate};
+use super::capacity::CapacityEstimator;
+use super::transport::Transport;
+use super::strategy::{Strategy, StrategyCtx};
+use super::trainer::Trainer;
+
+/// Federated-run configuration.
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    pub task: String,
+    pub rounds: usize,
+    pub eval_every: usize,
+    pub lr0: f64,
+    pub seed: u64,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// Dirichlet α for the non-iid label partition; ≤ 0 → iid
+    /// (Table 2: GLUE tasks α = 10, mmlu/gsm iid).
+    pub alpha: f64,
+    /// Cap on local batches per round (keeps single-core wall-clock
+    /// sane; the timing model uses the same cap, so virtual time stays
+    /// consistent).
+    pub max_batches: usize,
+    /// Target accuracy for the completion-time metric (Fig. 8).
+    pub target_acc: f64,
+    pub verbose: bool,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        FedConfig {
+            task: "sst2".into(),
+            rounds: 25,
+            eval_every: 1,
+            lr0: 5e-3,
+            seed: 1,
+            train_size: 2048,
+            test_size: 256,
+            alpha: 10.0,
+            max_batches: 8,
+            target_acc: 0.85,
+            verbose: false,
+        }
+    }
+}
+
+/// Model metadata the server needs without holding a full Manifest
+/// (lets Mock-backed tests/benches run without artifacts).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub n_layers: usize,
+    pub r_max: usize,
+    pub w_max: usize,
+    pub unit_rank_bytes: usize,
+    pub unit_width_bytes: usize,
+    pub head_bytes: usize,
+}
+
+impl ModelMeta {
+    pub fn from_manifest(m: &Manifest) -> Self {
+        ModelMeta {
+            n_layers: m.dim.n_layers,
+            r_max: m.dim.r_max,
+            w_max: m.dim.adapter_w_max,
+            unit_rank_bytes: m.unit_rank_bytes(),
+            unit_width_bytes: m.adapter_unit_width_bytes(),
+            head_bytes: m.head_bytes(),
+        }
+    }
+
+    /// Small synthetic meta for Mock-backed tests.
+    pub fn synthetic(n_layers: usize, r_max: usize, w_max: usize) -> Self {
+        ModelMeta {
+            n_layers,
+            r_max,
+            w_max,
+            unit_rank_bytes: 1024,
+            unit_width_bytes: 512,
+            head_bytes: 2048,
+        }
+    }
+
+    pub fn rank_dim(&self, family: &str) -> usize {
+        match family {
+            "adapter" => self.w_max,
+            _ => self.r_max,
+        }
+    }
+
+    pub fn unit_bytes(&self, family: &str) -> usize {
+        match family {
+            "adapter" => self.unit_width_bytes,
+            _ => self.unit_rank_bytes,
+        }
+    }
+}
+
+/// Cosine learning-rate schedule with a 10% floor (§6.1: lr 0.002,
+/// cosine decay).
+pub fn cosine_lr(lr0: f64, round: usize, total: usize) -> f64 {
+    let t = (round.saturating_sub(1)) as f64 / total.max(1) as f64;
+    lr0 * (0.1 + 0.9 * 0.5 * (1.0 + (std::f64::consts::PI * t).cos()))
+}
+
+/// Run one full federated fine-tuning experiment.
+pub fn run_federated(cfg: &FedConfig, fleet: &mut Fleet,
+                     strategy: &mut dyn Strategy,
+                     trainer: &mut dyn Trainer, meta: &ModelMeta,
+                     spec: &Spec, mut global: TensorMap)
+                     -> Result<RunRecord> {
+    let n = fleet.len();
+    let family = trainer.family();
+    let rank_dim = meta.rank_dim(family);
+    let unit_bytes = meta.unit_bytes(family);
+
+    // ---- data -------------------------------------------------------------
+    let mut data_rng = Rng::new(cfg.seed).child("data");
+    let task = spec.task(&cfg.task)?.clone();
+    let train =
+        grammar::generate(spec, &cfg.task, cfg.train_size, &mut data_rng)?;
+    let test_size = (cfg.test_size / 64).max(1) * 64;
+    let test =
+        grammar::generate(spec, &cfg.task, test_size, &mut data_rng)?;
+    let how = if cfg.alpha > 0.0 {
+        partition::Partition::Dirichlet { alpha: cfg.alpha }
+    } else {
+        partition::Partition::Iid
+    };
+    let min_shard = trainer.batch_size();
+    let shards = partition::split(&train, n, how, task.n_classes,
+                                  min_shard, &mut data_rng);
+
+    // ---- state ------------------------------------------------------------
+    let mut estimator = CapacityEstimator::paper(n);
+    let mut transport = Transport::new();
+    let mut clock = VirtualClock::new();
+    let mut record = RunRecord::new(&strategy.name(), &cfg.task);
+    let mut last_losses = vec![0f64; n];
+    let mut last_round_time = 0f64;
+    let mut last_acc = 0f64;
+    let mut last_test_loss = 0f64;
+    let batch = trainer.batch_size();
+
+    for h in 1..=cfg.rounds {
+        if h > 1 {
+            fleet.advance_round();
+        }
+        transport.begin_round(h);
+        // ① status reports → capacity estimation (eq. 8–9).
+        for i in 0..n {
+            let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
+            transport.recv_status(i);
+            estimator.update(i, mu_hat, beta_hat);
+        }
+        let estimates: Vec<_> =
+            (0..n).map(|i| estimator.get(i).unwrap()).collect();
+        let n_batches: Vec<usize> = shards
+            .iter()
+            .map(|s| s.len().div_ceil(batch).min(cfg.max_batches))
+            .collect();
+
+        // ② LoRA configuration (§4.4).
+        let ctx = StrategyCtx {
+            round: h,
+            n_layers: meta.n_layers,
+            rank_dim,
+            fwd_times: estimates
+                .iter()
+                .map(|c| calib::FWD_FRAC * c.mu * meta.n_layers as f64)
+                .collect(),
+            estimates,
+            n_batches: n_batches.clone(),
+            unit_rank_bytes: unit_bytes,
+            compute_budgets: vec![f64::MAX; n],
+            comm_budgets: vec![usize::MAX; n],
+            last_losses: last_losses.clone(),
+            last_round_time,
+        };
+        let plan = strategy.configure(&ctx);
+        debug_assert_eq!(plan.device_configs.len(), n);
+
+        // ③–⑤ assignment, local fine-tuning, aggregation.
+        let lr = cosine_lr(cfg.lr0, h, cfg.rounds) as f32;
+        let mut updates: Vec<DeviceUpdate> = Vec::with_capacity(n);
+        let mut loss_sum = 0f64;
+        for (i, config) in plan.device_configs.iter().enumerate() {
+            let masks = Masks {
+                rank_mask: config.rank_mask(meta.n_layers, rank_dim),
+                layer_mask: config.layer_mask(meta.n_layers),
+            };
+            // §4.6 assignment travels through the transport layer,
+            // which counts the active-slot bytes it would put on the
+            // wire (Fig. 11's quantity).
+            let assigned = transport.send_assignment(
+                i, &global, config, meta.n_layers, rank_dim);
+            let outcome = trainer.train_local(
+                i, &assigned, &masks, &shards[i], lr, cfg.max_batches,
+            )?;
+            transport.recv_update(i, &outcome.trainable, config,
+                                  meta.n_layers, rank_dim);
+            loss_sum += outcome.mean_loss;
+            last_losses[i] = outcome.mean_loss;
+            updates.push(DeviceUpdate {
+                trainable: outcome.trainable,
+                config: config.clone(),
+                weight: 1.0,
+            });
+        }
+        let tally = transport.round_tally();
+        let (up_bytes, down_bytes) = (tally.uplink, tally.downlink);
+        aggregate(&mut global, &updates, meta.n_layers, rank_dim);
+
+        // ⑥ timing (eq. 12/13) with TRUE device parameters.
+        let rounds_t: Vec<DeviceRound> = plan
+            .device_configs
+            .iter()
+            .enumerate()
+            .map(|(i, config)| {
+                let d = &fleet.devices[i];
+                let beta = d.true_beta(unit_bytes);
+                DeviceRound {
+                    device_id: i,
+                    fwd_time_per_batch: d
+                        .compute
+                        .forward_time(meta.n_layers),
+                    mu: d.true_mu(),
+                    beta,
+                    depth: config.backprop_depth(meta.n_layers),
+                    ranks: config.active_ranks(meta.n_layers),
+                    n_batches: n_batches[i],
+                    extra_upload_s: beta
+                        * (meta.head_bytes as f64
+                            / unit_bytes.max(1) as f64),
+                }
+            })
+            .collect();
+        let timing = simulate_round(&rounds_t);
+        clock.advance(&timing);
+        last_round_time = timing.round_time;
+
+        // Evaluation of the aggregated global model.
+        if h % cfg.eval_every == 0 || h == cfg.rounds {
+            let eval_masks = Masks {
+                rank_mask: plan
+                    .eval_config
+                    .rank_mask(meta.n_layers, rank_dim),
+                layer_mask: plan.eval_config.layer_mask(meta.n_layers),
+            };
+            let (tl, ta) =
+                trainer.evaluate(&global, &eval_masks, &test)?;
+            last_acc = ta;
+            last_test_loss = tl;
+        }
+
+        let mean_depth = plan
+            .device_configs
+            .iter()
+            .map(|c| c.depth(meta.n_layers) as f64)
+            .sum::<f64>()
+            / n as f64;
+        record.rounds.push(RoundRecord {
+            round: h,
+            sim_time: clock.elapsed,
+            round_time: timing.round_time,
+            avg_waiting: timing.avg_waiting,
+            up_bytes,
+            down_bytes,
+            train_loss: loss_sum / n as f64,
+            test_acc: last_acc,
+            test_loss: last_test_loss,
+            mean_depth,
+        });
+        if cfg.verbose {
+            println!(
+                "[{}/{}] {} t={:.0}s acc={:.3} loss={:.3} depth={:.1} \
+                 wait={:.1}s",
+                h,
+                cfg.rounds,
+                strategy.name(),
+                clock.elapsed,
+                last_acc,
+                loss_sum / n as f64,
+                mean_depth,
+                timing.avg_waiting
+            );
+        }
+    }
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::strategy::{FedLora, Legend};
+    use crate::coordinator::trainer::MockTrainer;
+    use crate::device::FleetConfig;
+    use crate::model::TensorSpec;
+
+    fn toy_spec() -> Spec {
+        let json = r#"{
+          "vocab_size": 256, "seq_len": 16,
+          "special": {"pad": 0, "cls": 1, "mask": 2, "sep": 3},
+          "filler": [4, 50], "noise": [200, 256],
+          "tasks": {
+            "sst2": {"kind": "single", "n_classes": 2,
+                     "banks": [[50, 80], [80, 110]],
+                     "len_range": [5, 10], "bank_words": [2, 4],
+                     "label_noise": 0.0}
+          }
+        }"#;
+        Spec::from_json(&crate::util::json::Value::parse(json).unwrap())
+            .unwrap()
+    }
+
+    fn toy_global(meta: &ModelMeta) -> TensorMap {
+        TensorMap::zeros(&[
+            TensorSpec {
+                name: "aq".into(),
+                shape: vec![meta.n_layers, meta.r_max, 4],
+            },
+            TensorSpec {
+                name: "head_w".into(),
+                shape: vec![4, 2],
+            },
+        ])
+    }
+
+    fn run(strategy: &mut dyn Strategy, rounds: usize) -> RunRecord {
+        let meta = ModelMeta::synthetic(12, 16, 32);
+        let mut fleet = Fleet::new(FleetConfig::pretest());
+        let mut trainer = MockTrainer::new("lora");
+        let cfg = FedConfig {
+            rounds,
+            train_size: 256,
+            test_size: 64,
+            ..Default::default()
+        };
+        run_federated(&cfg, &mut fleet, strategy, &mut trainer, &meta,
+                      &toy_spec(), toy_global(&meta))
+        .unwrap()
+    }
+
+    #[test]
+    fn produces_full_record() {
+        let mut s = Legend::paper(12, 16);
+        let r = run(&mut s, 5);
+        assert_eq!(r.rounds.len(), 5);
+        assert_eq!(r.method, "LEGEND");
+        // Virtual time strictly increases, traffic is positive.
+        for w in r.rounds.windows(2) {
+            assert!(w[1].sim_time > w[0].sim_time);
+        }
+        assert!(r.rounds.iter().all(|x| x.up_bytes > 0));
+        assert!(r.final_accuracy() > 0.0);
+    }
+
+    #[test]
+    fn legend_waits_less_than_fedlora() {
+        let mut legend = Legend::paper(12, 16);
+        let mut fedlora = FedLora { rank: 8 };
+        let a = run(&mut legend, 8);
+        let b = run(&mut fedlora, 8);
+        assert!(
+            a.mean_waiting() < b.mean_waiting(),
+            "LEGEND {:.2}s vs FedLoRA {:.2}s",
+            a.mean_waiting(),
+            b.mean_waiting()
+        );
+        // And less traffic per round on average.
+        assert!(a.total_traffic() < b.total_traffic());
+    }
+
+    #[test]
+    fn legend_rounds_are_shorter() {
+        let mut legend = Legend::paper(12, 16);
+        let mut fedlora = FedLora { rank: 8 };
+        let a = run(&mut legend, 6);
+        let b = run(&mut fedlora, 6);
+        assert!(a.total_time() < b.total_time());
+    }
+
+    #[test]
+    fn cosine_schedule_decays_with_floor() {
+        let lr0 = 2e-3;
+        let first = cosine_lr(lr0, 1, 100);
+        let mid = cosine_lr(lr0, 50, 100);
+        let last = cosine_lr(lr0, 100, 100);
+        assert!((first - lr0).abs() < 1e-9);
+        assert!(mid < first && last < mid);
+        assert!(last >= 0.1 * lr0 - 1e-12);
+    }
+
+    #[test]
+    fn mean_depth_reflects_heterogeneity() {
+        let mut s = Legend::paper(12, 16);
+        let r = run(&mut s, 3);
+        let d = r.rounds.last().unwrap().mean_depth;
+        assert!(d > 1.0 && d <= 12.0, "mean depth {d}");
+    }
+}

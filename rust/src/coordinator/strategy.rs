@@ -1,0 +1,591 @@
+//! Configuration strategies: LEGEND and every baseline/ablation the
+//! paper evaluates (§6.1 Baselines, §6.3 Ablation, §2 pre-tests).
+//!
+//! A strategy decides, each round, which layers each device trains and
+//! at what ranks (widths, for the adapter family). Everything else —
+//! local training, aggregation, timing, traffic — is shared framework
+//! code in `server.rs`, so strategies differ *only* in the paper's
+//! actual design axes.
+
+use crate::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
+
+use super::capacity::Capacity;
+use super::lcd::{self, LcdDevice, LcdParams};
+
+/// Round context handed to strategies.
+#[derive(Debug, Clone)]
+pub struct StrategyCtx {
+    pub round: usize,
+    pub n_layers: usize,
+    /// Rank dimension of the active family (r_max or adapter w_max).
+    pub rank_dim: usize,
+    /// Per-device capacity estimates (eq. 8–9 output).
+    pub estimates: Vec<Capacity>,
+    /// Per-device forward time per batch [s].
+    pub fwd_times: Vec<f64>,
+    /// Per-device local batches per round.
+    pub n_batches: Vec<usize>,
+    pub unit_rank_bytes: usize,
+    /// Per-device budgets (eq. 14/15); f64::MAX / usize::MAX = unbound.
+    pub compute_budgets: Vec<f64>,
+    pub comm_budgets: Vec<usize>,
+    /// Mean local train loss per device last round (0 on round 1) —
+    /// feedback for search-based strategies (FedAdapter).
+    pub last_losses: Vec<f64>,
+    /// Virtual duration of the previous round [s].
+    pub last_round_time: f64,
+}
+
+impl StrategyCtx {
+    pub fn n_devices(&self) -> usize {
+        self.estimates.len()
+    }
+
+    fn lcd_devices(&self) -> Vec<LcdDevice> {
+        (0..self.n_devices())
+            .map(|i| LcdDevice {
+                capacity: self.estimates[i],
+                fwd_time: self.fwd_times[i],
+                n_batches: self.n_batches[i],
+                compute_budget: self.compute_budgets[i],
+                comm_budget: self.comm_budgets[i],
+                unit_rank_bytes: self.unit_rank_bytes,
+            })
+            .collect()
+    }
+
+    /// Reference completion times at full depth (for capability
+    /// ordering in HetLoRA / FedAdapter group assignment).
+    fn full_depth_times(&self, ranks: &[usize]) -> Vec<f64> {
+        self.lcd_devices()
+            .iter()
+            .map(|d| d.est_completion(self.n_layers, ranks))
+            .collect()
+    }
+}
+
+/// A per-round plan: one config per device + the mask to evaluate the
+/// aggregated global model under.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub device_configs: Vec<LoraConfig>,
+    pub eval_config: LoraConfig,
+}
+
+/// The strategy interface.
+pub trait Strategy {
+    fn name(&self) -> String;
+    /// "lora" or "adapter" — selects the artifact family.
+    fn family(&self) -> &'static str {
+        "lora"
+    }
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan;
+}
+
+// ---------------------------------------------------------------------------
+// LEGEND + ablations
+// ---------------------------------------------------------------------------
+
+/// Full LEGEND: LCD depths + arithmetic rank distribution (§4.4).
+pub struct Legend {
+    pub params: LcdParams,
+}
+
+impl Legend {
+    pub fn paper(n_layers: usize, r_max: usize) -> Self {
+        Legend { params: LcdParams::paper(n_layers, r_max) }
+    }
+}
+
+impl Strategy for Legend {
+    fn name(&self) -> String {
+        "LEGEND".into()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let device_configs = lcd::determine(&self.params, &ctx.lcd_devices());
+        let ranks = arithmetic_ranks(
+            self.params.n_layers,
+            self.params.lambda,
+            self.params.r0,
+            self.params.psi,
+            self.params.r_max,
+        );
+        Plan {
+            device_configs,
+            eval_config: LoraConfig { layers: LayerSet::All, ranks },
+        }
+    }
+}
+
+/// LEGEND w/o LoRA depth (§6.3): every device fine-tunes ALL layers
+/// with the arithmetic rank distribution.
+pub struct LegendNoLd {
+    pub params: LcdParams,
+}
+
+impl Strategy for LegendNoLd {
+    fn name(&self) -> String {
+        "LEGEND w/o LD".into()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let ranks = arithmetic_ranks(
+            self.params.n_layers,
+            self.params.lambda,
+            self.params.r0,
+            self.params.psi,
+            self.params.r_max,
+        );
+        let cfg = LoraConfig { layers: LayerSet::All, ranks };
+        Plan {
+            device_configs: vec![cfg.clone(); ctx.n_devices()],
+            eval_config: cfg,
+        }
+    }
+}
+
+/// LEGEND w/o rank distribution (§6.3): LCD depths but a uniform rank
+/// on every layer.
+pub struct LegendNoRd {
+    pub params: LcdParams,
+    pub rank: usize,
+}
+
+impl Strategy for LegendNoRd {
+    fn name(&self) -> String {
+        "LEGEND w/o RD".into()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let mut params = self.params.clone();
+        // Uniform distribution via λ=0, r0=rank; ψ must admit it.
+        params.lambda = 0;
+        params.r0 = self.rank;
+        params.psi = self.rank * params.n_layers;
+        let device_configs = lcd::determine(&params, &ctx.lcd_devices());
+        Plan {
+            device_configs,
+            eval_config: LoraConfig::uniform(
+                LayerSet::All,
+                self.rank,
+                self.params.n_layers,
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------------
+
+/// FedLoRA [20]: identical uniform-rank LoRA on all layers of all
+/// devices (vanilla).
+pub struct FedLora {
+    pub rank: usize,
+}
+
+impl Strategy for FedLora {
+    fn name(&self) -> String {
+        "FedLoRA".into()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let cfg =
+            LoraConfig::uniform(LayerSet::All, self.rank, ctx.n_layers);
+        Plan {
+            device_configs: vec![cfg.clone(); ctx.n_devices()],
+            eval_config: cfg,
+        }
+    }
+}
+
+/// HetLoRA [27]: all layers, per-device uniform rank matched to the
+/// device's capability (fast → high rank); zero-padded aggregation is
+/// handled by the slot-aware aggregator.
+pub struct HetLora {
+    pub min_rank: usize,
+    pub max_rank: usize,
+}
+
+impl Strategy for HetLora {
+    fn name(&self) -> String {
+        "HetLoRA".into()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let ref_ranks = vec![self.max_rank; ctx.n_layers];
+        let times = ctx.full_depth_times(&ref_ranks);
+        let t_max = times.iter().cloned().fold(f64::MIN, f64::max);
+        let t_min = times.iter().cloned().fold(f64::MAX, f64::min);
+        let span = (t_max - t_min).max(1e-12);
+        let device_configs = times
+            .iter()
+            .map(|&t| {
+                let frac = (t_max - t) / span; // 1 = fastest
+                let r = self.min_rank as f64
+                    + frac * (self.max_rank - self.min_rank) as f64;
+                LoraConfig::uniform(
+                    LayerSet::All,
+                    (r.round() as usize)
+                        .clamp(self.min_rank, self.max_rank),
+                    ctx.n_layers,
+                )
+            })
+            .collect();
+        Plan {
+            device_configs,
+            eval_config: LoraConfig::uniform(
+                LayerSet::All,
+                self.max_rank,
+                ctx.n_layers,
+            ),
+        }
+    }
+}
+
+/// FedAdapter [10]: adapter family with a progressive configuration
+/// search — device groups try candidate (depth, width) pairs, the PS
+/// scores candidates by loss-drop per virtual second and re-centers
+/// the candidate set every `window` rounds (the paper's dynamic
+/// "cascade" search, simplified but load-faithful: search overhead
+/// shows up as extra traffic + waiting exactly like in FedAdapter).
+pub struct FedAdapter {
+    pub candidates: Vec<(usize, usize)>,
+    pub window: usize,
+    pub w_max: usize,
+    /// (sum of loss drops, rounds) per candidate in current window.
+    scores: Vec<(f64, usize)>,
+    /// Device losses of the previous round per candidate slot.
+    last_assignment: Vec<usize>,
+    prev_losses: Vec<f64>,
+}
+
+impl FedAdapter {
+    pub fn paper(n_layers: usize, w_max: usize) -> Self {
+        let d = n_layers;
+        FedAdapter {
+            candidates: vec![
+                (2.min(d), 8),
+                (d / 2, 16),
+                (d, w_max.min(32)),
+            ],
+            window: 5,
+            w_max,
+            scores: vec![(0.0, 0); 3],
+            last_assignment: Vec::new(),
+            prev_losses: Vec::new(),
+        }
+    }
+
+    fn fold_feedback(&mut self, ctx: &StrategyCtx) {
+        if self.last_assignment.is_empty()
+            || self.prev_losses.len() != ctx.last_losses.len()
+        {
+            return;
+        }
+        for (i, &c) in self.last_assignment.iter().enumerate() {
+            let drop = self.prev_losses[i] - ctx.last_losses[i];
+            if drop.is_finite() {
+                self.scores[c].0 += drop;
+                self.scores[c].1 += 1;
+            }
+        }
+    }
+
+    fn recenter(&mut self, n_layers: usize) {
+        let best = self
+            .scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                let sa = a.1 .0 / (a.1 .1.max(1) as f64);
+                let sb = b.1 .0 / (b.1 .1.max(1) as f64);
+                sa.total_cmp(&sb)
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let (d, w) = self.candidates[best];
+        // Cascade: best, one deeper, one wider.
+        self.candidates = vec![
+            (d, w),
+            ((d + 2).min(n_layers), w),
+            (d, (w * 2).min(self.w_max)),
+        ];
+        self.scores = vec![(0.0, 0); self.candidates.len()];
+    }
+}
+
+impl Strategy for FedAdapter {
+    fn name(&self) -> String {
+        "FedAdapter".into()
+    }
+
+    fn family(&self) -> &'static str {
+        "adapter"
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        self.fold_feedback(ctx);
+        if ctx.round > 1 && ctx.round % self.window == 0 {
+            self.recenter(ctx.n_layers);
+        }
+        let n = ctx.n_devices();
+        let c = self.candidates.len();
+        let assignment: Vec<usize> = (0..n).map(|i| i % c).collect();
+        let device_configs = assignment
+            .iter()
+            .map(|&ci| {
+                let (depth, width) = self.candidates[ci];
+                LoraConfig::uniform(
+                    LayerSet::Depth(depth),
+                    width,
+                    ctx.n_layers,
+                )
+            })
+            .collect();
+        self.last_assignment = assignment;
+        self.prev_losses = ctx.last_losses.clone();
+        // Evaluate under the widest candidate's mask on all layers any
+        // group trained.
+        let max_w = self
+            .candidates
+            .iter()
+            .map(|&(_, w)| w)
+            .max()
+            .unwrap_or(8);
+        let max_d = self
+            .candidates
+            .iter()
+            .map(|&(d, _)| d)
+            .max()
+            .unwrap_or(ctx.n_layers);
+        Plan {
+            device_configs,
+            eval_config: LoraConfig::uniform(
+                LayerSet::Depth(max_d),
+                max_w,
+                ctx.n_layers,
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pre-test strategies (§2.2–2.4, Figs. 3–5)
+// ---------------------------------------------------------------------------
+
+/// Fixed layer set + uniform rank (Fig. 3 Layers-A/S/M/D; Fig. 4 depth
+/// sweep via `LayerSet::Depth(k)`).
+pub struct FixedLayers {
+    pub label: String,
+    pub layers: LayerSet,
+    pub rank: usize,
+}
+
+impl Strategy for FixedLayers {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let cfg = LoraConfig {
+            layers: self.layers.clone(),
+            ranks: vec![self.rank; ctx.n_layers],
+        };
+        Plan {
+            device_configs: vec![cfg.clone(); ctx.n_devices()],
+            eval_config: cfg,
+        }
+    }
+}
+
+/// Fixed explicit rank distribution over all layers (Fig. 5's
+/// Uniform / Inc / Dec variants).
+pub struct FixedRankDist {
+    pub label: String,
+    pub ranks: Vec<usize>,
+}
+
+impl FixedRankDist {
+    pub fn uniform(n_layers: usize, r: usize) -> Self {
+        FixedRankDist {
+            label: format!("Uniform-r{r}"),
+            ranks: vec![r; n_layers],
+        }
+    }
+
+    pub fn increasing(n_layers: usize, r_max: usize) -> Self {
+        FixedRankDist {
+            label: "Inc".into(),
+            ranks: (0..n_layers).map(|l| (l + 1).min(r_max)).collect(),
+        }
+    }
+
+    pub fn decreasing(n_layers: usize, r_max: usize) -> Self {
+        FixedRankDist {
+            label: "Dec".into(),
+            ranks: (0..n_layers)
+                .map(|l| (n_layers - l).min(r_max))
+                .collect(),
+        }
+    }
+}
+
+impl Strategy for FixedRankDist {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn configure(&mut self, ctx: &StrategyCtx) -> Plan {
+        let cfg = LoraConfig {
+            layers: LayerSet::All,
+            ranks: self.ranks.clone(),
+        };
+        Plan {
+            device_configs: vec![cfg.clone(); ctx.n_devices()],
+            eval_config: cfg,
+        }
+    }
+}
+
+/// Build a strategy by name (CLI / experiment harness entry point).
+pub fn by_name(name: &str, n_layers: usize, r_max: usize, w_max: usize)
+               -> Option<Box<dyn Strategy>> {
+    Some(match name {
+        "legend" => Box::new(Legend::paper(n_layers, r_max)),
+        "legend-no-ld" => {
+            Box::new(LegendNoLd { params: LcdParams::paper(n_layers, r_max) })
+        }
+        "legend-no-rd" => Box::new(LegendNoRd {
+            params: LcdParams::paper(n_layers, r_max),
+            rank: 8,
+        }),
+        "fedlora" => Box::new(FedLora { rank: 8 }),
+        "hetlora" => Box::new(HetLora { min_rank: 2, max_rank: 8 }),
+        "fedadapter" => Box::new(FedAdapter::paper(n_layers, w_max)),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(mus: &[f64]) -> StrategyCtx {
+        let n = mus.len();
+        StrategyCtx {
+            round: 1,
+            n_layers: 12,
+            rank_dim: 16,
+            estimates: mus
+                .iter()
+                .map(|&mu| Capacity { mu, beta: mu * 10.0 })
+                .collect(),
+            fwd_times: mus.iter().map(|&mu| mu * 3.0).collect(),
+            n_batches: vec![8; n],
+            unit_rank_bytes: 2048,
+            compute_budgets: vec![f64::MAX; n],
+            comm_budgets: vec![usize::MAX; n],
+            last_losses: vec![0.0; n],
+            last_round_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn legend_depths_track_capability() {
+        let mut s = Legend::paper(12, 16);
+        let plan = s.configure(&ctx(&[0.005, 0.05, 0.5]));
+        let d: Vec<usize> =
+            plan.device_configs.iter().map(|c| c.depth(12)).collect();
+        assert_eq!(d[0], 12);
+        assert!(d[2] < d[0]);
+        // eval config covers all layers.
+        assert_eq!(plan.eval_config.depth(12), 12);
+    }
+
+    #[test]
+    fn no_ld_gives_everyone_full_depth() {
+        let mut s =
+            LegendNoLd { params: LcdParams::paper(12, 16) };
+        let plan = s.configure(&ctx(&[0.005, 0.5]));
+        assert!(plan.device_configs.iter().all(|c| c.depth(12) == 12));
+        // …but increasing ranks survive.
+        let r = &plan.device_configs[0].ranks;
+        assert!(r.windows(2).all(|w| w[0] <= w[1]) && r[0] < r[11]);
+    }
+
+    #[test]
+    fn no_rd_gives_uniform_ranks_with_adaptive_depth() {
+        let mut s = LegendNoRd {
+            params: LcdParams::paper(12, 16),
+            rank: 8,
+        };
+        let plan = s.configure(&ctx(&[0.005, 0.5]));
+        assert!(plan
+            .device_configs
+            .iter()
+            .all(|c| c.ranks.iter().all(|&r| r == 8)));
+        let d: Vec<usize> =
+            plan.device_configs.iter().map(|c| c.depth(12)).collect();
+        assert!(d[1] < d[0]);
+    }
+
+    #[test]
+    fn fedlora_is_homogeneous() {
+        let mut s = FedLora { rank: 8 };
+        let plan = s.configure(&ctx(&[0.005, 0.5]));
+        assert_eq!(plan.device_configs[0], plan.device_configs[1]);
+        assert_eq!(plan.device_configs[0].depth(12), 12);
+        assert_eq!(plan.device_configs[0].total_rank(12), 96);
+    }
+
+    #[test]
+    fn hetlora_rank_tracks_capability() {
+        let mut s = HetLora { min_rank: 2, max_rank: 8 };
+        let plan = s.configure(&ctx(&[0.005, 0.05, 0.5]));
+        let r: Vec<usize> = plan
+            .device_configs
+            .iter()
+            .map(|c| c.ranks[0])
+            .collect();
+        assert_eq!(r[0], 8, "fastest gets max rank");
+        assert_eq!(r[2], 2, "slowest gets min rank");
+        assert!(r[1] >= 2 && r[1] <= 8);
+        assert!(plan
+            .device_configs
+            .iter()
+            .all(|c| c.depth(12) == 12));
+    }
+
+    #[test]
+    fn fedadapter_assigns_groups_and_recenters() {
+        let mut s = FedAdapter::paper(12, 32);
+        assert_eq!(s.family(), "adapter");
+        let mut c = ctx(&[0.01; 6]);
+        let plan = s.configure(&c);
+        // 3 candidates → devices 0..6 split into 3 groups of 2.
+        let cfgs = &plan.device_configs;
+        assert_eq!(cfgs[0], cfgs[3]);
+        assert_eq!(cfgs[1], cfgs[4]);
+        assert_ne!(cfgs[0], cfgs[1]);
+        // Feed back: candidate 1 shows the biggest loss drop.
+        c.round = 5;
+        c.last_losses = vec![1.0, 0.1, 1.0, 1.0, 0.1, 1.0];
+        s.prev_losses = vec![1.0; 6];
+        s.last_assignment = vec![0, 1, 2, 0, 1, 2];
+        let before = s.candidates.clone();
+        let _ = s.configure(&c);
+        assert_ne!(s.candidates, before, "window recenter must fire");
+        assert_eq!(s.candidates[0], before[1], "best candidate kept");
+    }
+
+    #[test]
+    fn by_name_covers_all_methods() {
+        for m in ["legend", "legend-no-ld", "legend-no-rd", "fedlora",
+                  "hetlora", "fedadapter"] {
+            assert!(by_name(m, 12, 16, 32).is_some(), "{m}");
+        }
+        assert!(by_name("nope", 12, 16, 32).is_none());
+    }
+}

@@ -1,0 +1,244 @@
+//! Local fine-tuning backends.
+//!
+//! [`PjrtTrainer`] is the real thing: it drives the AOT train/eval
+//! executables through the PJRT runtime, keeping per-device AdamW
+//! state and step counters across rounds (optimizer state is local to
+//! a device, as in FedNLP-style systems). [`MockTrainer`] is a
+//! deterministic stand-in used by coordinator unit/property tests and
+//! the L3-only benchmarks — it exercises the identical server code
+//! path with zero FLOPs.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::model::state::{init_opt, TensorMap};
+use crate::runtime::session::SessionState;
+use crate::runtime::{Masks, Runtime};
+use crate::util::rng::Rng;
+
+/// Result of one device's local epoch.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    pub trainable: TensorMap,
+    pub mean_loss: f64,
+    pub train_accuracy: f64,
+    pub n_steps: usize,
+}
+
+/// Local-training backend interface (real PJRT or mock).
+pub trait Trainer {
+    fn family(&self) -> &'static str;
+    fn batch_size(&self) -> usize;
+    /// Run one local epoch from `init`, under `masks`, over `shard`
+    /// (at most `max_batches` batches).
+    fn train_local(&mut self, device_id: usize, init: &TensorMap,
+                   masks: &Masks, shard: &Dataset, lr: f32,
+                   max_batches: usize) -> Result<LocalOutcome>;
+    /// Evaluate a global model on `ds`; returns (mean_loss, accuracy).
+    fn evaluate(&mut self, trainable: &TensorMap, masks: &Masks,
+                ds: &Dataset) -> Result<(f64, f64)>;
+}
+
+/// Real backend: PJRT executables, per-device optimizer state.
+pub struct PjrtTrainer<'a> {
+    rt: &'a Runtime,
+    family: &'static str,
+    opt: HashMap<usize, TensorMap>,
+    steps: HashMap<usize, f32>,
+    rng: Rng,
+}
+
+impl<'a> PjrtTrainer<'a> {
+    pub fn new(rt: &'a Runtime, family: &'static str, seed: u64) -> Self {
+        PjrtTrainer {
+            rt,
+            family,
+            opt: HashMap::new(),
+            steps: HashMap::new(),
+            rng: Rng::new(seed).child("trainer"),
+        }
+    }
+}
+
+impl Trainer for PjrtTrainer<'_> {
+    fn family(&self) -> &'static str {
+        self.family
+    }
+
+    fn batch_size(&self) -> usize {
+        self.rt.manifest.dim.batch_size
+    }
+
+    fn train_local(&mut self, device_id: usize, init: &TensorMap,
+                   masks: &Masks, shard: &Dataset, lr: f32,
+                   max_batches: usize) -> Result<LocalOutcome> {
+        let fam = self.rt.manifest.family(self.family).clone();
+        let opt = self
+            .opt
+            .entry(device_id)
+            .or_insert_with(|| init_opt(&fam));
+        let step = self.steps.entry(device_id).or_insert(0.0);
+
+        let mut session = SessionState::from_maps(init, opt)?;
+        let shuffled = shard.shuffled(&mut self.rng);
+        let batches = shuffled.batches(self.rt.manifest.dim.batch_size);
+        let n = batches.len().min(max_batches.max(1));
+        let (mut loss_sum, mut correct, mut seen) = (0f64, 0f64, 0usize);
+        for (toks, labels) in batches.iter().take(n) {
+            *step += 1.0;
+            let stats = self.rt.train_step(
+                self.family, &mut session, masks, toks, labels, lr, *step,
+            )?;
+            loss_sum += stats.loss as f64;
+            correct += stats.correct as f64;
+            seen += labels.len();
+        }
+        let (trainable, new_opt) = session.to_maps()?;
+        *opt = new_opt;
+        Ok(LocalOutcome {
+            trainable,
+            mean_loss: loss_sum / n as f64,
+            train_accuracy: correct / seen.max(1) as f64,
+            n_steps: n,
+        })
+    }
+
+    fn evaluate(&mut self, trainable: &TensorMap, masks: &Masks,
+                ds: &Dataset) -> Result<(f64, f64)> {
+        self.rt.evaluate(self.family, trainable, masks, ds)
+    }
+}
+
+/// Deterministic FLOP-free backend for tests/benches.
+///
+/// Training nudges active slots by a fixed delta and tracks a
+/// "progress" scalar per slot-mass trained; accuracy is a saturating
+/// function of progress, so more layers/ranks/steps → higher accuracy,
+/// mirroring the qualitative behaviour the coordinator cares about.
+pub struct MockTrainer {
+    family: &'static str,
+    batch: usize,
+    pub progress: f64,
+}
+
+impl MockTrainer {
+    pub fn new(family: &'static str) -> Self {
+        MockTrainer { family, batch: 4, progress: 0.0 }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        1.0 - 1.0 / (1.0 + 0.05 * self.progress)
+    }
+}
+
+impl Trainer for MockTrainer {
+    fn family(&self) -> &'static str {
+        self.family
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn train_local(&mut self, _device_id: usize, init: &TensorMap,
+                   masks: &Masks, shard: &Dataset, _lr: f32,
+                   max_batches: usize) -> Result<LocalOutcome> {
+        let mut out = init.clone();
+        let active: f64 =
+            masks.rank_mask.iter().map(|&m| m as f64).sum();
+        let n = shard
+            .len()
+            .div_ceil(self.batch)
+            .min(max_batches.max(1));
+        // Nudge every active-slot tensor deterministically.
+        for (_, v) in &mut out.entries {
+            for x in v.iter_mut() {
+                *x += 1e-3;
+            }
+        }
+        self.progress += active * n as f64 * 0.01;
+        Ok(LocalOutcome {
+            trainable: out,
+            mean_loss: 1.0 / (1.0 + 0.02 * self.progress),
+            train_accuracy: self.accuracy(),
+            n_steps: n,
+        })
+    }
+
+    fn evaluate(&mut self, _trainable: &TensorMap, _masks: &Masks,
+                _ds: &Dataset) -> Result<(f64, f64)> {
+        Ok((1.0 / (1.0 + 0.02 * self.progress), self.accuracy()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Example;
+    use crate::model::TensorSpec;
+
+    fn toy_dataset(n: usize) -> Dataset {
+        Dataset {
+            examples: (0..n)
+                .map(|i| Example {
+                    tokens: vec![1, 2, 3, 0],
+                    label: (i % 2) as i32,
+                })
+                .collect(),
+        }
+    }
+
+    fn toy_map() -> TensorMap {
+        TensorMap::zeros(&[TensorSpec {
+            name: "aq".into(),
+            shape: vec![2, 2, 2],
+        }])
+    }
+
+    #[test]
+    fn mock_trainer_progresses_monotonically() {
+        let mut t = MockTrainer::new("lora");
+        let ds = toy_dataset(16);
+        let masks = Masks {
+            rank_mask: vec![1.0; 4],
+            layer_mask: vec![1.0; 2],
+        };
+        let init = toy_map();
+        let o1 = t.train_local(0, &init, &masks, &ds, 1e-3, 100).unwrap();
+        let a1 = t.accuracy();
+        let o2 = t
+            .train_local(0, &o1.trainable, &masks, &ds, 1e-3, 100)
+            .unwrap();
+        assert!(o2.mean_loss < o1.mean_loss);
+        assert!(t.accuracy() > a1);
+        assert_eq!(o1.n_steps, 4);
+    }
+
+    #[test]
+    fn mock_trainer_respects_batch_cap() {
+        let mut t = MockTrainer::new("lora");
+        let ds = toy_dataset(64);
+        let masks = Masks {
+            rank_mask: vec![1.0; 4],
+            layer_mask: vec![1.0; 2],
+        };
+        let o = t
+            .train_local(0, &toy_map(), &masks, &ds, 1e-3, 3)
+            .unwrap();
+        assert_eq!(o.n_steps, 3);
+    }
+
+    #[test]
+    fn more_active_slots_progress_faster() {
+        let ds = toy_dataset(16);
+        let wide = Masks { rank_mask: vec![1.0; 8], layer_mask: vec![1.0; 2] };
+        let narrow = Masks { rank_mask: vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0], layer_mask: vec![1.0; 2] };
+        let mut a = MockTrainer::new("lora");
+        let mut b = MockTrainer::new("lora");
+        a.train_local(0, &toy_map(), &wide, &ds, 1e-3, 100).unwrap();
+        b.train_local(0, &toy_map(), &narrow, &ds, 1e-3, 100).unwrap();
+        assert!(a.accuracy() > b.accuracy());
+    }
+}

@@ -1,0 +1,183 @@
+//! Message-passing transport between the PS and devices.
+//!
+//! The paper's prototype uses MPI (`comm.send`/`comm.recv`, §5); here
+//! the devices are in-process, but every PS↔device exchange still goes
+//! through an explicit message layer with byte-exact accounting — the
+//! traffic numbers in Fig. 11 are message-level, so we count them at
+//! the same place the paper does. Payloads are the *logically
+//! transmitted* bytes: only a device's active LoRA slots travel (plus
+//! the head and a fixed-size status report), never the padded tensors.
+
+use crate::model::masks::LoraConfig;
+use crate::model::state::TensorMap;
+
+use super::serialize;
+
+/// Message kinds on the wire (mirrors the prototype's MPI tags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    /// PS → device: LoRA assignment (§4.6).
+    Assign,
+    /// device → PS: updated LoRA layers (§4.2).
+    Update,
+    /// device → PS: status report (μ̂, β̂) (§4.3).
+    Status,
+}
+
+/// One accounted message.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub tag: Tag,
+    pub device: usize,
+    pub round: usize,
+    pub bytes: usize,
+}
+
+/// Per-round, per-direction byte tallies.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Tally {
+    pub downlink: usize,
+    pub uplink: usize,
+    pub messages: usize,
+}
+
+/// The PS-side transport endpoint.
+#[derive(Debug, Default)]
+pub struct Transport {
+    round: usize,
+    current: Tally,
+    total: Tally,
+    /// Optional message log (enabled for tests/debugging).
+    pub log: Option<Vec<Message>>,
+}
+
+/// Size of a status report: two f64 measurements + ids/padding,
+/// matching a small fixed MPI payload.
+pub const STATUS_BYTES: usize = 32;
+
+impl Transport {
+    pub fn new() -> Self {
+        Transport::default()
+    }
+
+    pub fn with_log() -> Self {
+        Transport { log: Some(Vec::new()), ..Default::default() }
+    }
+
+    pub fn begin_round(&mut self, round: usize) {
+        self.round = round;
+        self.current = Tally::default();
+    }
+
+    fn record(&mut self, tag: Tag, device: usize, bytes: usize,
+              uplink: bool) {
+        if uplink {
+            self.current.uplink += bytes;
+            self.total.uplink += bytes;
+        } else {
+            self.current.downlink += bytes;
+            self.total.downlink += bytes;
+        }
+        self.current.messages += 1;
+        self.total.messages += 1;
+        if let Some(log) = &mut self.log {
+            log.push(Message { tag, device, round: self.round, bytes });
+        }
+    }
+
+    /// PS → device: assign the active LoRA slots + head (§4.6).
+    /// Returns the payload so callers can hand it to the device.
+    pub fn send_assignment(&mut self, device: usize, global: &TensorMap,
+                           config: &LoraConfig, n_layers: usize,
+                           rank_dim: usize) -> TensorMap {
+        let bytes = serialize::active_payload_bytes(
+            global, config, n_layers, rank_dim);
+        self.record(Tag::Assign, device, bytes, false);
+        // In-process "wire": the device works on its own copy.
+        global.clone()
+    }
+
+    /// device → PS: upload the updated active slots.
+    pub fn recv_update(&mut self, device: usize, update: &TensorMap,
+                       config: &LoraConfig, n_layers: usize,
+                       rank_dim: usize) -> usize {
+        let bytes = serialize::active_payload_bytes(
+            update, config, n_layers, rank_dim);
+        self.record(Tag::Update, device, bytes, true);
+        bytes
+    }
+
+    /// device → PS: status report (μ̂, β̂).
+    pub fn recv_status(&mut self, device: usize) {
+        self.record(Tag::Status, device, STATUS_BYTES, true);
+    }
+
+    pub fn round_tally(&self) -> Tally {
+        self.current
+    }
+
+    pub fn total_tally(&self) -> Tally {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::masks::LayerSet;
+    use crate::model::TensorSpec;
+
+    const L: usize = 4;
+    const R: usize = 3;
+
+    fn global() -> TensorMap {
+        TensorMap::zeros(&[
+            TensorSpec { name: "aq".into(), shape: vec![L, R, 2] },
+            TensorSpec { name: "head_w".into(), shape: vec![2, 2] },
+        ])
+    }
+
+    fn cfg(depth: usize) -> LoraConfig {
+        LoraConfig { layers: LayerSet::Depth(depth), ranks: vec![2; L] }
+    }
+
+    #[test]
+    fn tallies_conserve_and_split_by_direction() {
+        let mut t = Transport::with_log();
+        t.begin_round(1);
+        let g = global();
+        let c = cfg(2);
+        let payload = t.send_assignment(0, &g, &c, L, R);
+        assert_eq!(payload.numel(), g.numel());
+        t.recv_status(0);
+        let up = t.recv_update(0, &g, &c, L, R);
+        let tally = t.round_tally();
+        assert_eq!(tally.downlink, up, "symmetric assign/update payload");
+        assert_eq!(tally.uplink, up + STATUS_BYTES);
+        assert_eq!(tally.messages, 3);
+        assert_eq!(t.log.as_ref().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn deeper_config_costs_more_bytes() {
+        let mut t = Transport::new();
+        t.begin_round(1);
+        let g = global();
+        let _ = t.send_assignment(0, &g, &cfg(1), L, R);
+        let shallow = t.round_tally().downlink;
+        t.begin_round(2);
+        let _ = t.send_assignment(0, &g, &cfg(4), L, R);
+        let deep = t.round_tally().downlink;
+        assert!(deep > shallow);
+    }
+
+    #[test]
+    fn begin_round_resets_current_not_total() {
+        let mut t = Transport::new();
+        t.begin_round(1);
+        t.recv_status(0);
+        t.begin_round(2);
+        assert_eq!(t.round_tally(), Tally::default());
+        assert_eq!(t.total_tally().uplink, STATUS_BYTES);
+    }
+}

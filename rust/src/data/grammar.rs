@@ -1,0 +1,205 @@
+//! Synthetic task generators — the rust implementation of the grammar
+//! spec in `artifacts/vocab.json` (authored in python/compile/configs.py,
+//! mirrored by python/compile/datagen.py for the pretraining corpus).
+//!
+//! Three grammar kinds (DESIGN.md §2):
+//!  * `single` — CLS + shuffled mix of k label-bank words and
+//!    background (80% filler / 20% noise) words;
+//!  * `pair`   — CLS + filler premise + SEP + hypothesis carrying the
+//!    label-bank words (forces attention across the separator);
+//!  * `arith`  — CLS d1 + d2 + d3 SEP with label = Σdᵢ mod n_classes
+//!    (gsm-syn: the model must actually add — slow convergence, like
+//!    GSM-8K in the paper's Fig. 10).
+
+use super::{Dataset, Example, Kind, Spec, TaskSpec};
+use crate::util::rng::Rng;
+
+fn bg_word(spec: &Spec, rng: &mut Rng) -> i32 {
+    let (lo, hi) = if rng.bernoulli(0.8) { spec.filler } else { spec.noise };
+    rng.range(lo, hi) as i32
+}
+
+fn sample_single(spec: &Spec, task: &TaskSpec, label: usize,
+                 rng: &mut Rng) -> Vec<i32> {
+    let len = rng.range_incl(task.len_range.0, task.len_range.1);
+    let k = rng.range_incl(task.bank_words.0, task.bank_words.1);
+    let (blo, bhi) = task.banks[label];
+    let mut words: Vec<i32> = (0..k).map(|_| rng.range(blo, bhi) as i32)
+        .collect();
+    for _ in 0..len.saturating_sub(k) {
+        words.push(bg_word(spec, rng));
+    }
+    rng.shuffle(&mut words);
+    let mut toks = vec![spec.cls];
+    toks.extend(words);
+    toks
+}
+
+fn sample_pair(spec: &Spec, task: &TaskSpec, label: usize,
+               rng: &mut Rng) -> Vec<i32> {
+    let prem_len = rng.range_incl(task.len_range.0, task.len_range.1);
+    let hyp_len = rng.range_incl(task.len_range.0, task.len_range.1);
+    let k = rng.range_incl(task.bank_words.0, task.bank_words.1);
+    let (blo, bhi) = task.banks[label];
+    let mut hyp: Vec<i32> =
+        (0..k).map(|_| rng.range(blo, bhi) as i32).collect();
+    for _ in 0..hyp_len.saturating_sub(k) {
+        hyp.push(bg_word(spec, rng));
+    }
+    rng.shuffle(&mut hyp);
+    let mut toks = vec![spec.cls];
+    for _ in 0..prem_len {
+        toks.push(bg_word(spec, rng));
+    }
+    toks.push(spec.sep);
+    toks.extend(hyp);
+    toks
+}
+
+fn sample_arith(spec: &Spec, digits: &[usize], ops: &[usize],
+                n_terms: usize, n_classes: usize,
+                rng: &mut Rng) -> (Vec<i32>, usize) {
+    let plus = ops[0] as i32;
+    let mut toks = vec![spec.cls];
+    let mut sum = 0usize;
+    for i in 0..n_terms {
+        if i > 0 {
+            toks.push(plus);
+        }
+        let d = rng.range(0, 10);
+        sum += d;
+        toks.push(digits[0] as i32 + d as i32);
+    }
+    toks.push(spec.sep);
+    (toks, sum % n_classes)
+}
+
+/// One (tokens, label) example, PADed/truncated to `spec.seq_len`.
+pub fn sample_example(spec: &Spec, task: &TaskSpec,
+                      rng: &mut Rng) -> Example {
+    let (mut toks, mut label) = match &task.kind {
+        Kind::Arith { digits, ops, n_terms } => {
+            sample_arith(spec, digits, ops, *n_terms, task.n_classes, rng)
+        }
+        kind => {
+            let label = rng.range(0, task.n_classes);
+            let toks = match kind {
+                Kind::Single => sample_single(spec, task, label, rng),
+                Kind::Pair => sample_pair(spec, task, label, rng),
+                Kind::Arith { .. } => unreachable!(),
+            };
+            (toks, label)
+        }
+    };
+    if rng.bernoulli(task.label_noise) {
+        label = rng.range(0, task.n_classes);
+    }
+    toks.truncate(spec.seq_len);
+    while toks.len() < spec.seq_len {
+        toks.push(spec.pad);
+    }
+    Example { tokens: toks, label: label as i32 }
+}
+
+/// Generate a labeled dataset of `n` examples for `task_name`.
+pub fn generate(spec: &Spec, task_name: &str, n: usize,
+                rng: &mut Rng) -> Result<Dataset, super::DataError> {
+    let task = spec.task(task_name)?.clone();
+    let examples = (0..n).map(|_| sample_example(spec, &task, rng)).collect();
+    Ok(Dataset { examples })
+}
+
+/// Train/test split sizes per task, scaled from the paper's Table 2
+/// (proportions preserved; absolute sizes scaled to the simulator).
+pub fn paper_scaled_sizes(task: &str, scale: f64) -> (usize, usize) {
+    let (train, test) = match task {
+        "sst2" => (67_349, 1_821),
+        "qnli" => (104_743, 5_463),
+        "qqp" => (363_846, 40_430),
+        "mnli" => (392_702, 9_815),
+        "gsm" => (7_473, 1_319),
+        "mmlu" => (20_000, 2_000),
+        _ => (10_000, 1_000),
+    };
+    (
+        ((train as f64 * scale) as usize).max(64),
+        ((test as f64 * scale) as usize).max(64),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tests::test_spec;
+
+    #[test]
+    fn examples_are_padded_and_in_vocab() {
+        let spec = test_spec();
+        let mut rng = Rng::new(1);
+        let ds = generate(&spec, "sst2", 200, &mut rng).unwrap();
+        assert_eq!(ds.len(), 200);
+        for ex in &ds.examples {
+            assert_eq!(ex.tokens.len(), spec.seq_len);
+            assert_eq!(ex.tokens[0], spec.cls);
+            assert!(ex
+                .tokens
+                .iter()
+                .all(|&t| (t as usize) < spec.vocab_size));
+            assert!((0..2).contains(&ex.label));
+        }
+    }
+
+    #[test]
+    fn single_examples_contain_bank_words_of_label() {
+        let spec = test_spec();
+        let task = spec.task("sst2").unwrap().clone();
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let ex = sample_example(&spec, &task, &mut rng);
+            let (blo, bhi) = task.banks[ex.label as usize];
+            let hits = ex
+                .tokens
+                .iter()
+                .filter(|&&t| (t as usize) >= blo && (t as usize) < bhi)
+                .count();
+            assert!(hits >= 2, "expected ≥2 bank words, got {hits}");
+        }
+    }
+
+    #[test]
+    fn arith_label_is_sum_mod_classes() {
+        let spec = test_spec();
+        let task = spec.task("gsm").unwrap().clone();
+        let mut rng = Rng::new(3);
+        let d0 = match &task.kind {
+            Kind::Arith { digits, .. } => digits[0] as i32,
+            _ => unreachable!(),
+        };
+        for _ in 0..200 {
+            let ex = sample_example(&spec, &task, &mut rng);
+            let sum: i32 = ex
+                .tokens
+                .iter()
+                .filter(|&&t| t >= d0 && t < d0 + 10)
+                .map(|&t| t - d0)
+                .sum();
+            assert_eq!(ex.label, sum % task.n_classes as i32);
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let spec = test_spec();
+        let mut rng = Rng::new(4);
+        let ds = generate(&spec, "sst2", 2000, &mut rng).unwrap();
+        let h = ds.label_histogram(2);
+        assert!(h[0] > 800 && h[1] > 800, "{h:?}");
+    }
+
+    #[test]
+    fn scaled_sizes_preserve_ordering() {
+        let (sst_tr, _) = paper_scaled_sizes("sst2", 0.01);
+        let (qqp_tr, _) = paper_scaled_sizes("qqp", 0.01);
+        assert!(qqp_tr > sst_tr);
+    }
+}

@@ -1,0 +1,267 @@
+//! The 80-device heterogeneous fleet (§6.1).
+//!
+//! Composition follows the paper: 30 Jetson TX2 + 40 Jetson NX + 10
+//! Jetson AGX, shuffled into four WiFi groups of 20. DVFS modes are
+//! resampled every `mode_reshuffle_rounds` (=20) rounds to reflect
+//! resources varying over time; WiFi fading advances every round.
+//! Devices also report *measured* μ̂/β̂ with observation noise so the
+//! PS-side capacity estimator (eq. 8–9) has real work to do.
+
+use super::network::NetworkModel;
+use super::profile::{ComputeProfile, DeviceClass};
+use crate::util::rng::Rng;
+
+/// Fleet construction parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub n_tx2: usize,
+    pub n_nx: usize,
+    pub n_agx: usize,
+    /// Rounds between DVFS mode resampling (§6.1: every 20 rounds).
+    pub mode_reshuffle_rounds: usize,
+    /// Relative std-dev of the measurement noise on reported μ̂/β̂.
+    pub obs_noise: f64,
+    pub seed: u64,
+}
+
+impl FleetConfig {
+    /// The paper's 80-device testbed.
+    pub fn paper() -> Self {
+        FleetConfig {
+            n_tx2: 30,
+            n_nx: 40,
+            n_agx: 10,
+            mode_reshuffle_rounds: 20,
+            obs_noise: 0.05,
+            seed: 1,
+        }
+    }
+
+    /// The 10-device pre-test setup used for Figs. 3–5 (§2.2).
+    pub fn pretest() -> Self {
+        FleetConfig { n_tx2: 4, n_nx: 4, n_agx: 2, ..Self::paper() }
+    }
+
+    /// Arbitrary size, class mix proportional to the paper's.
+    pub fn sized(n: usize) -> Self {
+        let n_tx2 = (n * 30) / 80;
+        let n_agx = ((n * 10) / 80).max(1);
+        let n_nx = n - n_tx2 - n_agx;
+        FleetConfig { n_tx2, n_nx, n_agx, ..Self::paper() }
+    }
+
+    pub fn total(&self) -> usize {
+        self.n_tx2 + self.n_nx + self.n_agx
+    }
+}
+
+/// One simulated device.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub compute: ComputeProfile,
+    pub net: NetworkModel,
+}
+
+impl Device {
+    /// True μ [s/layer/batch] — ground truth the estimator chases.
+    pub fn true_mu(&self) -> f64 {
+        self.compute.mu()
+    }
+
+    /// Measured μ̂ with observation noise (what the device reports).
+    pub fn measured_mu(&self, rng: &mut Rng, noise: f64) -> f64 {
+        self.true_mu() * (1.0 + noise * rng.normal()).max(0.1)
+    }
+
+    /// True β [s per unit-rank LoRA layer].
+    pub fn true_beta(&self, unit_rank_bytes: usize) -> f64 {
+        self.net.beta(unit_rank_bytes)
+    }
+
+    pub fn measured_beta(&self, unit_rank_bytes: usize, rng: &mut Rng,
+                         noise: f64) -> f64 {
+        self.true_beta(unit_rank_bytes) * (1.0 + noise * rng.normal()).max(0.1)
+    }
+}
+
+/// The simulated population.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub devices: Vec<Device>,
+    pub config: FleetConfig,
+    rng: Rng,
+    round: usize,
+}
+
+impl Fleet {
+    pub fn new(config: FleetConfig) -> Fleet {
+        let mut rng = Rng::new(config.seed).child("fleet");
+        let mut classes = Vec::with_capacity(config.total());
+        classes.extend(std::iter::repeat(DeviceClass::Tx2).take(config.n_tx2));
+        classes.extend(std::iter::repeat(DeviceClass::Nx).take(config.n_nx));
+        classes.extend(std::iter::repeat(DeviceClass::Agx).take(config.n_agx));
+        // Randomly shuffle devices into WiFi groups (§6.1).
+        rng.shuffle(&mut classes);
+        let n = classes.len();
+        let devices = classes
+            .into_iter()
+            .enumerate()
+            .map(|(id, class)| {
+                let mode = rng.range(0, class.n_modes());
+                // Equal-size groups: 4 groups of n/4 (paper: 4 × 20).
+                let group = (id * 4) / n.max(1);
+                Device {
+                    id,
+                    compute: ComputeProfile::new(class, mode),
+                    net: NetworkModel::new(group.min(3), &mut rng),
+                }
+            })
+            .collect();
+        Fleet { devices, config, rng, round: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Advance to the next round: WiFi fading every round, DVFS mode
+    /// resample every `mode_reshuffle_rounds`.
+    pub fn advance_round(&mut self) {
+        self.round += 1;
+        let reshuffle = self.config.mode_reshuffle_rounds > 0
+            && self.round % self.config.mode_reshuffle_rounds == 0;
+        for d in &mut self.devices {
+            d.net.step(&mut self.rng);
+            if reshuffle {
+                let m = d.compute.class.n_modes();
+                d.compute.mode = self.rng.range(0, m);
+            }
+        }
+    }
+
+    /// Noisy status report (μ̂, β̂) for device `i` this round.
+    pub fn observe(&mut self, i: usize, unit_rank_bytes: usize)
+                   -> (f64, f64) {
+        let noise = self.config.obs_noise;
+        let d = &self.devices[i];
+        let mu = d.true_mu() * (1.0 + noise * self.rng.normal()).max(0.1);
+        let beta = d.true_beta(unit_rank_bytes)
+            * (1.0 + noise * self.rng.normal()).max(0.1);
+        (mu, beta)
+    }
+
+    /// Table 1-style description (used by `legend fleet --describe`).
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "class              count  AI perf      GPU              modes\n");
+        for class in DeviceClass::ALL {
+            let count =
+                self.devices.iter().filter(|d| d.compute.class == class)
+                    .count();
+            out.push_str(&format!(
+                "{:<18} {:>5}  {:<11} {:<16} {}\n",
+                class.name(),
+                count,
+                match class {
+                    DeviceClass::Tx2 => "1.33 TFLOPS",
+                    DeviceClass::Nx => "21 TOPS",
+                    DeviceClass::Agx => "22 TOPS",
+                },
+                class.gpu(),
+                class.n_modes(),
+            ));
+        }
+        let mus: Vec<f64> =
+            self.devices.iter().map(|d| d.true_mu()).collect();
+        let (mn, mx) = (
+            mus.iter().cloned().fold(f64::MAX, f64::min),
+            mus.iter().cloned().fold(0.0, f64::max),
+        );
+        out.push_str(&format!(
+            "μ spread: {:.1} ms .. {:.1} ms ({:.0}×)\n",
+            mn * 1e3,
+            mx * 1e3,
+            mx / mn
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fleet_composition() {
+        let f = Fleet::new(FleetConfig::paper());
+        assert_eq!(f.len(), 80);
+        let count = |c: DeviceClass| {
+            f.devices.iter().filter(|d| d.compute.class == c).count()
+        };
+        assert_eq!(count(DeviceClass::Tx2), 30);
+        assert_eq!(count(DeviceClass::Nx), 40);
+        assert_eq!(count(DeviceClass::Agx), 10);
+        // Four equal groups.
+        for g in 0..4 {
+            assert_eq!(
+                f.devices.iter().filter(|d| d.net.group == g).count(),
+                20
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Fleet::new(FleetConfig::paper());
+        let b = Fleet::new(FleetConfig::paper());
+        for (x, y) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(x.compute.class, y.compute.class);
+            assert_eq!(x.compute.mode, y.compute.mode);
+        }
+    }
+
+    #[test]
+    fn modes_reshuffle_on_schedule() {
+        let mut f = Fleet::new(FleetConfig::paper());
+        let before: Vec<usize> =
+            f.devices.iter().map(|d| d.compute.mode).collect();
+        for _ in 0..19 {
+            f.advance_round();
+        }
+        let mid: Vec<usize> =
+            f.devices.iter().map(|d| d.compute.mode).collect();
+        assert_eq!(before, mid, "modes must hold for 19 rounds");
+        f.advance_round(); // round 20 → reshuffle
+        let after: Vec<usize> =
+            f.devices.iter().map(|d| d.compute.mode).collect();
+        assert_ne!(before, after, "modes must reshuffle at round 20");
+    }
+
+    #[test]
+    fn observation_noise_centered_on_truth() {
+        let mut f = Fleet::new(FleetConfig::pretest());
+        let truth = f.devices[0].true_mu();
+        let n = 2000;
+        let mean: f64 = (0..n)
+            .map(|_| f.observe(0, 1024).0)
+            .sum::<f64>()
+            / n as f64;
+        assert!(
+            (mean / truth - 1.0).abs() < 0.02,
+            "mean {mean} vs truth {truth}"
+        );
+    }
+
+    #[test]
+    fn sized_fleet_has_requested_total() {
+        for n in [10, 16, 40, 80] {
+            assert_eq!(Fleet::new(FleetConfig::sized(n)).len(), n);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Heterogeneous device simulation.
+//!
+//! The paper's testbed is 80 NVIDIA Jetson kits (30 TX2 / 40 NX / 10
+//! AGX, Table 1) with DVFS modes reshuffled every 20 rounds and WiFi
+//! links whose bandwidth fluctuates between 1 and 30 Mb/s (§6.1).
+//! Offline we reproduce that testbed as a calibrated simulator
+//! (DESIGN.md §2–3): [`profile`] models per-device compute (μ, t̂ of
+//! eq. 12), [`network`] models the WiFi uplink (β of eq. 12), and
+//! [`fleet`] assembles the 80-device population. Gradient *math* runs
+//! for real through the PJRT runtime; *time* comes from here.
+
+pub mod fleet;
+pub mod network;
+pub mod profile;
+
+pub use fleet::{Device, Fleet, FleetConfig};
+pub use network::NetworkModel;
+pub use profile::{ComputeProfile, DeviceClass};

@@ -1,0 +1,146 @@
+//! WiFi uplink model.
+//!
+//! §6.1: devices sit in four groups at 2/8/14/20 m from the routers;
+//! iperf3-measured bandwidth fluctuates between 1 and 30 Mb/s from
+//! channel noise and contention. We model each device's uplink as an
+//! AR(1) process in log-bandwidth around a distance-dependent mean
+//! (log-distance path loss), clipped to the measured [1, 30] Mb/s
+//! envelope. Upload dominates (the paper only models upload time β).
+
+use crate::util::rng::Rng;
+
+/// Distances of the four WiFi groups [m] (§6.1).
+pub const GROUP_DISTANCES_M: [f64; 4] = [2.0, 8.0, 14.0, 20.0];
+
+/// Envelope measured by iperf3 in the paper [Mb/s].
+pub const BW_MIN_MBPS: f64 = 1.0;
+pub const BW_MAX_MBPS: f64 = 30.0;
+
+/// Path-loss exponent for the mean-bandwidth vs distance curve.
+const PATH_LOSS_EXP: f64 = 0.9;
+/// AR(1) persistence of log-bandwidth between rounds.
+const AR_RHO: f64 = 0.7;
+/// Innovation std-dev of log-bandwidth (≈ ±40% swings round-to-round).
+const AR_SIGMA: f64 = 0.35;
+
+/// Mean uplink bandwidth at a given router distance [Mb/s].
+pub fn mean_bandwidth_mbps(distance_m: f64) -> f64 {
+    let bw = BW_MAX_MBPS * (distance_m / GROUP_DISTANCES_M[0])
+        .powf(-PATH_LOSS_EXP);
+    bw.clamp(BW_MIN_MBPS, BW_MAX_MBPS)
+}
+
+/// Per-device AR(1) fading state.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// WiFi group index (0..4).
+    pub group: usize,
+    log_mean: f64,
+    log_bw: f64,
+}
+
+impl NetworkModel {
+    pub fn new(group: usize, rng: &mut Rng) -> Self {
+        assert!(group < GROUP_DISTANCES_M.len());
+        let log_mean = mean_bandwidth_mbps(GROUP_DISTANCES_M[group]).ln();
+        // Start at steady state.
+        let stationary_sigma =
+            AR_SIGMA / (1.0 - AR_RHO * AR_RHO).sqrt();
+        let log_bw = log_mean + stationary_sigma * rng.normal();
+        NetworkModel { group, log_mean, log_bw }
+    }
+
+    /// Advance one round of fading; returns the new bandwidth [Mb/s].
+    pub fn step(&mut self, rng: &mut Rng) -> f64 {
+        self.log_bw = AR_RHO * self.log_bw
+            + (1.0 - AR_RHO) * self.log_mean
+            + AR_SIGMA * rng.normal();
+        self.bandwidth_mbps()
+    }
+
+    /// Current uplink bandwidth [Mb/s], clipped to the iperf3 envelope.
+    pub fn bandwidth_mbps(&self) -> f64 {
+        self.log_bw.exp().clamp(BW_MIN_MBPS, BW_MAX_MBPS)
+    }
+
+    /// Time to upload `bytes` at the current bandwidth [s].
+    pub fn upload_time_s(&self, bytes: usize) -> f64 {
+        (bytes as f64 * 8.0) / (self.bandwidth_mbps() * 1e6)
+    }
+
+    /// β of eq. (12): upload time for ONE unit-rank LoRA layer [s].
+    pub fn beta(&self, unit_rank_bytes: usize) -> f64 {
+        self.upload_time_s(unit_rank_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_bandwidth_decreases_with_distance() {
+        let bws: Vec<f64> = GROUP_DISTANCES_M
+            .iter()
+            .map(|&d| mean_bandwidth_mbps(d))
+            .collect();
+        for w in bws.windows(2) {
+            assert!(w[0] > w[1], "{bws:?}");
+        }
+        assert!(bws[0] <= BW_MAX_MBPS && bws[3] >= BW_MIN_MBPS);
+    }
+
+    #[test]
+    fn fading_stays_in_envelope() {
+        let mut rng = Rng::new(11);
+        for group in 0..4 {
+            let mut net = NetworkModel::new(group, &mut rng);
+            for _ in 0..500 {
+                let bw = net.step(&mut rng);
+                assert!((BW_MIN_MBPS..=BW_MAX_MBPS).contains(&bw));
+            }
+        }
+    }
+
+    #[test]
+    fn fading_is_temporally_correlated() {
+        let mut rng = Rng::new(12);
+        let mut net = NetworkModel::new(1, &mut rng);
+        let xs: Vec<f64> =
+            (0..2000).map(|_| net.step(&mut rng).ln()).collect();
+        let n = xs.len() - 1;
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..n {
+            num += (xs[i] - mean) * (xs[i + 1] - mean);
+        }
+        for x in &xs {
+            den += (x - mean) * (x - mean);
+        }
+        let rho = num / den;
+        assert!(rho > 0.4, "lag-1 autocorr {rho} too low for AR(1)");
+    }
+
+    #[test]
+    fn upload_time_scales_with_bytes() {
+        let mut rng = Rng::new(13);
+        let net = NetworkModel::new(0, &mut rng);
+        let t1 = net.upload_time_s(1_000_000);
+        let t2 = net.upload_time_s(2_000_000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn near_group_faster_than_far_group_on_average() {
+        let mut rng = Rng::new(14);
+        let mut near = NetworkModel::new(0, &mut rng);
+        let mut far = NetworkModel::new(3, &mut rng);
+        let (mut a, mut b) = (0.0, 0.0);
+        for _ in 0..300 {
+            a += near.step(&mut rng);
+            b += far.step(&mut rng);
+        }
+        assert!(a > b, "near {a} should beat far {b}");
+    }
+}

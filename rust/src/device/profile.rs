@@ -1,0 +1,200 @@
+//! Per-device compute model, calibrated to the paper's measurements.
+//!
+//! Table 1 gives the device classes; §6.1 states the spread between
+//! the fastest (AGX mode 0) and slowest (TX2 lowest mode) reaches
+//! ~100×. Fig. 4 calibrates the absolute scale: on the reference
+//! device each additional LoRA layer costs ≈5 ms per batch (backprop)
+//! and ≈107 MB of memory, and depth 12 vs depth 1 is a 252% latency
+//! increase — which pins forward ≈ backward-per-layer ratios.
+
+/// Jetson device class (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    Tx2,
+    Nx,
+    Agx,
+}
+
+impl DeviceClass {
+    pub const ALL: [DeviceClass; 3] =
+        [DeviceClass::Tx2, DeviceClass::Nx, DeviceClass::Agx];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceClass::Tx2 => "Jetson TX2",
+            DeviceClass::Nx => "Jetson NX",
+            DeviceClass::Agx => "Jetson AGX Xavier",
+        }
+    }
+
+    /// Relative AI performance (Table 1: 1.33 TFLOPS / 21 TOPS /
+    /// 22 TOPS), normalized to AGX = 1.0.
+    pub fn rel_perf(self) -> f64 {
+        match self {
+            DeviceClass::Tx2 => 1.33 / 22.0,
+            DeviceClass::Nx => 21.0 / 22.0,
+            DeviceClass::Agx => 1.0,
+        }
+    }
+
+    /// Number of configurable DVFS power modes (§6.1: TX2 has 4,
+    /// NX/AGX have 8).
+    pub fn n_modes(self) -> usize {
+        match self {
+            DeviceClass::Tx2 => 4,
+            DeviceClass::Nx => 8,
+            DeviceClass::Agx => 8,
+        }
+    }
+
+    pub fn gpu(self) -> &'static str {
+        match self {
+            DeviceClass::Tx2 => "256-core Pascal",
+            DeviceClass::Nx => "384-core Volta",
+            DeviceClass::Agx => "512-core Volta",
+        }
+    }
+
+    pub fn cpu(self) -> &'static str {
+        match self {
+            DeviceClass::Tx2 => "Denver 2 and ARM 4",
+            DeviceClass::Nx => "6-core Carmel ARM 8",
+            DeviceClass::Agx => "8-core Carmel ARM 8",
+        }
+    }
+
+    pub fn rom(self) -> &'static str {
+        match self {
+            DeviceClass::Tx2 => "8 GB LPDDR4",
+            DeviceClass::Nx => "8 GB LPDDR4x",
+            DeviceClass::Agx => "32 GB LPDDR4x",
+        }
+    }
+}
+
+/// Calibration constants (DESIGN.md §3, from Fig. 4).
+pub mod calib {
+    /// Per-LoRA-layer backprop time on AGX mode 0 [s] (Fig. 4a: ≈5 ms
+    /// per extra layer).
+    pub const MU_REF_S: f64 = 0.005;
+    /// Forward-pass time per transformer layer relative to one layer's
+    /// backprop μ. Depth 1 → 12 is a 252% latency increase (Fig. 4a):
+    /// lat(k) = L·fwd + k·μ; (12f·L? ) solving 12μ·? — with L=12,
+    /// (FWD·12 + 12μ)/(FWD·12 + μ) = 3.52 → FWD ≈ 0.26·μ.
+    pub const FWD_FRAC: f64 = 0.26;
+    /// Memory per additional LoRA layer [MB] (Fig. 4b).
+    pub const MEM_PER_LAYER_MB: f64 = 107.0;
+    /// Baseline memory (frozen model + activations) [MB]; Fig. 4b's
+    /// depth-12 total is 221% over depth-1, pinning the base.
+    pub const MEM_BASE_MB: f64 = 530.0;
+    /// Slowest-mode slowdown factor (so AGX mode 0 vs TX2 lowest mode
+    /// reaches the ~100× the paper reports: 16.5× class × 6× mode).
+    pub const MODE_SPREAD: f64 = 6.0;
+}
+
+/// Per-device compute state: class + current DVFS mode.
+#[derive(Debug, Clone)]
+pub struct ComputeProfile {
+    pub class: DeviceClass,
+    pub mode: usize,
+}
+
+impl ComputeProfile {
+    pub fn new(class: DeviceClass, mode: usize) -> Self {
+        assert!(mode < class.n_modes(), "mode {mode} out of range");
+        ComputeProfile { class, mode }
+    }
+
+    /// Slowdown multiplier of the current DVFS mode (mode 0 = 1.0,
+    /// highest mode = `MODE_SPREAD`), geometric interpolation.
+    pub fn mode_factor(&self) -> f64 {
+        let m = self.class.n_modes();
+        if m <= 1 {
+            return 1.0;
+        }
+        calib::MODE_SPREAD.powf(self.mode as f64 / (m - 1) as f64)
+    }
+
+    /// μ: time to backprop one transformer layer's LoRA for ONE batch
+    /// [s] (eq. 12's per-layer unit).
+    pub fn mu(&self) -> f64 {
+        calib::MU_REF_S / self.class.rel_perf() * self.mode_factor()
+    }
+
+    /// t̂: forward-pass time for ONE batch through all `n_layers` [s].
+    pub fn forward_time(&self, n_layers: usize) -> f64 {
+        calib::FWD_FRAC * self.mu() * n_layers as f64
+    }
+
+    /// Per-batch fine-tuning latency at LoRA depth `k` [s] — the
+    /// quantity Fig. 4(a) plots.
+    pub fn batch_latency(&self, n_layers: usize, k: usize) -> f64 {
+        self.forward_time(n_layers) + k as f64 * self.mu()
+    }
+
+    /// Peak fine-tuning memory at LoRA depth `k` [MB] (Fig. 4b).
+    pub fn memory_mb(k: usize) -> f64 {
+        calib::MEM_BASE_MB + k as f64 * calib::MEM_PER_LAYER_MB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_ratios_match_table1() {
+        assert!(DeviceClass::Agx.rel_perf() > DeviceClass::Nx.rel_perf());
+        assert!(
+            DeviceClass::Nx.rel_perf() / DeviceClass::Tx2.rel_perf() > 10.0
+        );
+    }
+
+    #[test]
+    fn hundredfold_spread_between_extremes() {
+        let fast = ComputeProfile::new(DeviceClass::Agx, 0);
+        let slow = ComputeProfile::new(
+            DeviceClass::Tx2,
+            DeviceClass::Tx2.n_modes() - 1,
+        );
+        let ratio = slow.mu() / fast.mu();
+        assert!(
+            (50.0..200.0).contains(&ratio),
+            "spread {ratio} should be ~100x (paper §6.1)"
+        );
+    }
+
+    #[test]
+    fn latency_linear_in_depth_with_5ms_slope() {
+        let p = ComputeProfile::new(DeviceClass::Agx, 0);
+        let l1 = p.batch_latency(12, 1);
+        let l12 = p.batch_latency(12, 12);
+        let slope = (l12 - l1) / 11.0;
+        assert!((slope - 0.005).abs() < 1e-9, "slope {slope}");
+        // Fig. 4a: depth 12 ≈ 252% over depth 1.
+        let inc = (l12 - l1) / l1;
+        assert!((2.0..4.5).contains(&inc), "increase {inc}");
+    }
+
+    #[test]
+    fn memory_matches_fig4b() {
+        let m1 = ComputeProfile::memory_mb(1);
+        let m12 = ComputeProfile::memory_mb(12);
+        assert!((m12 - m1 - 11.0 * 107.0).abs() < 1e-9);
+        // Fig. 4b: ~221% growth from depth 1 to 12.
+        let growth = (m12 - m1) / m1;
+        assert!((1.5..2.5).contains(&growth), "growth {growth}");
+    }
+
+    #[test]
+    fn mode_factor_monotone() {
+        for class in DeviceClass::ALL {
+            let mut last = 0.0;
+            for m in 0..class.n_modes() {
+                let f = ComputeProfile::new(class, m).mode_factor();
+                assert!(f > last);
+                last = f;
+            }
+        }
+    }
+}

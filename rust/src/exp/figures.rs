@@ -1,0 +1,308 @@
+//! Per-figure experiment runners (DESIGN.md §4 experiment index).
+//!
+//! Scaling note: the paper's testbed is 80 Jetsons; this simulator
+//! runs every gradient for real on ONE cpu core, so the default fleet
+//! is 16 devices with the paper's 3:4:1 class mix and shortened
+//! epochs. Pass `--devices 80` to `legend exp` to reproduce at the
+//! paper's population size (the virtual-clock metrics are computed
+//! identically either way).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::strategy::{FixedLayers, FixedRankDist, Strategy};
+use crate::coordinator::FedConfig;
+use crate::device::profile::{ComputeProfile, DeviceClass};
+use crate::device::FleetConfig;
+use crate::metrics::{self, RunRecord};
+use crate::model::masks::LayerSet;
+
+use super::{shared_target, speedups, ExpEnv};
+
+/// Harness options from the CLI.
+#[derive(Debug, Clone)]
+pub struct Options {
+    pub devices: usize,
+    /// 0 → per-figure default.
+    pub rounds: usize,
+    /// Shrink everything for a smoke pass.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { devices: 10, rounds: 0, quick: false, seed: 1 }
+    }
+}
+
+impl Options {
+    fn rounds_or(&self, default: usize) -> usize {
+        if self.rounds > 0 {
+            self.rounds
+        } else if self.quick {
+            (default / 4).max(2)
+        } else {
+            default
+        }
+    }
+
+    fn fleet(&self, n: usize) -> FleetConfig {
+        FleetConfig { seed: self.seed, ..FleetConfig::sized(n) }
+    }
+
+    fn cfg(&self, task: &str, rounds: usize) -> FedConfig {
+        let (train, test) = if self.quick {
+            (256, 64)
+        } else {
+            match task {
+                "qqp" | "mnli" => (1024, 256),
+                "mmlu" | "gsm" => (768, 256),
+                _ => (1024, 256),
+            }
+        };
+        FedConfig {
+            task: task.into(),
+            rounds,
+            train_size: train,
+            test_size: test,
+            alpha: if matches!(task, "mmlu" | "gsm") { -1.0 } else { 10.0 },
+            max_batches: if self.quick { 2 } else { 6 },
+            seed: self.seed,
+            verbose: true,
+            ..Default::default()
+        }
+    }
+}
+
+pub fn run_one(env: &ExpEnv, fig: &str, opts: &Options) -> Result<()> {
+    match fig {
+        "fig3" => fig3_position(env, opts),
+        "fig4" => fig4_depth(env, opts),
+        "fig5" => fig5_rankdist(env, opts),
+        "fig7" | "fig8" | "fig11" | "fig12" => fig7_main(env, opts),
+        "fig9" => fig9_mmlu(env, opts),
+        "fig10" => fig10_gsm(env, opts),
+        "fig13" => fig13_ablation(env, opts),
+        other => Err(anyhow!("unknown figure {other:?}")),
+    }
+}
+
+pub fn run_all(env: &ExpEnv, opts: &Options) -> Result<()> {
+    for fig in ["fig7", "fig13", "fig9", "fig10", "fig3", "fig4", "fig5"] {
+        println!("\n================ {fig} ================");
+        run_one(env, fig, opts)?;
+    }
+    Ok(())
+}
+
+fn finish(name: &str, runs: &[RunRecord]) -> Result<()> {
+    let target = shared_target(runs);
+    let path = metrics::write_csv(name, runs)?;
+    println!("\n--- {name} (target acc {target:.3}) ---");
+    print!("{}", metrics::summary_table(runs, target));
+    for (m, s) in speedups(runs, target) {
+        println!("  speedup[{m}] = {s:.2}×");
+    }
+    println!("wrote {path}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// §2 pre-tests
+// ---------------------------------------------------------------------------
+
+/// Fig. 3 — importance of LoRA position: Layers-A/S/M/D on SST-2 with
+/// 10 devices.
+fn fig3_position(env: &ExpEnv, opts: &Options) -> Result<()> {
+    let l = env.meta.n_layers;
+    let third = l / 3;
+    let variants: Vec<(&str, LayerSet)> = vec![
+        ("Layers-A", LayerSet::All),
+        ("Layers-S", LayerSet::Explicit((0..third).collect())),
+        ("Layers-M", LayerSet::Explicit((third..2 * third).collect())),
+        ("Layers-D", LayerSet::Depth(third)),
+    ];
+    let cfg = opts.cfg("sst2", opts.rounds_or(14));
+    let fleet = opts.fleet(10); // §2.2: 10-device pre-test
+    let mut runs = Vec::new();
+    for (label, layers) in variants {
+        let mut s = FixedLayers {
+            label: label.into(),
+            layers,
+            rank: 8,
+        };
+        runs.push(env.run_strategy(&mut s, &cfg, &fleet)?);
+    }
+    finish("fig3_position", &runs)
+}
+
+/// Fig. 4 — importance of LoRA depth: accuracy + per-batch latency +
+/// memory for depths 1..L.
+fn fig4_depth(env: &ExpEnv, opts: &Options) -> Result<()> {
+    let depths: Vec<usize> = if opts.quick {
+        vec![1, 6, 12]
+    } else {
+        vec![1, 2, 3, 6, 9, 12]
+    };
+    let cfg = opts.cfg("sst2", opts.rounds_or(10));
+    let fleet = opts.fleet(10);
+    let mut runs = Vec::new();
+    println!("depth  latency_ms  memory_MB   (cost model, AGX mode 0)");
+    let agx = ComputeProfile::new(DeviceClass::Agx, 0);
+    for &k in &depths {
+        println!(
+            "{:>5}  {:>10.1}  {:>9.0}",
+            k,
+            agx.batch_latency(env.meta.n_layers, k) * 1e3,
+            ComputeProfile::memory_mb(k)
+        );
+        let mut s = FixedLayers {
+            label: format!("Depth-{k}"),
+            layers: LayerSet::Depth(k),
+            rank: 8,
+        };
+        runs.push(env.run_strategy(&mut s, &cfg, &fleet)?);
+    }
+    finish("fig4_depth", &runs)
+}
+
+/// Fig. 5 — rank distribution: (a) which position benefits from extra
+/// rank; (b) Uniform vs Inc vs Dec under a similar total budget.
+fn fig5_rankdist(env: &ExpEnv, opts: &Options) -> Result<()> {
+    let l = env.meta.n_layers;
+    let r_max = env.meta.r_max;
+    let cfg = opts.cfg("sst2", opts.rounds_or(10));
+    let fleet = opts.fleet(10);
+
+    // (a) rank gain per position: r=8 → r=16 on S/M/D/A.
+    if !opts.quick {
+        let third = l / 3;
+        let positions: Vec<(&str, LayerSet)> = vec![
+            ("Layers-A", LayerSet::All),
+            ("Layers-S", LayerSet::Explicit((0..third).collect())),
+            ("Layers-M", LayerSet::Explicit((third..2 * third).collect())),
+            ("Layers-D", LayerSet::Depth(third)),
+        ];
+        let mut runs = Vec::new();
+        for (label, layers) in positions {
+            for rank in [8usize, 16] {
+                let mut s = FixedLayers {
+                    label: format!("{label}-r{rank}"),
+                    layers: layers.clone(),
+                    rank,
+                };
+                runs.push(env.run_strategy(&mut s, &cfg, &fleet)?);
+            }
+        }
+        // Print the per-position gain the paper reports.
+        println!("\nrank 8 → 16 accuracy gain per position:");
+        for pair in runs.chunks(2) {
+            println!(
+                "  {:<12} {:+.4}",
+                pair[0].method.trim_end_matches("-r8"),
+                pair[1].best_accuracy() - pair[0].best_accuracy()
+            );
+        }
+        finish("fig5a_rankgain", &runs)?;
+    }
+
+    // (b) Uniform / Inc / Dec under ≈equal total rank.
+    let mut runs = Vec::new();
+    let variants: Vec<FixedRankDist> = vec![
+        FixedRankDist::uniform(l, 6),         // 72 total
+        FixedRankDist::increasing(l, r_max),  // 78 total
+        FixedRankDist::decreasing(l, r_max),  // 78 total
+    ];
+    for mut v in variants {
+        runs.push(env.run_strategy(&mut v, &cfg, &fleet)?);
+    }
+    finish("fig5b_distributions", &runs)
+}
+
+// ---------------------------------------------------------------------------
+// §6.2 main results
+// ---------------------------------------------------------------------------
+
+const METHODS: [&str; 4] = ["legend", "fedadapter", "hetlora", "fedlora"];
+
+fn methods_on_tasks(env: &ExpEnv, opts: &Options, tasks: &[&str],
+                    rounds: usize, stem: &str) -> Result<()> {
+    for task in tasks {
+        let cfg = opts.cfg(task, rounds);
+        let fleet = opts.fleet(opts.devices);
+        let mut runs = Vec::new();
+        for m in METHODS {
+            println!("--- {stem}: {m} on {task} ---");
+            runs.push(env.run_method(m, &cfg, &fleet)?);
+        }
+        finish(&format!("{stem}_{task}"), &runs)?;
+        // Companion summaries (Figs. 8/11/12 are views of these runs).
+        let target = shared_target(&runs);
+        println!("completion time / traffic / waiting @ target:");
+        for r in &runs {
+            println!(
+                "  {:<14} t={:>8}  traffic={:>9}  wait={:>7.1}s",
+                r.method,
+                r.time_to_accuracy(target)
+                    .map(|t| format!("{t:.0}s"))
+                    .unwrap_or("—".into()),
+                r.traffic_to_accuracy(target)
+                    .map(|b| format!("{:.1}MB", b as f64 / 1e6))
+                    .unwrap_or("—".into()),
+                r.mean_waiting()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Figs. 7/8/11/12 — the four methods on the GLUE-syn tasks.
+fn fig7_main(env: &ExpEnv, opts: &Options) -> Result<()> {
+    let tasks: &[&str] = if opts.quick {
+        &["sst2"]
+    } else {
+        &["sst2", "qnli", "qqp", "mnli"]
+    };
+    methods_on_tasks(env, opts, tasks, opts.rounds_or(15), "fig7")
+}
+
+/// Fig. 9 — massive multitask understanding (mmlu-syn).
+fn fig9_mmlu(env: &ExpEnv, opts: &Options) -> Result<()> {
+    methods_on_tasks(env, opts, &["mmlu"], opts.rounds_or(15), "fig9")
+}
+
+/// Fig. 10 — mathematical reasoning (gsm-syn).
+fn fig10_gsm(env: &ExpEnv, opts: &Options) -> Result<()> {
+    methods_on_tasks(env, opts, &["gsm"], opts.rounds_or(18), "fig10")
+}
+
+/// Fig. 13 — ablation: LEGEND vs w/o LD vs w/o RD on SST-2 + QNLI.
+fn fig13_ablation(env: &ExpEnv, opts: &Options) -> Result<()> {
+    let tasks: &[&str] =
+        if opts.quick { &["sst2"] } else { &["sst2", "qnli"] };
+    for task in tasks {
+        let cfg = opts.cfg(task, opts.rounds_or(12));
+        let fleet = opts.fleet(opts.devices);
+        let mut runs = Vec::new();
+        for m in ["legend", "legend-no-ld", "legend-no-rd"] {
+            println!("--- fig13: {m} on {task} ---");
+            runs.push(env.run_method(m, &cfg, &fleet)?);
+        }
+        finish(&format!("fig13_{task}"), &runs)?;
+    }
+    Ok(())
+}
+
+/// A named strategy for external callers (examples/benches).
+pub fn position_variant(label: &str, n_layers: usize)
+                        -> Option<Box<dyn Strategy>> {
+    let third = n_layers / 3;
+    let layers = match label {
+        "Layers-A" => LayerSet::All,
+        "Layers-S" => LayerSet::Explicit((0..third).collect()),
+        "Layers-M" => LayerSet::Explicit((third..2 * third).collect()),
+        "Layers-D" => LayerSet::Depth(third),
+        _ => return None,
+    };
+    Some(Box::new(FixedLayers { label: label.into(), layers, rank: 8 }))
+}

@@ -1,0 +1,145 @@
+//! Experiment harness: regenerates every table/figure in the paper's
+//! evaluation (DESIGN.md §4 maps them). Each `figN` runner produces
+//! `results/figN*.csv` plus a printed summary with the same rows the
+//! paper reports.
+
+pub mod figures;
+pub mod report;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::strategy::{self, Strategy};
+use crate::coordinator::trainer::PjrtTrainer;
+use crate::coordinator::{run_federated, FedConfig, ModelMeta};
+use crate::data::Spec;
+use crate::device::{Fleet, FleetConfig};
+use crate::metrics::RunRecord;
+use crate::model::state::{init_trainable, TensorMap};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// Shared environment: runtime + grammar spec + model meta.
+pub struct ExpEnv {
+    pub rt: Runtime,
+    pub spec: Spec,
+    pub meta: ModelMeta,
+    pub artifacts_dir: String,
+}
+
+impl ExpEnv {
+    pub fn load(artifacts_dir: &str) -> Result<ExpEnv> {
+        let rt = Runtime::load(artifacts_dir)?;
+        let spec = Spec::load(&format!("{artifacts_dir}/vocab.json"))
+            .map_err(|e| anyhow!("{e}"))?;
+        let meta = ModelMeta::from_manifest(&rt.manifest);
+        Ok(ExpEnv {
+            rt,
+            spec,
+            meta,
+            artifacts_dir: artifacts_dir.to_string(),
+        })
+    }
+
+    /// Fresh global trainable state for a family (same init per seed,
+    /// so methods start from identical models).
+    pub fn fresh_global(&self, family: &str, seed: u64) -> TensorMap {
+        let mut rng = Rng::new(seed).child("global-init");
+        init_trainable(&self.rt.manifest, self.rt.manifest.family(family),
+                       &mut rng)
+    }
+
+    /// Run one (strategy, task) experiment with the real PJRT trainer.
+    pub fn run_strategy(&self, strategy: &mut dyn Strategy,
+                        cfg: &FedConfig, fleet_cfg: &FleetConfig)
+                        -> Result<RunRecord> {
+        let family: &'static str = match strategy.family() {
+            "adapter" => "adapter",
+            _ => "lora",
+        };
+        let mut fleet = Fleet::new(FleetConfig {
+            seed: cfg.seed,
+            ..fleet_cfg.clone()
+        });
+        let mut trainer = PjrtTrainer::new(&self.rt, family, cfg.seed);
+        let global = self.fresh_global(family, cfg.seed);
+        run_federated(cfg, &mut fleet, strategy, &mut trainer,
+                      &self.meta, &self.spec, global)
+    }
+
+    /// Run a named method (CLI entry).
+    pub fn run_method(&self, method: &str, cfg: &FedConfig,
+                      fleet_cfg: &FleetConfig) -> Result<RunRecord> {
+        let mut s = strategy::by_name(
+            method,
+            self.meta.n_layers,
+            self.meta.r_max,
+            self.meta.w_max,
+        )
+        .ok_or_else(|| anyhow!("unknown method {method:?}"))?;
+        self.run_strategy(s.as_mut(), cfg, fleet_cfg)
+    }
+}
+
+/// The paper's "target accuracy" convention (§6.1 Metrics): the
+/// minimum best-accuracy across the compared methods.
+pub fn shared_target(runs: &[RunRecord]) -> f64 {
+    runs.iter()
+        .map(|r| r.best_accuracy())
+        .fold(f64::MAX, f64::min)
+        .min(1.0)
+        * 0.995 // tolerance so the weakest method itself crosses it
+}
+
+/// Speedup table vs the slowest method (Fig. 8's "N×" annotations).
+pub fn speedups(runs: &[RunRecord], target: f64) -> Vec<(String, f64)> {
+    let times: Vec<(String, Option<f64>)> = runs
+        .iter()
+        .map(|r| (r.method.clone(), r.time_to_accuracy(target)))
+        .collect();
+    let worst = times
+        .iter()
+        .filter_map(|(_, t)| *t)
+        .fold(0.0f64, f64::max);
+    times
+        .into_iter()
+        .map(|(m, t)| (m, t.map(|t| worst / t).unwrap_or(f64::NAN)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn rec(method: &str, accs: &[f64]) -> RunRecord {
+        let mut r = RunRecord::new(method, "t");
+        for (i, &a) in accs.iter().enumerate() {
+            r.rounds.push(RoundRecord {
+                round: i,
+                sim_time: (i + 1) as f64 * 10.0,
+                test_acc: a,
+                ..Default::default()
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn shared_target_is_min_of_best() {
+        let runs =
+            vec![rec("a", &[0.5, 0.9]), rec("b", &[0.4, 0.7, 0.6])];
+        let t = shared_target(&runs);
+        assert!(t <= 0.7 && t > 0.69);
+    }
+
+    #[test]
+    fn speedups_relative_to_slowest() {
+        let fast = rec("fast", &[0.8, 0.9]);
+        let slow = rec("slow", &[0.1, 0.2, 0.5, 0.8]);
+        // fast crosses 0.75 at t=10, slow at t=40 → 4× and 1×.
+        let s = speedups(&[fast, slow], 0.75);
+        assert_eq!(s[0].0, "fast");
+        assert!((s[0].1 - 4.0).abs() < 1e-9, "{:?}", s);
+        assert!((s[1].1 - 1.0).abs() < 1e-9);
+    }
+}

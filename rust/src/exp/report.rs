@@ -1,0 +1,227 @@
+//! Markdown report generation from results/ CSVs.
+//!
+//! `legend exp` writes raw per-round CSVs; this module re-reads them
+//! and produces the paper-style comparison tables (speedup ×, traffic
+//! savings %, waiting reduction %) that EXPERIMENTS.md quotes —
+//! regenerate with `legend report`.
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{RoundRecord, RunRecord};
+
+use super::{shared_target, speedups};
+
+/// Parse a results CSV written by `metrics::write_csv` back into runs.
+pub fn parse_csv(text: &str) -> Result<Vec<RunRecord>> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty csv"))?;
+    let cols: Vec<&str> = header.split(',').collect();
+    let idx = |name: &str| -> Result<usize> {
+        cols.iter()
+            .position(|c| *c == name)
+            .ok_or_else(|| anyhow!("missing column {name}"))
+    };
+    let (im, it, ir, ist, irt, iw, iu, id_, itl, ia, itsl, imd) = (
+        idx("method")?,
+        idx("task")?,
+        idx("round")?,
+        idx("sim_time")?,
+        idx("round_time")?,
+        idx("avg_waiting")?,
+        idx("up_bytes")?,
+        idx("down_bytes")?,
+        idx("train_loss")?,
+        idx("test_acc")?,
+        idx("test_loss")?,
+        idx("mean_depth")?,
+    );
+    let mut runs: Vec<RunRecord> = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != cols.len() {
+            return Err(anyhow!("line {}: {} fields", ln + 2, f.len()));
+        }
+        let parse_f = |i: usize| -> Result<f64> {
+            f[i].parse()
+                .map_err(|e| anyhow!("line {}: {e}", ln + 2))
+        };
+        let rec = RoundRecord {
+            round: parse_f(ir)? as usize,
+            sim_time: parse_f(ist)?,
+            round_time: parse_f(irt)?,
+            avg_waiting: parse_f(iw)?,
+            up_bytes: parse_f(iu)? as usize,
+            down_bytes: parse_f(id_)? as usize,
+            train_loss: parse_f(itl)?,
+            test_acc: parse_f(ia)?,
+            test_loss: parse_f(itsl)?,
+            mean_depth: parse_f(imd)?,
+        };
+        let (method, task) = (f[im], f[it]);
+        match runs
+            .iter_mut()
+            .find(|r| r.method == method && r.task == task)
+        {
+            Some(r) => r.rounds.push(rec),
+            None => {
+                let mut r = RunRecord::new(method, task);
+                r.rounds.push(rec);
+                runs.push(r);
+            }
+        }
+    }
+    Ok(runs)
+}
+
+/// Paper-style comparison block for one experiment's runs, with the
+/// first run (conventionally LEGEND) as the reference.
+pub fn comparison_markdown(title: &str, runs: &[RunRecord]) -> String {
+    let mut out = String::new();
+    let target = shared_target(runs);
+    let _ = writeln!(out, "### {title} (target acc {target:.3})\n");
+    let _ = writeln!(
+        out,
+        "| method | final acc | t→target | speedup | traffic→target | \
+         saved | wait avg | reduced |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+    let sp = speedups(runs, target);
+    let ref_run = &runs[0];
+    let (rt, rb, rw) = (
+        ref_run.time_to_accuracy(target),
+        ref_run.traffic_to_accuracy(target),
+        ref_run.mean_waiting(),
+    );
+    let _ = (rt, rb, rw);
+    for (r, (_, speed)) in runs.iter().zip(&sp) {
+        let t = r.time_to_accuracy(target);
+        let b = r.traffic_to_accuracy(target);
+        let w = r.mean_waiting();
+        // Savings vs THIS method from the reference (first) run.
+        let saved = match (ref_run.traffic_to_accuracy(target), b) {
+            (Some(rb), Some(b)) if b > 0 => {
+                format!("{:+.1}%", (1.0 - rb as f64 / b as f64) * -100.0)
+            }
+            _ => "—".into(),
+        };
+        let reduced = if w > 0.0 {
+            format!("{:+.1}%", (1.0 - ref_run.mean_waiting() / w) * -100.0)
+        } else {
+            "—".into()
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {:.3} | {} | {:.2}× | {} | {} | {:.1}s | {} |",
+            r.method,
+            r.best_accuracy(),
+            t.map(|t| format!("{t:.0}s")).unwrap_or("—".into()),
+            speed,
+            b.map(|b| format!("{:.1}MB", b as f64 / 1e6))
+                .unwrap_or("—".into()),
+            saved,
+            w,
+            reduced,
+        );
+    }
+    out
+}
+
+/// Build the full markdown report from every CSV under `dir`.
+pub fn build_report(dir: &str) -> Result<String> {
+    let mut out = String::from("# Experiment report (generated)\n\n");
+    let mut paths: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "csv").unwrap_or(false))
+        .collect();
+    paths.sort();
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        let runs = parse_csv(&text)?;
+        if runs.is_empty() {
+            continue;
+        }
+        let title = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("experiment");
+        out.push_str(&comparison_markdown(title, &runs));
+        out.push('\n');
+        out.push_str("```\n");
+        out.push_str(&crate::metrics::plot::accuracy_plot(&runs, 64, 12));
+        out.push_str("```\n\n");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::write_csv;
+
+    fn sample_runs() -> Vec<RunRecord> {
+        let mut a = RunRecord::new("LEGEND", "sst2");
+        let mut b = RunRecord::new("FedLoRA", "sst2");
+        for i in 0..5 {
+            a.rounds.push(RoundRecord {
+                round: i,
+                sim_time: (i + 1) as f64 * 10.0,
+                round_time: 10.0,
+                avg_waiting: 2.0,
+                up_bytes: 100,
+                down_bytes: 100,
+                train_loss: 1.0 / (i + 1) as f64,
+                test_acc: 0.2 * (i + 1) as f64,
+                test_loss: 1.0,
+                mean_depth: 8.0,
+            });
+            b.rounds.push(RoundRecord {
+                round: i,
+                sim_time: (i + 1) as f64 * 25.0,
+                round_time: 25.0,
+                avg_waiting: 8.0,
+                up_bytes: 300,
+                down_bytes: 300,
+                train_loss: 1.2 / (i + 1) as f64,
+                test_acc: 0.18 * (i + 1) as f64,
+                test_loss: 1.0,
+                mean_depth: 12.0,
+            });
+        }
+        vec![a, b]
+    }
+
+    #[test]
+    fn csv_roundtrip_through_parser() {
+        let runs = sample_runs();
+        let path = write_csv("test_report_roundtrip", &runs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = parse_csv(&text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].method, "LEGEND");
+        assert_eq!(parsed[0].rounds.len(), 5);
+        assert!((parsed[0].rounds[2].sim_time - 30.0).abs() < 1e-9);
+        assert_eq!(parsed[1].rounds[4].up_bytes, 300);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn markdown_contains_speedup_row() {
+        let runs = sample_runs();
+        let md = comparison_markdown("unit", &runs);
+        assert!(md.contains("| LEGEND |"));
+        assert!(md.contains("| FedLoRA |"));
+        assert!(md.contains('×'));
+    }
+
+    #[test]
+    fn rejects_malformed_csv() {
+        assert!(parse_csv("not,a,header\n1,2").is_err());
+        assert!(parse_csv("").is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! LEGEND: adaptive parameter-efficient federated fine-tuning on
+//! heterogeneous devices — reproduction library.
+//!
+//! Three-layer architecture (DESIGN.md §1):
+//!  * this crate is **L3**, the coordination system — the parameter
+//!    server round loop, the LCD configuration algorithm (Alg. 1),
+//!    layer-wise aggregation, the heterogeneous device fleet and WiFi
+//!    simulators, datasets, metrics;
+//!  * **L2** (JAX model, python/compile/model.py) and **L1** (Pallas
+//!    fused LoRA kernel) are compiled ONCE to HLO text by
+//!    `make artifacts` and executed from [`runtime`] via PJRT —
+//!    python never runs at federated-training time.
+
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;

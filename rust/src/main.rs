@@ -1,0 +1,161 @@
+//! `legend` — CLI for the LEGEND federated fine-tuning reproduction.
+//!
+//! Subcommands:
+//!   run    one federated run:   legend run --method legend --task sst2
+//!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
+//!   fleet  describe the simulated 80-device testbed (Table 1)
+//!   data   describe the synthetic datasets (Table 2)
+//!   kernel run the Pallas LoRA kernel artifact once (L1 smoke)
+//!
+//! Requires `make artifacts` first (python runs once, never again).
+
+use anyhow::{anyhow, Result};
+
+use legend::coordinator::FedConfig;
+use legend::data::grammar;
+use legend::device::{Fleet, FleetConfig};
+use legend::exp::{figures, ExpEnv};
+use legend::metrics::{self};
+use legend::util::cli::Args;
+use legend::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn fed_config_from(args: &Args) -> Result<FedConfig> {
+    let d = FedConfig::default();
+    Ok(FedConfig {
+        task: args.get_or("task", &d.task),
+        rounds: args.get_parse("rounds", d.rounds)?,
+        eval_every: args.get_parse("eval-every", d.eval_every)?,
+        lr0: args.get_parse("lr", d.lr0)?,
+        seed: args.get_parse("seed", d.seed)?,
+        train_size: args.get_parse("train-size", d.train_size)?,
+        test_size: args.get_parse("test-size", d.test_size)?,
+        alpha: args.get_parse("alpha", d.alpha)?,
+        max_batches: args.get_parse("max-batches", d.max_batches)?,
+        target_acc: args.get_parse("target-acc", d.target_acc)?,
+        verbose: !args.flag("quiet"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match args.subcommand.as_deref() {
+        Some("run") => {
+            let cfg = fed_config_from(&args)?;
+            let method = args.get_or("method", "legend");
+            let devices = args.get_parse("devices", 10usize)?;
+            args.reject_unknown()?;
+            let env = ExpEnv::load(&artifacts)?;
+            let fleet_cfg = FleetConfig::sized(devices);
+            let rec = env.run_method(&method, &cfg, &fleet_cfg)?;
+            let path =
+                metrics::write_csv(&format!("run_{method}_{}", cfg.task),
+                                   std::slice::from_ref(&rec))?;
+            println!("\n{}", metrics::summary_table(
+                std::slice::from_ref(&rec), cfg.target_acc));
+            println!("wrote {path}");
+            Ok(())
+        }
+        Some("exp") => {
+            let env = ExpEnv::load(&artifacts)?;
+            let fig = args.get_or("fig", "");
+            let all = args.flag("all");
+            let opts = figures::Options {
+                devices: args.get_parse("devices", 12usize)?,
+                rounds: args.get_parse("rounds", 0usize)?, // 0 = per-fig default
+                quick: args.flag("quick"),
+                seed: args.get_parse("seed", 1u64)?,
+            };
+            args.reject_unknown()?;
+            if all {
+                figures::run_all(&env, &opts)?;
+            } else if fig.is_empty() {
+                return Err(anyhow!(
+                    "pass --fig figN (3,4,5,7,8,9,10,11,12,13) or --all"
+                ));
+            } else {
+                figures::run_one(&env, &fig, &opts)?;
+            }
+            Ok(())
+        }
+        Some("fleet") => {
+            let devices = args.get_parse("devices", 80usize)?;
+            let _ = args.flag("describe");
+            args.reject_unknown()?;
+            let fleet = Fleet::new(FleetConfig::sized(devices));
+            print!("{}", fleet.describe());
+            Ok(())
+        }
+        Some("data") => {
+            let _ = args.flag("describe");
+            args.reject_unknown()?;
+            let env = ExpEnv::load(&artifacts)?;
+            println!(
+                "{:<8} {:>8} {:>8}  partition     kind",
+                "task", "#train", "#test"
+            );
+            let mut rng = Rng::new(1);
+            for t in env.spec.task_names() {
+                let (tr, te) = grammar::paper_scaled_sizes(t, 0.02);
+                let iid = matches!(t, "gsm" | "mmlu");
+                let ds = grammar::generate(&env.spec, t, 64, &mut rng)?;
+                println!(
+                    "{:<8} {:>8} {:>8}  {:<12} {} classes (e.g. {:?}…)",
+                    t,
+                    tr,
+                    te,
+                    if iid { "i.i.d." } else { "non-i.i.d." },
+                    env.spec.task(t).map_err(|e| anyhow!("{e}"))?.n_classes,
+                    &ds.examples[0].tokens[..6]
+                );
+            }
+            Ok(())
+        }
+        Some("report") => {
+            let dir = args.get_or("results", "results");
+            let out = args.get_or("out", "results/REPORT.md");
+            args.reject_unknown()?;
+            let md = legend::exp::report::build_report(&dir)?;
+            std::fs::write(&out, &md)?;
+            println!("{md}");
+            println!("wrote {out}");
+            Ok(())
+        }
+        Some("kernel") => {
+            args.reject_unknown()?;
+            let mut env = ExpEnv::load(&artifacts)?;
+            let dims =
+                legend::runtime::KernelDims::from_manifest(&artifacts)?;
+            let mut rng = Rng::new(42);
+            let mut gen = |n: usize| -> Vec<f32> {
+                (0..n).map(|_| rng.normal() as f32 * 0.3).collect()
+            };
+            let x = gen(dims.m * dims.k);
+            let w = gen(dims.k * dims.n);
+            let a = gen(dims.r * dims.k);
+            let b = gen(dims.n * dims.r);
+            let mask = vec![1.0; dims.r];
+            let y = env.rt.run_kernel(&x, &w, &a, &b, &mask, 1.0, &dims)?;
+            println!(
+                "pallas lora_linear [{}x{}]·[{}x{}] + rank-{} bypass → \
+                 {} outputs, ‖y‖₂ = {:.3}",
+                dims.m, dims.k, dims.k, dims.n, dims.r, y.len(),
+                y.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt()
+            );
+            Ok(())
+        }
+        other => {
+            Err(anyhow!(
+                "unknown subcommand {other:?}; try run | exp | fleet | \
+                 data | kernel | report"
+            ))
+        }
+    }
+}

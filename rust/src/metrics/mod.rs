@@ -1,0 +1,270 @@
+//! Experiment metrics: per-round records, run summaries, CSV/JSON out.
+//!
+//! Every experiment harness (`legend exp --fig …`) produces a
+//! [`RunRecord`] per (method, task) pair; the summary helpers compute
+//! the paper's reported quantities — completion time to target
+//! accuracy (Fig. 8), traffic to target accuracy (Fig. 11), mean
+//! waiting time (Fig. 12) — directly from the records.
+
+pub mod plot;
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+use crate::util::json::Value;
+
+/// One federated round's observables.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Virtual seconds elapsed *after* this round.
+    pub sim_time: f64,
+    pub round_time: f64,
+    pub avg_waiting: f64,
+    pub up_bytes: usize,
+    pub down_bytes: usize,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    pub test_loss: f64,
+    /// Mean LoRA depth assigned this round (diagnostic).
+    pub mean_depth: f64,
+}
+
+/// A full (method, task) run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub method: String,
+    pub task: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunRecord {
+    pub fn new(method: &str, task: &str) -> Self {
+        RunRecord {
+            method: method.to_string(),
+            task: task.to_string(),
+            rounds: Vec::new(),
+        }
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.test_acc).fold(0.0, f64::max)
+    }
+
+    /// Completion time to first reach `target` accuracy (Fig. 8's
+    /// metric); `None` if never reached.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_acc >= target)
+            .map(|r| r.sim_time)
+    }
+
+    /// Cumulative up+down traffic when first reaching `target`
+    /// (Fig. 11's metric).
+    pub fn traffic_to_accuracy(&self, target: f64) -> Option<usize> {
+        let mut total = 0usize;
+        for r in &self.rounds {
+            total += r.up_bytes + r.down_bytes;
+            if r.test_acc >= target {
+                return Some(total);
+            }
+        }
+        None
+    }
+
+    pub fn total_traffic(&self) -> usize {
+        self.rounds.iter().map(|r| r.up_bytes + r.down_bytes).sum()
+    }
+
+    /// Mean of eq. (13) over rounds (Fig. 12's metric).
+    pub fn mean_waiting(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.avg_waiting).sum::<f64>()
+            / self.rounds.len() as f64
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.rounds.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    pub const CSV_HEADER: &'static str = "method,task,round,sim_time,\
+round_time,avg_waiting,up_bytes,down_bytes,train_loss,test_acc,\
+test_loss,mean_depth";
+
+    pub fn to_csv_rows(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rounds {
+            let _ = writeln!(
+                out,
+                "{},{},{},{:.3},{:.3},{:.3},{},{},{:.5},{:.5},{:.5},{:.2}",
+                self.method,
+                self.task,
+                r.round,
+                r.sim_time,
+                r.round_time,
+                r.avg_waiting,
+                r.up_bytes,
+                r.down_bytes,
+                r.train_loss,
+                r.test_acc,
+                r.test_loss,
+                r.mean_depth
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("method", Value::Str(self.method.clone())),
+            ("task", Value::Str(self.task.clone())),
+            (
+                "rounds",
+                Value::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Value::obj(vec![
+                                ("round", Value::Num(r.round as f64)),
+                                ("sim_time", Value::Num(r.sim_time)),
+                                ("test_acc", Value::Num(r.test_acc)),
+                                ("train_loss", Value::Num(r.train_loss)),
+                                (
+                                    "up_bytes",
+                                    Value::Num(r.up_bytes as f64),
+                                ),
+                                (
+                                    "avg_waiting",
+                                    Value::Num(r.avg_waiting),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a set of runs to `results/<name>.csv` (plus echo a summary).
+pub fn write_csv(name: &str, runs: &[RunRecord])
+                 -> std::io::Result<String> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.csv");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", RunRecord::CSV_HEADER)?;
+    for run in runs {
+        write!(f, "{}", run.to_csv_rows())?;
+    }
+    Ok(path)
+}
+
+/// Pretty summary table of runs against a target accuracy — the rows
+/// the paper reports in Figs. 8/11/12.
+pub fn summary_table(runs: &[RunRecord], target: f64) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<16} {:<6} {:>9} {:>12} {:>12} {:>11} {:>10}",
+        "method", "task", "final_acc", "t_to_target", "traffic_MB",
+        "wait_avg_s", "rounds"
+    );
+    for r in runs {
+        let t = r
+            .time_to_accuracy(target)
+            .map(|t| format!("{t:.0}s"))
+            .unwrap_or_else(|| "—".to_string());
+        let traffic = r
+            .traffic_to_accuracy(target)
+            .map(|b| format!("{:.1}", b as f64 / 1e6))
+            .unwrap_or_else(|| {
+                format!("({:.1})", r.total_traffic() as f64 / 1e6)
+            });
+        let _ = writeln!(
+            out,
+            "{:<16} {:<6} {:>9.4} {:>12} {:>12} {:>11.1} {:>10}",
+            r.method,
+            r.task,
+            r.final_accuracy(),
+            t,
+            traffic,
+            r.mean_waiting(),
+            r.rounds.len()
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_with_accs(accs: &[f64]) -> RunRecord {
+        let mut r = RunRecord::new("m", "t");
+        let mut t = 0.0;
+        for (i, &a) in accs.iter().enumerate() {
+            t += 10.0;
+            r.rounds.push(RoundRecord {
+                round: i,
+                sim_time: t,
+                round_time: 10.0,
+                avg_waiting: 2.0,
+                up_bytes: 100,
+                down_bytes: 50,
+                test_acc: a,
+                ..Default::default()
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn time_to_accuracy_first_crossing() {
+        let r = run_with_accs(&[0.5, 0.7, 0.9, 0.85]);
+        assert_eq!(r.time_to_accuracy(0.7), Some(20.0));
+        assert_eq!(r.time_to_accuracy(0.95), None);
+    }
+
+    #[test]
+    fn traffic_accumulates_until_crossing() {
+        let r = run_with_accs(&[0.5, 0.7, 0.9]);
+        assert_eq!(r.traffic_to_accuracy(0.9), Some(450));
+        assert_eq!(r.total_traffic(), 450);
+    }
+
+    #[test]
+    fn waiting_mean() {
+        let r = run_with_accs(&[0.1, 0.2]);
+        assert!((r.mean_waiting() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let r = run_with_accs(&[0.5]);
+        let rows = r.to_csv_rows();
+        assert_eq!(rows.lines().count(), 1);
+        assert_eq!(
+            rows.lines().next().unwrap().split(',').count(),
+            RunRecord::CSV_HEADER.split(',').count()
+        );
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = run_with_accs(&[0.5, 0.6]);
+        let v = r.to_json();
+        let parsed =
+            crate::util::json::Value::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.get("method").as_str(), Some("m"));
+        assert_eq!(parsed.get("rounds").as_arr().unwrap().len(), 2);
+    }
+}

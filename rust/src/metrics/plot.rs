@@ -1,0 +1,135 @@
+//! ASCII line plots for terminal output — accuracy-vs-time curves
+//! (Figs. 7/9/10/13) render directly in `legend exp` summaries and the
+//! examples, so the paper's figure *shapes* are visible without a
+//! plotting stack.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series into a `width`×`height` character canvas with axes.
+pub fn line_plot(series: &[Series], width: usize, height: usize,
+                 x_label: &str, y_label: &str) -> String {
+    assert!(width >= 16 && height >= 4);
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().cloned())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let (mut x0, mut x1, mut y0, mut y1) =
+        (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 <= x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 <= y0 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut canvas = vec![vec![' '; width]; height];
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    for (si, s) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round()
+                as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round()
+                as usize;
+            canvas[height - 1 - cy][cx.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{y_label} ({y0:.2}..{y1:.2})\n"));
+    for row in &canvas {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    out.push_str(&format!("  {x_label} ({x0:.0}..{x1:.0})   "));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", glyphs[si % glyphs.len()],
+                              s.name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Convenience: accuracy-vs-sim-time curves from run records.
+pub fn accuracy_plot(runs: &[super::RunRecord], width: usize,
+                     height: usize) -> String {
+    let series: Vec<Series> = runs
+        .iter()
+        .map(|r| Series {
+            name: r.method.clone(),
+            points: r
+                .rounds
+                .iter()
+                .map(|x| (x.sim_time, x.test_acc))
+                .collect(),
+        })
+        .collect();
+    line_plot(&series, width, height, "virtual seconds", "test acc")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plots_contain_glyphs_and_legend() {
+        let s = vec![
+            Series {
+                name: "a".into(),
+                points: vec![(0.0, 0.0), (10.0, 1.0)],
+            },
+            Series {
+                name: "b".into(),
+                points: vec![(0.0, 1.0), (10.0, 0.0)],
+            },
+        ];
+        let out = line_plot(&s, 40, 10, "t", "acc");
+        assert!(out.contains('*') && out.contains('o'));
+        assert!(out.contains("*=a") && out.contains("o=b"));
+        assert_eq!(out.lines().count(), 13);
+    }
+
+    #[test]
+    fn empty_series_is_graceful() {
+        let out = line_plot(
+            &[Series { name: "e".into(), points: vec![] }],
+            20,
+            5,
+            "x",
+            "y",
+        );
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = vec![Series {
+            name: "c".into(),
+            points: vec![(1.0, 0.5), (1.0, 0.5)],
+        }];
+        let out = line_plot(&s, 20, 5, "x", "y");
+        assert!(out.contains('*'));
+    }
+}

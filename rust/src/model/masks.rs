@@ -1,0 +1,217 @@
+//! Mask construction — how one artifact serves every LoRA
+//! configuration (DESIGN.md "masking trick").
+//!
+//! A device's LoRA configuration `R_i^h = {r_{i,l} | l ∈ [L-k, L-1]}`
+//! (§4.4) is encoded as two f32 mask tensors fed to the train/eval
+//! executables:
+//!   * `layer_mask [L]`   — 1 where the device holds a LoRA layer;
+//!   * `rank_mask  [L, r_max]` — row l has `r_l` ones then zeros.
+//! The same encoding expresses the Fig. 3 position variants (S/M/D/A)
+//! and FedAdapter widths.
+
+/// Which transformer layers carry the trainable module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerSet {
+    /// Deepest `k` layers `[L-k, L-1]` — LEGEND's LoRA depth.
+    Depth(usize),
+    /// An explicit set (Fig. 3's Layers-S/M/D variants).
+    Explicit(Vec<usize>),
+    /// All layers (FedLoRA/HetLoRA).
+    All,
+}
+
+impl LayerSet {
+    /// Indices of active layers, ascending.
+    pub fn indices(&self, n_layers: usize) -> Vec<usize> {
+        match self {
+            LayerSet::Depth(k) => {
+                let k = (*k).min(n_layers);
+                (n_layers - k..n_layers).collect()
+            }
+            LayerSet::Explicit(v) => {
+                let mut v: Vec<usize> =
+                    v.iter().cloned().filter(|&l| l < n_layers).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+            LayerSet::All => (0..n_layers).collect(),
+        }
+    }
+
+    pub fn layer_mask(&self, n_layers: usize) -> Vec<f32> {
+        let mut m = vec![0f32; n_layers];
+        for l in self.indices(n_layers) {
+            m[l] = 1.0;
+        }
+        m
+    }
+
+    pub fn count(&self, n_layers: usize) -> usize {
+        self.indices(n_layers).len()
+    }
+}
+
+/// A full device configuration: active layers + per-layer rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoraConfig {
+    pub layers: LayerSet,
+    /// Global per-layer rank distribution, indexed by absolute layer
+    /// id (length L). Only entries of active layers matter.
+    pub ranks: Vec<usize>,
+}
+
+impl LoraConfig {
+    /// Uniform rank r on the given layers (FedLoRA/HetLoRA style).
+    pub fn uniform(layers: LayerSet, r: usize, n_layers: usize) -> Self {
+        LoraConfig { layers, ranks: vec![r; n_layers] }
+    }
+
+    /// Flattened row-major `[L, r_max]` rank mask.
+    pub fn rank_mask(&self, n_layers: usize, r_max: usize) -> Vec<f32> {
+        let active = self.layers.layer_mask(n_layers);
+        let mut m = vec![0f32; n_layers * r_max];
+        for l in 0..n_layers {
+            if active[l] == 0.0 {
+                continue;
+            }
+            let r = self.ranks[l].min(r_max);
+            for j in 0..r {
+                m[l * r_max + j] = 1.0;
+            }
+        }
+        m
+    }
+
+    pub fn layer_mask(&self, n_layers: usize) -> Vec<f32> {
+        self.layers.layer_mask(n_layers)
+    }
+
+    /// Active ranks (for eq. 12 upload term + Fig. 11 traffic).
+    pub fn active_ranks(&self, n_layers: usize) -> Vec<usize> {
+        self.layers
+            .indices(n_layers)
+            .iter()
+            .map(|&l| self.ranks[l])
+            .collect()
+    }
+
+    /// Total rank Σ r_l over active layers (constraint eq. 11).
+    pub fn total_rank(&self, n_layers: usize) -> usize {
+        self.active_ranks(n_layers).iter().sum()
+    }
+
+    pub fn depth(&self, n_layers: usize) -> usize {
+        self.layers.count(n_layers)
+    }
+
+    /// Layers the backward pass must traverse: gradients flow from the
+    /// output down to the SHALLOWEST adapted layer, so position — not
+    /// just count — sets the compute cost (§2.2, Fig. 3b: Layers-S is
+    /// slower than Layers-D despite equal layer counts).
+    pub fn backprop_depth(&self, n_layers: usize) -> usize {
+        self.layers
+            .indices(n_layers)
+            .first()
+            .map(|&lo| n_layers - lo)
+            .unwrap_or(0)
+    }
+}
+
+/// The paper's global rank distribution (Alg. 1 line 4): an arithmetic
+/// sequence `r_l = r_{l-1} + λ`, scaled down if it would exceed the
+/// total budget ψ over all L layers.
+pub fn arithmetic_ranks(n_layers: usize, lambda: usize, r0: usize,
+                        psi: usize, r_max: usize) -> Vec<usize> {
+    let mut ranks: Vec<usize> = (0..n_layers)
+        .map(|l| (r0 + l * lambda).min(r_max))
+        .collect();
+    let mut total: usize = ranks.iter().sum();
+    // Greedily trim from the shallowest layers until within budget —
+    // preserves the non-decreasing property (eq. 10) and keeps deep
+    // layers at high rank (§2.4's insight).
+    let mut l = 0;
+    while total > psi {
+        if ranks[l] > 1 {
+            ranks[l] -= 1;
+            total -= 1;
+        } else {
+            l = (l + 1) % n_layers;
+            if ranks.iter().all(|&r| r <= 1) {
+                break;
+            }
+            continue;
+        }
+        if l + 1 < n_layers && ranks[l] > ranks[l + 1] {
+            l += 1;
+        }
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_takes_deepest_layers() {
+        let m = LayerSet::Depth(4).layer_mask(12);
+        assert_eq!(&m[..8], &[0.0; 8]);
+        assert_eq!(&m[8..], &[1.0; 4]);
+        assert_eq!(LayerSet::Depth(4).indices(12), vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn depth_clamps_to_model() {
+        assert_eq!(LayerSet::Depth(99).count(12), 12);
+    }
+
+    #[test]
+    fn explicit_set_sorted_deduped_clamped() {
+        let s = LayerSet::Explicit(vec![5, 4, 4, 99]);
+        assert_eq!(s.indices(12), vec![4, 5]);
+    }
+
+    #[test]
+    fn rank_mask_rows_match_ranks() {
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(2),
+            ranks: vec![0, 0, 3, 4],
+        };
+        let m = cfg.rank_mask(4, 6);
+        // layers 0,1 inactive.
+        assert!(m[..12].iter().all(|&x| x == 0.0));
+        assert_eq!(&m[12..18], &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&m[18..24], &[1.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(cfg.active_ranks(4), vec![3, 4]);
+        assert_eq!(cfg.total_rank(4), 7);
+    }
+
+    #[test]
+    fn arithmetic_ranks_monotone_and_within_budget() {
+        for (l, lam, r0, psi, rmax) in
+            [(12, 1, 1, 78, 16), (12, 1, 1, 40, 16), (24, 2, 2, 100, 16)]
+        {
+            let r = arithmetic_ranks(l, lam, r0, psi, rmax);
+            assert_eq!(r.len(), l);
+            for w in r.windows(2) {
+                assert!(w[0] <= w[1], "non-monotone {r:?}");
+            }
+            assert!(r.iter().sum::<usize>() <= psi, "{r:?} exceeds {psi}");
+            assert!(r.iter().all(|&x| x >= 1 && x <= rmax));
+        }
+    }
+
+    #[test]
+    fn arithmetic_unconstrained_is_pure_sequence() {
+        let r = arithmetic_ranks(12, 1, 1, 1000, 16);
+        assert_eq!(r, (1..=12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_config() {
+        let cfg = LoraConfig::uniform(LayerSet::All, 8, 12);
+        assert_eq!(cfg.total_rank(12), 96);
+        assert_eq!(cfg.depth(12), 12);
+    }
+}

@@ -1,0 +1,326 @@
+//! Model-state management: artifact manifest, tensor state, masks,
+//! and traffic accounting.
+//!
+//! The AOT pipeline (`python/compile/aot.py`) writes a manifest that
+//! pins the exact tensor names/shapes/orderings of every executable's
+//! inputs and outputs; this module is the rust mirror. All federated
+//! state (global LoRA layers, per-device optimizer state) lives here
+//! as flat `f32` buffers in manifest order — the PJRT runtime turns
+//! them into literals at the call boundary.
+
+pub mod masks;
+pub mod state;
+
+use crate::util::json::Value;
+
+/// One tensor's name + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// Model dimensions from the manifest (mirror of python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelDim {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub r_max: usize,
+    pub adapter_w_max: usize,
+    pub batch_size: usize,
+    pub eval_batch: usize,
+    pub lora_alpha: f64,
+}
+
+/// Input/output ordering of one executable.
+#[derive(Debug, Clone)]
+pub struct StepIo {
+    pub artifact: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// One model family (lora | adapter): trainable layout + step IO.
+#[derive(Debug, Clone)]
+pub struct FamilySpec {
+    pub name: String,
+    pub trainable: Vec<TensorSpec>,
+    pub opt_order: Vec<String>,
+    pub train: StepIo,
+    pub eval: StepIo,
+}
+
+impl FamilySpec {
+    pub fn trainable_spec(&self, name: &str) -> Option<&TensorSpec> {
+        self.trainable.iter().find(|t| t.name == name)
+    }
+
+    /// Spec for an optimizer tensor ("m_x"/"v_x" share x's shape).
+    pub fn opt_spec(&self, opt_name: &str) -> Option<TensorSpec> {
+        let base = opt_name.strip_prefix("m_")
+            .or_else(|| opt_name.strip_prefix("v_"))?;
+        let t = self.trainable_spec(base)?;
+        Some(TensorSpec { name: opt_name.to_string(), shape: t.shape.clone() })
+    }
+}
+
+/// The parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub dim: ModelDim,
+    pub base: Vec<TensorSpec>,
+    pub base_bytes: usize,
+    pub lora: FamilySpec,
+    pub adapter: FamilySpec,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ModelError {
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::ParseError),
+}
+
+fn specs_from(v: &Value, what: &str) -> Result<Vec<TensorSpec>, ModelError> {
+    let arr = v.as_arr().ok_or_else(|| {
+        ModelError::Manifest(format!("{what}: expected array"))
+    })?;
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| {
+                        ModelError::Manifest(format!("{what}: missing name"))
+                    })?
+                    .to_string(),
+                shape: e.get("shape").as_usize_vec().ok_or_else(|| {
+                    ModelError::Manifest(format!("{what}: missing shape"))
+                })?,
+            })
+        })
+        .collect()
+}
+
+fn names_from(v: &Value, what: &str) -> Result<Vec<String>, ModelError> {
+    v.as_arr()
+        .ok_or_else(|| ModelError::Manifest(format!("{what}: not array")))?
+        .iter()
+        .map(|s| {
+            s.as_str().map(str::to_string).ok_or_else(|| {
+                ModelError::Manifest(format!("{what}: non-string"))
+            })
+        })
+        .collect()
+}
+
+fn step_io(v: &Value, what: &str) -> Result<StepIo, ModelError> {
+    Ok(StepIo {
+        artifact: v
+            .get("artifact")
+            .as_str()
+            .ok_or_else(|| {
+                ModelError::Manifest(format!("{what}: missing artifact"))
+            })?
+            .to_string(),
+        inputs: names_from(v.get("inputs"), what)?,
+        outputs: names_from(v.get("outputs"), what)?,
+    })
+}
+
+fn family(v: &Value, name: &str) -> Result<FamilySpec, ModelError> {
+    Ok(FamilySpec {
+        name: name.to_string(),
+        trainable: specs_from(v.get("trainable"), "trainable")?,
+        opt_order: names_from(v.get("opt"), "opt")?,
+        train: step_io(v.get("train"), "train")?,
+        eval: step_io(v.get("eval"), "eval")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, ModelError> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)?;
+        let v = Value::parse(&text)?;
+        let m = v.get("model");
+        let need = |k: &str| -> Result<usize, ModelError> {
+            m.get(k).as_usize().ok_or_else(|| {
+                ModelError::Manifest(format!("model.{k} missing"))
+            })
+        };
+        let dim = ModelDim {
+            n_layers: need("n_layers")?,
+            d_model: need("d_model")?,
+            n_heads: need("n_heads")?,
+            d_ffn: need("d_ffn")?,
+            vocab_size: need("vocab_size")?,
+            seq_len: need("seq_len")?,
+            n_classes: need("n_classes")?,
+            r_max: need("r_max")?,
+            adapter_w_max: need("adapter_w_max")?,
+            batch_size: need("batch_size")?,
+            eval_batch: v.get("eval_batch").as_usize().unwrap_or(64),
+            lora_alpha: m.get("lora_alpha").as_f64().unwrap_or(16.0),
+        };
+        Ok(Manifest {
+            dir: dir.to_string(),
+            dim,
+            base: specs_from(v.get("base"), "base")?,
+            base_bytes: v.get("base_bytes").as_usize().unwrap_or(0),
+            lora: family(v.get("families").get("lora"), "lora")?,
+            adapter: family(v.get("families").get("adapter"), "adapter")?,
+        })
+    }
+
+    pub fn family(&self, name: &str) -> &FamilySpec {
+        match name {
+            "lora" => &self.lora,
+            "adapter" => &self.adapter,
+            other => panic!("unknown family {other}"),
+        }
+    }
+
+    pub fn artifact_path(&self, artifact: &str) -> String {
+        format!("{}/{artifact}", self.dir)
+    }
+
+    /// Load base_weights.bin (little-endian f32, BASE_ORDER concat).
+    pub fn load_base_weights(&self) -> Result<Vec<Vec<f32>>, ModelError> {
+        let path = format!("{}/base_weights.bin", self.dir);
+        let bytes = std::fs::read(&path)?;
+        let total: usize = self.base.iter().map(|t| t.numel()).sum();
+        if bytes.len() != total * 4 {
+            return Err(ModelError::Manifest(format!(
+                "base_weights.bin is {} bytes, manifest wants {}",
+                bytes.len(),
+                total * 4
+            )));
+        }
+        let mut out = Vec::with_capacity(self.base.len());
+        let mut off = 0usize;
+        for spec in &self.base {
+            let n = spec.numel();
+            let mut buf = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                buf.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    // ---- traffic accounting (Fig. 11) ------------------------------------
+
+    /// Bytes to transmit ONE rank of ONE transformer layer's LoRA
+    /// (A row [d] + B column [d], for both the q and v projections).
+    pub fn unit_rank_bytes(&self) -> usize {
+        4 * (2 * self.dim.d_model) * 2
+    }
+
+    /// Bytes for the (always-trainable) classification head.
+    pub fn head_bytes(&self) -> usize {
+        4 * (self.dim.d_model * self.dim.n_classes + self.dim.n_classes)
+    }
+
+    /// Upload bytes for a device transmitting LoRA ranks `ranks` on its
+    /// active layers plus the head.
+    pub fn lora_upload_bytes(&self, ranks: &[usize]) -> usize {
+        let rank_sum: usize = ranks.iter().sum();
+        rank_sum * self.unit_rank_bytes() + self.head_bytes()
+    }
+
+    /// Bytes for an adapter of width `w` on one layer (down col + up
+    /// row + bias scalar per width unit).
+    pub fn adapter_unit_width_bytes(&self) -> usize {
+        4 * (2 * self.dim.d_model + 1)
+    }
+
+    pub fn adapter_upload_bytes(&self, widths: &[usize]) -> usize {
+        let w_sum: usize = widths.iter().sum();
+        w_sum * self.adapter_unit_width_bytes() + self.head_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn manifest_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+            Some(dir.to_string())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dim.n_layers, 12);
+        assert!(m.dim.r_max >= 12);
+        assert_eq!(m.base.len(), 20);
+        assert_eq!(m.lora.trainable.len(), 6);
+        assert_eq!(m.adapter.trainable.len(), 5);
+        assert_eq!(m.lora.opt_order.len(), 12);
+        // Train IO: base + trainable + opt + masks/batch/scalars.
+        assert_eq!(
+            m.lora.train.inputs.len(),
+            20 + 6 + 12 + 6,
+            "{:?}",
+            m.lora.train.inputs
+        );
+        assert_eq!(m.lora.train.outputs.len(), 6 + 12 + 2);
+        // base file matches manifest.
+        let base = m.load_base_weights().unwrap();
+        assert_eq!(base.len(), 20);
+        assert_eq!(base[0].len(), m.dim.vocab_size * m.dim.d_model);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let d = m.dim.d_model;
+        assert_eq!(m.unit_rank_bytes(), 16 * d);
+        // rank 8 on 4 layers, plus head.
+        let bytes = m.lora_upload_bytes(&[8, 8, 8, 8]);
+        assert_eq!(bytes, 32 * 16 * d + m.head_bytes());
+        // More ranks → more bytes.
+        assert!(m.lora_upload_bytes(&[9, 10, 11, 12]) > bytes);
+    }
+
+    #[test]
+    fn opt_spec_mirrors_trainable() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let s = m.lora.opt_spec("m_aq").unwrap();
+        assert_eq!(s.shape,
+                   m.lora.trainable_spec("aq").unwrap().shape);
+        assert!(m.lora.opt_spec("bogus").is_none());
+    }
+}

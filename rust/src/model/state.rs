@@ -1,0 +1,134 @@
+//! Flat-tensor state containers for trainable parameters + optimizer
+//! moments, with initialization matching python/compile/model.py.
+
+use super::{FamilySpec, Manifest, TensorSpec};
+use crate::util::rng::Rng;
+
+/// An ordered map of named flat f32 tensors (order = manifest order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMap {
+    pub entries: Vec<(TensorSpec, Vec<f32>)>,
+}
+
+impl TensorMap {
+    pub fn zeros(specs: &[TensorSpec]) -> TensorMap {
+        TensorMap {
+            entries: specs
+                .iter()
+                .map(|s| (s.clone(), vec![0f32; s.numel()]))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.entries
+            .iter()
+            .find(|(s, _)| s.name == name)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Vec<f32>> {
+        self.entries
+            .iter_mut()
+            .find(|(s, _)| s.name == name)
+            .map(|(_, v)| v)
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&TensorSpec> {
+        self.entries.iter().map(|(s, _)| s).find(|s| s.name == name)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.entries.iter().map(|(_, v)| v.len()).sum()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(s, _)| s.name.as_str()).collect()
+    }
+
+    /// Max |x| over all tensors — used by divergence watchdogs.
+    pub fn max_abs(&self) -> f32 {
+        self.entries
+            .iter()
+            .flat_map(|(_, v)| v.iter())
+            .fold(0f32, |acc, x| acc.max(x.abs()))
+    }
+}
+
+/// Initialize the trainable state of a family, matching the python
+/// init exactly in distribution (A ~ N(0, 1/√d) on all slots, B = 0,
+/// head ~ N(0, 1/√d); adapters: down ~ N(0, 1/√d), up = 0).
+pub fn init_trainable(m: &Manifest, fam: &FamilySpec, rng: &mut Rng)
+                      -> TensorMap {
+    let d = m.dim.d_model as f64;
+    let std = 1.0 / d.sqrt();
+    let mut out = TensorMap::zeros(&fam.trainable);
+    for (spec, buf) in &mut out.entries {
+        let gaussian = match (fam.name.as_str(), spec.name.as_str()) {
+            ("lora", "aq" | "av" | "head_w") => true,
+            ("adapter", "down" | "head_w") => true,
+            _ => false,
+        };
+        if gaussian {
+            for x in buf.iter_mut() {
+                *x = (rng.normal() * std) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Zero AdamW state for a family.
+pub fn init_opt(fam: &FamilySpec) -> TensorMap {
+    let specs: Vec<TensorSpec> = fam
+        .opt_order
+        .iter()
+        .map(|n| fam.opt_spec(n).expect("opt name mirrors trainable"))
+        .collect();
+    TensorMap::zeros(&specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests::manifest_dir;
+
+    #[test]
+    fn init_matches_layout() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let mut rng = Rng::new(1);
+        let t = init_trainable(&m, &m.lora, &mut rng);
+        assert_eq!(t.entries.len(), 6);
+        // B factors zero-initialized, A factors not.
+        assert!(t.get("bq").unwrap().iter().all(|&x| x == 0.0));
+        assert!(t.get("av").unwrap().iter().any(|&x| x != 0.0));
+        let o = init_opt(&m.lora);
+        assert_eq!(o.entries.len(), 12);
+        assert_eq!(o.numel(), 2 * t.numel());
+    }
+
+    #[test]
+    fn tensor_map_access() {
+        let specs = vec![
+            TensorSpec { name: "a".into(), shape: vec![2, 3] },
+            TensorSpec { name: "b".into(), shape: vec![4] },
+        ];
+        let mut tm = TensorMap::zeros(&specs);
+        assert_eq!(tm.numel(), 10);
+        tm.get_mut("b").unwrap()[0] = -7.0;
+        assert_eq!(tm.get("b").unwrap()[0], -7.0);
+        assert_eq!(tm.max_abs(), 7.0);
+        assert!(tm.get("c").is_none());
+    }
+
+    #[test]
+    fn adapter_init_near_identity() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let mut rng = Rng::new(2);
+        let t = init_trainable(&m, &m.adapter, &mut rng);
+        assert!(t.get("up").unwrap().iter().all(|&x| x == 0.0));
+        assert!(t.get("down").unwrap().iter().any(|&x| x != 0.0));
+    }
+}

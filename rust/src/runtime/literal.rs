@@ -1,0 +1,75 @@
+//! Literal construction/extraction helpers for the `xla` crate.
+
+use anyhow::{anyhow, Result};
+
+/// f32 literal with explicit dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("lit_f32: {} elems vs dims {dims:?}", data.len()));
+    }
+    // f32 → raw little-endian bytes (host is LE; XLA expects host order).
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )
+    .map_err(|e| anyhow!("create f32 literal {dims:?}: {e}"))
+}
+
+/// i32 literal with explicit dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("lit_i32: {} elems vs dims {dims:?}", data.len()));
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )
+    .map_err(|e| anyhow!("create i32 literal {dims:?}: {e}"))
+}
+
+/// Rank-0 f32 scalar.
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.5f32, -2.0, 3.25, 0.0, 7.0, -8.5];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3, 4];
+        let lit = lit_i32(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = lit_scalar_f32(4.25);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 4.25);
+    }
+}

@@ -1,0 +1,295 @@
+//! PJRT runtime: load the AOT artifacts and run them from rust.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` (HLO **text**: jax ≥ 0.5 protos
+//! carry 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns them) → `client.compile` → `execute`.
+//!
+//! Hot-path layout: the frozen base (≈10 MB) lives as persistent
+//! [`xla::Literal`]s; executable outputs come back as one tuple
+//! literal which we decompose and keep as literals between local
+//! steps — host round-trips to `Vec<f32>` happen only at PS
+//! upload/download boundaries. NOTE: `execute_b` (device-resident
+//! buffers) is avoided deliberately — in xla_extension 0.5.1 the
+//! buffers it returns crash `to_literal_sync` with a fatal
+//! `shape.IsArray()` check on tuple outputs; `execute` with literal
+//! args is the supported path (see EXPERIMENTS.md §Perf).
+
+pub mod literal;
+pub mod session;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::Dataset;
+use crate::model::state::TensorMap;
+use crate::model::{Manifest, TensorSpec};
+use literal::{lit_f32, lit_i32, lit_scalar_f32};
+use session::SessionState;
+
+/// Mask pair fed to every executable (DESIGN.md "masking trick").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Masks {
+    /// `[L * r_max]` row-major rank mask (or `[L * w_max]` width mask
+    /// for the adapter family).
+    pub rank_mask: Vec<f32>,
+    /// `[L]` layer mask.
+    pub layer_mask: Vec<f32>,
+}
+
+/// Scalar results of one train step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// The compiled artifact set + persistent device state.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// Frozen base as literals (built once).
+    base_lits: Vec<xla::Literal>,
+    /// Host copy of the base (for tests / inspection).
+    base_host: Vec<Vec<f32>>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load manifest + base weights, compile train/eval executables
+    /// for both families.
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {artifacts_dir}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+
+        let base_host = manifest.load_base_weights()?;
+        let base_lits = base_host
+            .iter()
+            .zip(&manifest.base)
+            .map(|(data, spec)| lit_f32(data, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut rt = Runtime {
+            client,
+            manifest,
+            base_lits,
+            base_host,
+            executables: HashMap::new(),
+        };
+        for family in ["lora", "adapter"] {
+            let fam = rt.manifest.family(family).clone();
+            rt.compile(&fam.train.artifact)?;
+            rt.compile(&fam.eval.artifact)?;
+        }
+        Ok(rt)
+    }
+
+    /// Compile one HLO-text artifact and cache the executable.
+    fn compile(&mut self, artifact: &str) -> Result<()> {
+        if self.executables.contains_key(artifact) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(artifact);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {artifact}: {e}"))?;
+        self.executables.insert(artifact.to_string(), exe);
+        Ok(())
+    }
+
+    fn exe(&self, artifact: &str) -> &xla::PjRtLoadedExecutable {
+        &self.executables[artifact]
+    }
+
+    pub fn base_host(&self) -> &[Vec<f32>] {
+        &self.base_host
+    }
+
+    /// One AdamW train step for `family`. `state` is updated in place
+    /// (kept as literals between steps). Returns loss + correct count.
+    pub fn train_step(&self, family: &str, state: &mut SessionState,
+                      masks: &Masks, tokens: &[i32], labels: &[i32],
+                      lr: f32, step: f32) -> Result<StepStats> {
+        let dim = &self.manifest.dim;
+        let fam = self.manifest.family(family);
+        assert_eq!(tokens.len(), dim.batch_size * dim.seq_len,
+                   "train batch shape");
+        assert_eq!(labels.len(), dim.batch_size);
+        let n_state = state.trainable.len() + state.opt.len();
+        assert_eq!(
+            fam.train.inputs.len(),
+            self.base_lits.len() + n_state + 6,
+            "manifest IO drift"
+        );
+
+        let l = dim.n_layers;
+        let r = masks.rank_mask.len() / l;
+        // Per-call literals for masks + batch + scalars.
+        let call_lits = vec![
+            lit_f32(&masks.rank_mask, &[l, r])?,
+            lit_f32(&masks.layer_mask, &[l])?,
+            lit_i32(tokens, &[dim.batch_size, dim.seq_len])?,
+            lit_i32(labels, &[dim.batch_size])?,
+            lit_scalar_f32(lr),
+            lit_scalar_f32(step),
+        ];
+        let args: Vec<&xla::Literal> = self
+            .base_lits
+            .iter()
+            .chain(state.trainable.iter())
+            .chain(state.opt.iter())
+            .chain(call_lits.iter())
+            .collect();
+        let mut outs = self.run_tupled(&fam.train.artifact, &args)?;
+        // outputs: trainable… opt… loss correct
+        let nt = state.trainable.len();
+        let no = state.opt.len();
+        if outs.len() != nt + no + 2 {
+            return Err(anyhow!(
+                "train step returned {} outputs, expected {}",
+                outs.len(),
+                nt + no + 2
+            ));
+        }
+        let correct = outs
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e}"))?[0];
+        let loss = outs
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e}"))?[0];
+        state.opt = outs.split_off(nt);
+        state.trainable = outs;
+        Ok(StepStats { loss, correct })
+    }
+
+    /// Evaluate `trainable` on `ds`; returns (mean_loss, accuracy).
+    /// Processes ⌊n/eval_batch⌋ full batches (remainder dropped; the
+    /// harnesses size test sets as multiples of the eval batch).
+    pub fn evaluate(&self, family: &str, trainable: &TensorMap,
+                    masks: &Masks, ds: &Dataset) -> Result<(f64, f64)> {
+        let dim = &self.manifest.dim;
+        let fam = self.manifest.family(family);
+        let e = dim.eval_batch;
+        let n_batches = ds.len() / e;
+        assert!(n_batches > 0, "test set smaller than eval batch");
+
+        let mut t_lits = session::map_to_literals(trainable)?;
+        let l = dim.n_layers;
+        let r = masks.rank_mask.len() / l;
+        t_lits.push(lit_f32(&masks.rank_mask, &[l, r])?);
+        t_lits.push(lit_f32(&masks.layer_mask, &[l])?);
+
+        let (mut loss_sum, mut correct_sum) = (0f64, 0f64);
+        for b in 0..n_batches {
+            let mut toks = Vec::with_capacity(e * dim.seq_len);
+            let mut labels = Vec::with_capacity(e);
+            for j in 0..e {
+                let ex = &ds.examples[b * e + j];
+                toks.extend_from_slice(&ex.tokens);
+                labels.push(ex.label);
+            }
+            let tok_lit = lit_i32(&toks, &[e, dim.seq_len])?;
+            let lab_lit = lit_i32(&labels, &[e])?;
+            let args: Vec<&xla::Literal> = self
+                .base_lits
+                .iter()
+                .chain(t_lits.iter())
+                .chain([&tok_lit, &lab_lit])
+                .collect();
+            let outs = self.run_tupled(&fam.eval.artifact, &args)?;
+            loss_sum +=
+                outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
+            correct_sum +=
+                outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
+        }
+        let n = (n_batches * e) as f64;
+        Ok((loss_sum / n, correct_sum / n))
+    }
+
+    /// Run the standalone Pallas LoRA kernel artifact (quickstart /
+    /// L1-compose proof). Shapes must match the manifest's `kernel`.
+    pub fn run_kernel(&mut self, x: &[f32], w: &[f32], a: &[f32],
+                      b: &[f32], mask: &[f32], scale: f32,
+                      dims: &KernelDims) -> Result<Vec<f32>> {
+        self.compile("lora_kernel.hlo.txt")?;
+        let args = [
+            lit_f32(x, &[dims.m, dims.k])?,
+            lit_f32(w, &[dims.k, dims.n])?,
+            lit_f32(a, &[dims.r, dims.k])?,
+            lit_f32(b, &[dims.n, dims.r])?,
+            lit_f32(mask, &[dims.r])?,
+            lit_f32(&[scale], &[1])?,
+        ];
+        let exe = self.exe("lora_kernel.hlo.txt");
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("kernel execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("kernel fetch: {e}"))?;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow!("kernel untuple: {e}"))?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    fn run_tupled(&self, artifact: &str, args: &[&xla::Literal])
+                  -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(artifact);
+        let result = exe
+            .execute(args)
+            .map_err(|e| anyhow!("execute {artifact}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {artifact}: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {artifact}: {e}"))
+    }
+
+    /// Trainable specs of a family (convenience for state init).
+    pub fn trainable_specs(&self, family: &str) -> &[TensorSpec] {
+        &self.manifest.family(family).trainable
+    }
+}
+
+/// Shapes of the standalone kernel artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelDims {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub r: usize,
+}
+
+impl KernelDims {
+    pub fn from_manifest(dir: &str) -> Result<KernelDims> {
+        let text = std::fs::read_to_string(format!("{dir}/manifest.json"))?;
+        let v = crate::util::json::Value::parse(&text)
+            .map_err(|e| anyhow!("{e}"))?;
+        let shapes = v.get("kernel").get("shapes");
+        let get = |name: &str, idx: usize| -> Result<usize> {
+            shapes
+                .get(name)
+                .idx(idx)
+                .as_usize()
+                .ok_or_else(|| anyhow!("kernel shape {name}[{idx}]"))
+        };
+        Ok(KernelDims {
+            m: get("x", 0)?,
+            k: get("x", 1)?,
+            n: get("w", 1)?,
+            r: get("a", 0)?,
+        })
+    }
+}

@@ -1,0 +1,120 @@
+//! Device-local training session state.
+//!
+//! Between local steps a device's trainable + optimizer tensors stay
+//! as [`xla::Literal`]s (no host `Vec<f32>` round-trip); conversion to
+//! [`TensorMap`] happens only at the PS upload/download boundary.
+
+use anyhow::{anyhow, Result};
+
+use super::literal::lit_f32;
+use crate::model::state::TensorMap;
+use crate::model::TensorSpec;
+
+/// Literal-form trainable + optimizer state for one device.
+pub struct SessionState {
+    pub trainable: Vec<xla::Literal>,
+    pub opt: Vec<xla::Literal>,
+    /// Specs mirroring `trainable` (manifest order).
+    pub trainable_specs: Vec<TensorSpec>,
+    pub opt_specs: Vec<TensorSpec>,
+}
+
+/// Convert a TensorMap to literals in its own order.
+pub fn map_to_literals(map: &TensorMap) -> Result<Vec<xla::Literal>> {
+    map.entries
+        .iter()
+        .map(|(spec, data)| lit_f32(data, &spec.shape))
+        .collect()
+}
+
+/// Convert literals back to a TensorMap given matching specs.
+pub fn literals_to_map(lits: &[xla::Literal], specs: &[TensorSpec])
+                       -> Result<TensorMap> {
+    if lits.len() != specs.len() {
+        return Err(anyhow!(
+            "literal count {} vs specs {}",
+            lits.len(),
+            specs.len()
+        ));
+    }
+    let entries = lits
+        .iter()
+        .zip(specs)
+        .map(|(lit, spec)| {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+            if v.len() != spec.numel() {
+                return Err(anyhow!(
+                    "tensor {}: {} elems vs spec {}",
+                    spec.name,
+                    v.len(),
+                    spec.numel()
+                ));
+            }
+            Ok((spec.clone(), v))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorMap { entries })
+}
+
+impl SessionState {
+    /// Start a session from host-side state maps.
+    pub fn from_maps(trainable: &TensorMap, opt: &TensorMap)
+                     -> Result<SessionState> {
+        Ok(SessionState {
+            trainable: map_to_literals(trainable)?,
+            opt: map_to_literals(opt)?,
+            trainable_specs: trainable
+                .entries
+                .iter()
+                .map(|(s, _)| s.clone())
+                .collect(),
+            opt_specs: opt.entries.iter().map(|(s, _)| s.clone()).collect(),
+        })
+    }
+
+    /// Materialize back to host maps (upload boundary).
+    pub fn to_maps(&self) -> Result<(TensorMap, TensorMap)> {
+        Ok((
+            literals_to_map(&self.trainable, &self.trainable_specs)?,
+            literals_to_map(&self.opt, &self.opt_specs)?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_map() -> TensorMap {
+        TensorMap {
+            entries: vec![
+                (
+                    TensorSpec { name: "a".into(), shape: vec![2, 2] },
+                    vec![1.0, 2.0, 3.0, 4.0],
+                ),
+                (
+                    TensorSpec { name: "b".into(), shape: vec![3] },
+                    vec![-1.0, 0.5, 9.0],
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn maps_roundtrip_through_literals() {
+        let t = toy_map();
+        let o = toy_map();
+        let s = SessionState::from_maps(&t, &o).unwrap();
+        let (t2, o2) = s.to_maps().unwrap();
+        assert_eq!(t, t2);
+        assert_eq!(o, o2);
+    }
+
+    #[test]
+    fn mismatched_specs_rejected() {
+        let t = toy_map();
+        let lits = map_to_literals(&t).unwrap();
+        let wrong = vec![TensorSpec { name: "a".into(), shape: vec![5] }];
+        assert!(literals_to_map(&lits, &wrong).is_err());
+    }
+}

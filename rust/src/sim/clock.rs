@@ -1,0 +1,159 @@
+//! Completion-time model (eq. 12) and the virtual clock.
+
+/// Per-device inputs to eq. (12) for one round.
+#[derive(Debug, Clone)]
+pub struct DeviceRound {
+    pub device_id: usize,
+    /// t̂: forward time for one batch through the full model [s].
+    pub fwd_time_per_batch: f64,
+    /// μ: backprop time per LoRA layer per batch [s].
+    pub mu: f64,
+    /// β: upload time per unit-rank LoRA layer [s].
+    pub beta: f64,
+    /// LoRA depth k (layers with backprop).
+    pub depth: usize,
+    /// Active ranks {r_l} of the transmitted layers.
+    pub ranks: Vec<usize>,
+    /// Local batches this round (epoch length on this device).
+    pub n_batches: usize,
+    /// Extra upload bytes not proportional to rank (e.g. the
+    /// classification head), converted to seconds by the caller's β
+    /// per byte — passed here directly in seconds.
+    pub extra_upload_s: f64,
+}
+
+impl DeviceRound {
+    /// eq. (12): t_i = n·(t̂ + k·μ) + Σ_l r_l·β  (+ constant head).
+    pub fn completion_time(&self) -> f64 {
+        let compute = self.n_batches as f64
+            * (self.fwd_time_per_batch + self.depth as f64 * self.mu);
+        let rank_sum: usize = self.ranks.iter().sum();
+        compute + rank_sum as f64 * self.beta + self.extra_upload_s
+    }
+}
+
+/// Result of simulating one round over all participants.
+#[derive(Debug, Clone)]
+pub struct RoundTiming {
+    /// t^h = max_i t_i^h.
+    pub round_time: f64,
+    /// W^h = (1/n) Σ (t^h − t_i^h)  (eq. 13).
+    pub avg_waiting: f64,
+    /// Slowest device id (the straggler).
+    pub straggler: usize,
+    pub per_device: Vec<(usize, f64)>,
+}
+
+/// Compute eq. (12)/(13) over the round's participants.
+pub fn simulate_round(devices: &[DeviceRound]) -> RoundTiming {
+    assert!(!devices.is_empty(), "round with no participants");
+    let per_device: Vec<(usize, f64)> = devices
+        .iter()
+        .map(|d| (d.device_id, d.completion_time()))
+        .collect();
+    let (straggler, round_time) = per_device
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap();
+    let n = per_device.len() as f64;
+    let avg_waiting =
+        per_device.iter().map(|(_, t)| round_time - t).sum::<f64>() / n;
+    RoundTiming { round_time, avg_waiting, straggler, per_device }
+}
+
+/// Accumulates virtual time across rounds.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    pub elapsed: f64,
+    pub rounds: usize,
+    waiting_sum: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&mut self, timing: &RoundTiming) {
+        self.elapsed += timing.round_time;
+        self.waiting_sum += timing.avg_waiting;
+        self.rounds += 1;
+    }
+
+    /// Mean of eq. (13) over all completed rounds (Fig. 12's metric).
+    pub fn mean_waiting(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.waiting_sum / self.rounds as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dr(id: usize, mu: f64, depth: usize, ranks: Vec<usize>)
+          -> DeviceRound {
+        DeviceRound {
+            device_id: id,
+            fwd_time_per_batch: 0.01,
+            mu,
+            beta: 0.1,
+            depth,
+            ranks,
+            n_batches: 10,
+            extra_upload_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn completion_time_matches_eq12() {
+        let d = dr(0, 0.005, 4, vec![9, 10, 11, 12]);
+        // 10 * (0.01 + 4*0.005) + 42 * 0.1 = 0.3 + 4.2
+        assert!((d.completion_time() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waiting_time_matches_eq13() {
+        let devices = vec![
+            dr(0, 0.005, 2, vec![1, 2]), // 10*(0.01+0.01)+0.3 = 0.5
+            dr(1, 0.010, 2, vec![1, 2]), // 10*(0.01+0.02)+0.3 = 0.6
+        ];
+        let t = simulate_round(&devices);
+        assert!((t.round_time - 0.6).abs() < 1e-12);
+        assert_eq!(t.straggler, 1);
+        assert!((t.avg_waiting - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waiting_nonnegative_and_zero_for_identical() {
+        let devices = vec![dr(0, 0.005, 3, vec![4, 5, 6]); 5];
+        let t = simulate_round(&devices);
+        assert!(t.avg_waiting.abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = VirtualClock::new();
+        let devices = vec![
+            dr(0, 0.005, 2, vec![1, 1]),
+            dr(1, 0.02, 2, vec![1, 1]),
+        ];
+        let t = simulate_round(&devices);
+        c.advance(&t);
+        c.advance(&t);
+        assert_eq!(c.rounds, 2);
+        assert!((c.elapsed - 2.0 * t.round_time).abs() < 1e-12);
+        assert!((c.mean_waiting() - t.avg_waiting).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deeper_config_takes_longer() {
+        let shallow = dr(0, 0.005, 2, vec![1, 2]).completion_time();
+        let deep = dr(0, 0.005, 8, (1..=8).collect()).completion_time();
+        assert!(deep > shallow);
+    }
+}

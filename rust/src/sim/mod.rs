@@ -1,0 +1,12 @@
+//! Virtual time: round completion and waiting-time accounting.
+//!
+//! The paper's headline metrics are wall-clock completion time to a
+//! target accuracy (Fig. 7–10), average per-round waiting time
+//! (eq. 13, Fig. 12) and communication traffic (Fig. 11). Gradient
+//! math runs for real through PJRT, but *time* is virtual — computed
+//! from eq. (12) with the calibrated device models — exactly the
+//! quantity the paper's problem (16) optimizes (DESIGN.md §2).
+
+pub mod clock;
+
+pub use clock::{RoundTiming, VirtualClock};

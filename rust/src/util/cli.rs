@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `legend <subcommand> [--key value]* [--flag]* [positional]*`.
+//! Flags are recognized as `--name` with an optional value; `--name=value`
+//! also works. Unknown keys are an error (catches typos in experiment
+//! invocations).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown argument(s): {0}")]
+    Unknown(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    BadValue { key: String, value: String, why: String },
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.kv.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// True if `--name` was given, bare or as `--name=true`. NOTE:
+    /// `--name value` binds `value` to the key (the parser has no
+    /// schema), so place bare flags after values or use `=`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+            || self.kv.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.kv.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Error if any --key / --flag was never queried (typo protection).
+    pub fn reject_unknown(&self) -> Result<(), CliError> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let a = parse("exp extra --fig fig7 --rounds 40 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.get("fig"), Some("fig7"));
+        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 40);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quiet") == false);
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --seed=9");
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 9);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_parse("rounds", 17usize).unwrap(), 17);
+        assert_eq!(a.get_or("task", "sst2"), "sst2");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse("run --oops 3");
+        let _ = a.get("fine");
+        assert!(a.reject_unknown().is_err());
+        let b = parse("run --ok 3");
+        let _ = b.get("ok");
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("run --rounds banana");
+        assert!(a.get_parse("rounds", 1usize).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Small self-contained substrates the crate builds on.
+//!
+//! The offline build environment only vendors the `xla` crate's own
+//! dependency closure, so the usual ecosystem crates (serde, rand,
+//! clap, criterion) are unavailable — these modules are the
+//! from-scratch replacements (DESIGN.md §1 `util/`):
+//!
+//! * [`json`] — recursive-descent JSON parser + writer (manifest,
+//!   vocab spec, metrics output).
+//! * [`rng`] — deterministic xoshiro256++ PRNG with the distributions
+//!   the simulator needs (normal, lognormal, gamma, Dirichlet).
+//! * [`cli`] — flag/subcommand parser for the `legend` binary.
+//! * [`prop`] — a tiny property-testing harness (random case
+//!   generation + failure reporting) used by the coordinator tests.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,70 @@
+//! Miniature property-testing harness (no `proptest` offline).
+//!
+//! Runs a property over `n` randomly generated cases; on failure it
+//! reports the seed + case index so the exact case replays with
+//! `check_with_seed`. Used by the coordinator tests to fuzz LCD,
+//! aggregation and assignment invariants (DESIGN.md §6).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (kept modest: single-core CI).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop(rng, case_idx)` for `cases` cases; panic with a
+/// reproducible seed on the first failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check_with_seed(name, 0xC0FFEE, cases, &mut prop);
+}
+
+/// Same as [`check`] but with an explicit master seed (use to replay a
+/// reported failure).
+pub fn check_with_seed<F>(name: &str, seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: check_with_seed(\"{name}\", {seed:#x}, \
+                 {n}, ..) with case {case}): {msg}",
+                n = case + 1
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside props.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 64, |rng, _| {
+            let a = rng.uniform(-1e6, 1e6);
+            let b = rng.uniform(-1e6, 1e6);
+            prop_assert!(a + b == b + a, "{a} + {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_replay_info() {
+        check("always-fails", 16, |_, _| Err("nope".to_string()));
+    }
+}

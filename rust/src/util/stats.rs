@@ -1,0 +1,117 @@
+//! Summary statistics for metrics and benches: mean/std, percentiles,
+//! normal-approximation confidence intervals, and a Mann-Whitney-style
+//! rank test used to assert orderings (e.g. "LEGEND's waiting time is
+//! stochastically smaller than FedLoRA's") across seeds.
+
+/// Basic moments of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::MAX, f64::min),
+        max: xs.iter().cloned().fold(f64::MIN, f64::max),
+    }
+}
+
+/// p-th percentile (0..=100) by linear interpolation on sorted data.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// 95% CI half-width under the normal approximation.
+pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
+    let s = summarize(xs);
+    if s.n < 2 {
+        return f64::INFINITY;
+    }
+    1.96 * s.std / (s.n as f64).sqrt()
+}
+
+/// Fraction of (a_i, b_j) pairs with a_i < b_j (the Mann-Whitney U
+/// statistic normalized to [0,1]; 0.5 = no ordering, → 1 = a smaller).
+pub fn prob_smaller(a: &[f64], b: &[f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let mut wins = 0usize;
+    let mut ties = 0usize;
+    for &x in a {
+        for &y in b {
+            if x < y {
+                wins += 1;
+            } else if x == y {
+                ties += 1;
+            }
+        }
+    }
+    (wins as f64 + 0.5 * ties as f64) / (a.len() * b.len()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let small = ci95_halfwidth(&[1.0, 2.0, 3.0]);
+        let xs: Vec<f64> =
+            (0..300).map(|i| 1.0 + (i % 3) as f64).collect();
+        let big = ci95_halfwidth(&xs);
+        assert!(big < small);
+    }
+
+    #[test]
+    fn prob_smaller_detects_ordering() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 20.0];
+        assert_eq!(prob_smaller(&a, &b), 1.0);
+        assert_eq!(prob_smaller(&b, &a), 0.0);
+        assert!((prob_smaller(&a, &a) - 0.5).abs() < 1e-12);
+    }
+}

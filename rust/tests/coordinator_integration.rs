@@ -1,0 +1,175 @@
+//! Coordinator integration tests: the full PS round loop over the
+//! 80-device fleet with the mock trainer (fast, no artifacts), plus a
+//! real-PJRT mini federated run when artifacts are present.
+
+use legend::coordinator::strategy::{self, Strategy};
+use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
+use legend::coordinator::{run_federated, FedConfig, ModelMeta};
+use legend::data::Spec;
+use legend::device::{Fleet, FleetConfig};
+use legend::metrics::RunRecord;
+use legend::model::state::TensorMap;
+use legend::model::TensorSpec;
+use legend::runtime::Runtime;
+use legend::util::json::Value;
+
+fn toy_spec() -> Spec {
+    let json = r#"{
+      "vocab_size": 256, "seq_len": 16,
+      "special": {"pad": 0, "cls": 1, "mask": 2, "sep": 3},
+      "filler": [4, 50], "noise": [200, 256],
+      "tasks": {
+        "sst2": {"kind": "single", "n_classes": 2,
+                 "banks": [[50, 80], [80, 110]],
+                 "len_range": [5, 10], "bank_words": [2, 4],
+                 "label_noise": 0.0}
+      }
+    }"#;
+    Spec::from_json(&Value::parse(json).unwrap()).unwrap()
+}
+
+fn toy_global(meta: &ModelMeta, rank_dim: usize) -> TensorMap {
+    TensorMap::zeros(&[
+        TensorSpec {
+            name: "aq".into(),
+            shape: vec![meta.n_layers, rank_dim, 4],
+        },
+        TensorSpec { name: "head_w".into(), shape: vec![4, 2] },
+    ])
+}
+
+fn mock_run(method: &str, rounds: usize) -> RunRecord {
+    let meta = ModelMeta::synthetic(12, 16, 32);
+    let mut s =
+        strategy::by_name(method, meta.n_layers, meta.r_max, meta.w_max)
+            .unwrap();
+    let family = s.family();
+    let rank_dim = meta.rank_dim(family);
+    let mut fleet = Fleet::new(FleetConfig::paper()); // all 80 devices
+    let mut trainer = MockTrainer::new(family);
+    let cfg = FedConfig {
+        rounds,
+        train_size: 2048,
+        test_size: 64,
+        ..Default::default()
+    };
+    run_federated(&cfg, &mut fleet, s.as_mut(), &mut trainer, &meta,
+                  &toy_spec(), toy_global(&meta, rank_dim))
+    .unwrap()
+}
+
+#[test]
+fn all_methods_complete_on_the_paper_fleet() {
+    for method in ["legend", "legend-no-ld", "legend-no-rd", "fedlora",
+                   "hetlora", "fedadapter"] {
+        let rec = mock_run(method, 6);
+        assert_eq!(rec.rounds.len(), 6, "{method}");
+        assert!(rec.rounds.iter().all(|r| r.round_time > 0.0), "{method}");
+        assert!(rec.rounds.iter().all(|r| r.up_bytes > 0), "{method}");
+        assert!(rec.final_accuracy() > 0.0, "{method}");
+    }
+}
+
+#[test]
+fn paper_orderings_hold_on_the_80_device_fleet() {
+    let legend = mock_run("legend", 10);
+    let fedlora = mock_run("fedlora", 10);
+    let hetlora = mock_run("hetlora", 10);
+    // Fig. 12 ordering: LEGEND waits least, FedLoRA most.
+    assert!(legend.mean_waiting() < hetlora.mean_waiting());
+    assert!(legend.mean_waiting() < fedlora.mean_waiting());
+    // Fig. 11 ordering: LEGEND moves the fewest bytes per round.
+    assert!(legend.total_traffic() < fedlora.total_traffic());
+    // Round time: LEGEND's rounds are shorter (eq. 12 driven).
+    assert!(legend.total_time() < fedlora.total_time());
+}
+
+#[test]
+fn legend_depth_adapts_while_fedlora_is_flat() {
+    let legend = mock_run("legend", 8);
+    let fedlora = mock_run("fedlora", 8);
+    let ld = legend.rounds.last().unwrap().mean_depth;
+    let fd = fedlora.rounds.last().unwrap().mean_depth;
+    assert!(ld < 12.0, "LEGEND mean depth {ld} should be < L");
+    assert!((fd - 12.0).abs() < 1e-9, "FedLoRA depth {fd} must be L");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = mock_run("legend", 5);
+    let b = mock_run("legend", 5);
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.up_bytes, y.up_bytes);
+        assert!((x.sim_time - y.sim_time).abs() < 1e-9);
+        assert!((x.avg_waiting - y.avg_waiting).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn failure_injection_empty_shard_is_rebalanced() {
+    // A fleet larger than the dataset forces the partitioner's
+    // min-shard rebalancing; the run must still complete.
+    let meta = ModelMeta::synthetic(12, 16, 32);
+    let mut s = strategy::by_name("legend", 12, 16, 32).unwrap();
+    let mut fleet = Fleet::new(FleetConfig::sized(16));
+    let mut trainer = MockTrainer::new("lora");
+    let cfg = FedConfig {
+        rounds: 3,
+        train_size: 80, // 16 devices × bs4 → barely enough
+        test_size: 64,
+        ..Default::default()
+    };
+    let rec = run_federated(&cfg, &mut fleet, s.as_mut(), &mut trainer,
+                            &meta, &toy_spec(), toy_global(&meta, 16))
+        .unwrap();
+    assert_eq!(rec.rounds.len(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// Real-runtime federated mini-run (needs artifacts)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(&format!("{dir}/manifest.json"))
+        .exists()
+        .then(|| dir.to_string())
+}
+
+#[test]
+fn real_federated_run_learns_sst2() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let spec = Spec::load(&format!("{dir}/vocab.json")).unwrap();
+    let meta = ModelMeta::from_manifest(&rt.manifest);
+
+    let mut s = strategy::by_name("legend", meta.n_layers, meta.r_max,
+                                  meta.w_max)
+        .unwrap();
+    let mut fleet = Fleet::new(FleetConfig::sized(6));
+    let mut trainer = PjrtTrainer::new(&rt, "lora", 1);
+    let cfg = FedConfig {
+        rounds: 8,
+        train_size: 384,
+        test_size: 128,
+        max_batches: 8,
+        verbose: false,
+        ..Default::default()
+    };
+    let mut rng = legend::util::rng::Rng::new(1).child("global-init");
+    let global = legend::model::state::init_trainable(
+        &rt.manifest, &rt.manifest.lora, &mut rng);
+    let rec = run_federated(&cfg, &mut fleet, s.as_mut(), &mut trainer,
+                            &meta, &spec, global)
+        .unwrap();
+    // Accuracy must beat chance (0.5 on binary) after 8 rounds.
+    assert!(
+        rec.final_accuracy() > 0.6,
+        "federated run failed to learn: acc {}",
+        rec.final_accuracy()
+    );
+    // Train loss decreased.
+    let first = rec.rounds.first().unwrap().train_loss;
+    let last = rec.rounds.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} → {last}");
+}

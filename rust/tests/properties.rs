@@ -1,0 +1,437 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §6)
+//! using the in-crate `util::prop` harness — LCD, aggregation,
+//! assignment/masks, capacity estimation, partitioning, timing, JSON.
+
+use legend::coordinator::aggregation::{aggregate, DeviceUpdate};
+use legend::coordinator::capacity::{Capacity, CapacityEstimator};
+use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
+use legend::data::{partition, Dataset, Example};
+use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
+use legend::model::state::TensorMap;
+use legend::model::TensorSpec;
+use legend::prop_assert;
+use legend::sim::clock::{simulate_round, DeviceRound};
+use legend::util::json::Value;
+use legend::util::prop::check;
+use legend::util::rng::Rng;
+
+const L: usize = 12;
+const R: usize = 16;
+
+fn random_lcd_device(rng: &mut Rng) -> LcdDevice {
+    let mu = rng.uniform(0.002, 0.6);
+    LcdDevice {
+        capacity: Capacity { mu, beta: rng.uniform(0.001, 2.0) },
+        fwd_time: 0.26 * mu * L as f64,
+        n_batches: rng.range_incl(1, 16),
+        compute_budget: if rng.bernoulli(0.3) {
+            rng.uniform(0.01, 50.0)
+        } else {
+            f64::MAX
+        },
+        comm_budget: if rng.bernoulli(0.3) {
+            rng.range(1_000, 10_000_000)
+        } else {
+            usize::MAX
+        },
+        unit_rank_bytes: 4 * 128 * 4,
+    }
+}
+
+#[test]
+fn prop_lcd_satisfies_all_constraints() {
+    check("lcd-constraints", 256, |rng, _| {
+        let n = rng.range_incl(1, 40);
+        let devices: Vec<LcdDevice> =
+            (0..n).map(|_| random_lcd_device(rng)).collect();
+        let params = LcdParams::paper(L, R);
+        let cfgs = lcd::determine(&params, &devices);
+        prop_assert!(cfgs.len() == n, "one config per device");
+        for (c, d) in cfgs.iter().zip(&devices) {
+            let depth = c.depth(L);
+            prop_assert!((1..=L).contains(&depth), "depth {depth}");
+            // eq. (10): monotone non-decreasing ranks.
+            for w in c.ranks.windows(2) {
+                prop_assert!(w[0] <= w[1], "eq.10: {:?}", c.ranks);
+            }
+            // eq. (11): total rank within ψ.
+            prop_assert!(
+                c.ranks.iter().sum::<usize>() <= params.psi,
+                "eq.11: {:?}",
+                c.ranks
+            );
+            // eq. (14)/(15) at the assigned depth (when depth > min).
+            if depth > params.min_depth {
+                let compute = d.n_batches as f64
+                    * (d.fwd_time + depth as f64 * d.capacity.mu);
+                prop_assert!(
+                    compute <= d.compute_budget + 1e-9,
+                    "eq.14: {compute} > {}",
+                    d.compute_budget
+                );
+                let bytes: usize = c
+                    .active_ranks(L)
+                    .iter()
+                    .sum::<usize>()
+                    * d.unit_rank_bytes;
+                prop_assert!(
+                    bytes <= d.comm_budget,
+                    "eq.15: {bytes} > {}",
+                    d.comm_budget
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lcd_fastest_device_gets_max_depth() {
+    check("lcd-fastest-max", 128, |rng, _| {
+        let n = rng.range_incl(2, 30);
+        let devices: Vec<LcdDevice> = (0..n)
+            .map(|_| {
+                let mut d = random_lcd_device(rng);
+                d.compute_budget = f64::MAX;
+                d.comm_budget = usize::MAX;
+                d
+            })
+            .collect();
+        let params = LcdParams::paper(L, R);
+        let ranks = arithmetic_ranks(L, 1, 1, params.psi, R);
+        let cfgs = lcd::determine(&params, &devices);
+        let times: Vec<f64> =
+            devices.iter().map(|d| d.est_completion(L, &ranks)).collect();
+        let fastest = times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        prop_assert!(
+            cfgs[fastest].depth(L) == L,
+            "fastest depth {}",
+            cfgs[fastest].depth(L)
+        );
+        let slowest = times
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        prop_assert!(
+            cfgs[slowest].depth(L) <= cfgs[fastest].depth(L),
+            "slowest deeper than fastest"
+        );
+        Ok(())
+    });
+}
+
+fn random_update(rng: &mut Rng, specs: &[TensorSpec]) -> DeviceUpdate {
+    let mut t = TensorMap::zeros(specs);
+    for (_, v) in &mut t.entries {
+        for x in v.iter_mut() {
+            *x = rng.uniform(-2.0, 2.0) as f32;
+        }
+    }
+    let depth = rng.range_incl(1, L);
+    let uniform = rng.bernoulli(0.5);
+    let ranks = if uniform {
+        vec![rng.range_incl(1, R); L]
+    } else {
+        arithmetic_ranks(L, 1, 1, 200, R)
+    };
+    DeviceUpdate {
+        trainable: t,
+        config: LoraConfig { layers: LayerSet::Depth(depth), ranks },
+        weight: 1.0,
+    }
+}
+
+#[test]
+fn prop_aggregation_matches_naive_reference() {
+    let d = 3usize;
+    let specs = vec![
+        TensorSpec { name: "aq".into(), shape: vec![L, R, d] },
+        TensorSpec { name: "bq".into(), shape: vec![L, d, R] },
+        TensorSpec { name: "head_w".into(), shape: vec![d, 4] },
+    ];
+    check("aggregation-vs-naive", 96, |rng, _| {
+        let n = rng.range_incl(1, 12);
+        let updates: Vec<DeviceUpdate> =
+            (0..n).map(|_| random_update(rng, &specs)).collect();
+        let mut global = TensorMap::zeros(&specs);
+        for (_, v) in &mut global.entries {
+            for x in v.iter_mut() {
+                *x = rng.uniform(-1.0, 1.0) as f32;
+            }
+        }
+        let before = global.clone();
+        aggregate(&mut global, &updates, L, R);
+
+        // Naive per-element reference using each device's rank mask.
+        let masks: Vec<Vec<f32>> =
+            updates.iter().map(|u| u.config.rank_mask(L, R)).collect();
+        for (spec, got) in &global.entries {
+            let old = before.get(&spec.name).unwrap();
+            for e in 0..got.len() {
+                let (mut acc, mut wsum) = (0f64, 0f64);
+                for (u, mask) in updates.iter().zip(&masks) {
+                    let m = match spec.name.as_str() {
+                        "aq" => {
+                            let l = e / (R * d);
+                            let j = (e / d) % R;
+                            mask[l * R + j] as f64
+                        }
+                        "bq" => {
+                            let l = e / (d * R);
+                            let j = e % R;
+                            mask[l * R + j] as f64
+                        }
+                        _ => 1.0,
+                    };
+                    acc += m * u.trainable.get(&spec.name).unwrap()[e]
+                        as f64;
+                    wsum += m;
+                }
+                let want = if wsum > 0.0 {
+                    (acc / wsum) as f32
+                } else {
+                    old[e]
+                };
+                prop_assert!(
+                    (got[e] - want).abs() < 1e-4,
+                    "{}[{e}]: {} vs {}",
+                    spec.name,
+                    got[e],
+                    want
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregation_idempotent_on_identical_updates() {
+    let specs =
+        vec![TensorSpec { name: "aq".into(), shape: vec![L, R, 2] }];
+    check("aggregation-idempotent", 64, |rng, _| {
+        let u = random_update(rng, &specs);
+        let n = rng.range_incl(1, 8);
+        let updates = vec![u.clone(); n];
+        let mut global = TensorMap::zeros(&specs);
+        aggregate(&mut global, &updates, L, R);
+        // Averaging n identical updates = the update itself on active
+        // slots; inactive slots keep the (zero) global.
+        let mask = u.config.rank_mask(L, R);
+        let got = global.get("aq").unwrap();
+        let x = u.trainable.get("aq").unwrap();
+        for e in 0..got.len() {
+            let m = mask[e / 2];
+            let want = if m > 0.0 { x[e] } else { 0.0 };
+            prop_assert!(
+                (got[e] - want).abs() < 1e-5,
+                "e={e} got {} want {want}",
+                got[e]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masks_consistent_with_config() {
+    check("mask-consistency", 256, |rng, _| {
+        let depth = rng.range_incl(1, L);
+        let ranks: Vec<usize> =
+            (0..L).map(|_| rng.range_incl(0, R + 4)).collect();
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(depth),
+            ranks: ranks.clone(),
+        };
+        let lm = cfg.layer_mask(L);
+        let rm = cfg.rank_mask(L, R);
+        prop_assert!(
+            lm.iter().map(|&x| x as usize).sum::<usize>() == depth,
+            "layer mask count"
+        );
+        for l in 0..L {
+            let row: usize = rm[l * R..(l + 1) * R]
+                .iter()
+                .map(|&x| x as usize)
+                .sum();
+            let want = if lm[l] > 0.0 { ranks[l].min(R) } else { 0 };
+            prop_assert!(row == want, "layer {l}: {row} vs {want}");
+            // Prefix property: ones then zeros.
+            let mut seen_zero = false;
+            for j in 0..R {
+                let v = rm[l * R + j];
+                if v == 0.0 {
+                    seen_zero = true;
+                } else {
+                    prop_assert!(!seen_zero, "non-prefix mask row");
+                }
+            }
+        }
+        let total: usize = cfg.active_ranks(L).iter().sum();
+        prop_assert!(
+            total == cfg.total_rank(L),
+            "active rank total mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_capacity_estimate_within_hull() {
+    check("capacity-hull", 128, |rng, _| {
+        let mut est = CapacityEstimator::paper(1);
+        let (mut lo, mut hi) = (f64::MAX, f64::MIN);
+        for _ in 0..rng.range_incl(1, 50) {
+            let mu = rng.uniform(0.001, 1.0);
+            lo = lo.min(mu);
+            hi = hi.max(mu);
+            est.update(0, mu, 1.0);
+            let c = est.get(0).unwrap();
+            prop_assert!(
+                c.mu >= lo - 1e-12 && c.mu <= hi + 1e-12,
+                "estimate {} outside [{lo}, {hi}]",
+                c.mu
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_conserves_and_respects_min() {
+    check("partition", 64, |rng, _| {
+        let n_ex = rng.range_incl(100, 800);
+        let n_dev = rng.range_incl(2, 16);
+        let classes = rng.range_incl(2, 4);
+        let ds = Dataset {
+            examples: (0..n_ex)
+                .map(|i| Example {
+                    tokens: vec![i as i32 % 7; 4],
+                    label: (i % classes) as i32,
+                })
+                .collect(),
+        };
+        let min_shard = 4;
+        let how = if rng.bernoulli(0.5) {
+            partition::Partition::Dirichlet {
+                alpha: rng.uniform(0.05, 50.0),
+            }
+        } else {
+            partition::Partition::Iid
+        };
+        let shards =
+            partition::split(&ds, n_dev, how, classes, min_shard, rng);
+        prop_assert!(shards.len() == n_dev, "shard count");
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        prop_assert!(total == n_ex, "conservation: {total} vs {n_ex}");
+        for s in &shards {
+            prop_assert!(s.len() >= min_shard, "min shard violated");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_timing_invariants() {
+    check("timing", 128, |rng, _| {
+        let n = rng.range_incl(1, 40);
+        let devices: Vec<DeviceRound> = (0..n)
+            .map(|i| DeviceRound {
+                device_id: i,
+                fwd_time_per_batch: rng.uniform(0.0, 0.5),
+                mu: rng.uniform(0.001, 0.5),
+                beta: rng.uniform(0.0, 1.0),
+                depth: rng.range_incl(1, L),
+                ranks: (0..rng.range_incl(1, L))
+                    .map(|_| rng.range_incl(1, R))
+                    .collect(),
+                n_batches: rng.range_incl(1, 20),
+                extra_upload_s: rng.uniform(0.0, 1.0),
+            })
+            .collect();
+        let t = simulate_round(&devices);
+        prop_assert!(t.avg_waiting >= -1e-12, "negative waiting");
+        let max = devices
+            .iter()
+            .map(|d| d.completion_time())
+            .fold(0.0f64, f64::max);
+        prop_assert!(
+            (t.round_time - max).abs() < 1e-9,
+            "round != max completion"
+        );
+        prop_assert!(
+            t.avg_waiting <= t.round_time + 1e-9,
+            "waiting > round time"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bernoulli(0.5)),
+            2 => Value::Num(
+                (rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0,
+            ),
+            3 => {
+                let n = rng.range(0, 12);
+                Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            char::from_u32(rng.range(32, 1000) as u32)
+                                .unwrap_or('x')
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Arr(
+                (0..rng.range(0, 5))
+                    .map(|_| random_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Value::Obj(
+                (0..rng.range(0, 5))
+                    .map(|i| {
+                        (format!("k{i}"), random_value(rng, depth - 1))
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", 256, |rng, _| {
+        let v = random_value(rng, 3);
+        let text = v.to_string();
+        let parsed = Value::parse(&text)
+            .map_err(|e| format!("parse failed on {text}: {e}"))?;
+        prop_assert!(parsed == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_range_bounds() {
+    check("rng-ranges", 256, |rng, _| {
+        let lo = rng.range(0, 1000);
+        let hi = lo + rng.range(1, 1000);
+        for _ in 0..20 {
+            let x = rng.range(lo, hi);
+            prop_assert!((lo..hi).contains(&x), "{x} not in {lo}..{hi}");
+            let y = rng.range_incl(lo, hi);
+            prop_assert!(
+                (lo..=hi).contains(&y),
+                "{y} not in {lo}..={hi}"
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,199 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These exercise the full three-layer compose: Pallas kernel (L1) and
+//! JAX train/eval steps (L2) lowered to HLO text, loaded and executed
+//! from rust (L3). They require `make artifacts` to have run; each
+//! test skips (passes vacuously) if artifacts/ is absent so `cargo
+//! test` stays green on a fresh clone.
+
+use legend::data::{grammar, Spec};
+use legend::model::masks::{LayerSet, LoraConfig};
+use legend::model::state::{init_opt, init_trainable};
+use legend::runtime::session::SessionState;
+use legend::runtime::{KernelDims, Masks, Runtime};
+use legend::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(&format!("{dir}/manifest.json"))
+        .exists()
+        .then(|| dir.to_string())
+}
+
+/// Host-side reference of the fused LoRA linear (mirrors ref.py).
+fn lora_linear_host(x: &[f32], w: &[f32], a: &[f32], b: &[f32],
+                    mask: &[f32], scale: f32, m: usize, k: usize,
+                    n: usize, r: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        // low = x · (mask ⊙ a)^T
+        let mut low = vec![0f32; r];
+        for j in 0..r {
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += x[i * k + t] * a[j * k + t];
+            }
+            low[j] = acc * mask[j];
+        }
+        for j in 0..n {
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += x[i * k + t] * w[t * n + j];
+            }
+            let mut byp = 0f32;
+            for t in 0..r {
+                byp += low[t] * b[j * r + t] * mask[t];
+            }
+            out[i * n + j] = acc + scale * byp;
+        }
+    }
+    out
+}
+
+#[test]
+fn pallas_kernel_matches_host_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("runtime loads");
+    let dims = KernelDims::from_manifest(&dir).unwrap();
+    let (m, k, n, r) = (dims.m, dims.k, dims.n, dims.r);
+    let mut rng = Rng::new(99);
+    let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32 * 0.5).collect()
+    };
+    let x = gen(&mut rng, m * k);
+    let w = gen(&mut rng, k * n);
+    let a = gen(&mut rng, r * k);
+    let b = gen(&mut rng, n * r);
+    let mut mask = vec![1f32; r];
+    for item in mask.iter_mut().skip(r / 2) {
+        *item = 0.0; // half the rank slots padded
+    }
+    let scale = 1.75f32;
+
+    let got = rt.run_kernel(&x, &w, &a, &b, &mask, scale, &dims).unwrap();
+    let want = lora_linear_host(&x, &w, &a, &b, &mask, scale, m, k, n, r);
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "kernel vs host ref max err {max_err}");
+}
+
+#[test]
+fn train_step_decreases_loss_and_respects_masks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    let dim = rt.manifest.dim.clone();
+
+    let spec = Spec::load(&format!("{dir}/vocab.json")).unwrap();
+    let mut rng = Rng::new(5);
+    let ds = grammar::generate(&spec, "sst2", 64, &mut rng).unwrap();
+
+    let mut state_rng = Rng::new(7);
+    let trainable = init_trainable(&rt.manifest, &rt.manifest.lora,
+                                   &mut state_rng);
+    let opt = init_opt(&rt.manifest.lora);
+    let mut session = SessionState::from_maps(&trainable, &opt).unwrap();
+
+    // LEGEND-style config: depth 4, increasing ranks.
+    let cfg = LoraConfig {
+        layers: LayerSet::Depth(4),
+        ranks: (1..=dim.n_layers).collect(),
+    };
+    let masks = Masks {
+        rank_mask: cfg.rank_mask(dim.n_layers, dim.r_max),
+        layer_mask: cfg.layer_mask(dim.n_layers),
+    };
+
+    let batches = ds.batches(dim.batch_size);
+    let mut losses = Vec::new();
+    let mut step = 0f32;
+    for epoch in 0..6 {
+        let _ = epoch;
+        for (toks, labels) in &batches {
+            step += 1.0;
+            let stats = rt
+                .train_step("lora", &mut session, &masks, toks, labels,
+                            2e-3, step)
+                .unwrap();
+            assert!(stats.loss.is_finite(), "loss diverged");
+            losses.push(stats.loss as f64);
+        }
+    }
+    let head = losses[..batches.len()].iter().sum::<f64>()
+        / batches.len() as f64;
+    let tail = losses[losses.len() - batches.len()..].iter().sum::<f64>()
+        / batches.len() as f64;
+    assert!(
+        tail < head,
+        "loss should fall during local fine-tuning: {head} → {tail}"
+    );
+
+    // Masked invariants: inactive layers + padded ranks never move.
+    let (t2, _) = session.to_maps().unwrap();
+    let l = dim.n_layers;
+    let r = dim.r_max;
+    let d = dim.d_model;
+    let old_aq = trainable.get("aq").unwrap();
+    let new_aq = t2.get("aq").unwrap();
+    // layer 0 is inactive at depth 4 → whole [r, d] slab unchanged.
+    assert_eq!(&old_aq[..r * d], &new_aq[..r * d], "inactive layer moved");
+    // deepest layer: active ranks move, padded ranks don't.
+    let lay = l - 1;
+    let active_r = dim.n_layers.min(r); // ranks[l-1] = L
+    let slab = |buf: &[f32], row: usize| -> Vec<f32> {
+        buf[lay * r * d + row * d..lay * r * d + (row + 1) * d].to_vec()
+    };
+    if active_r < r {
+        assert_eq!(
+            slab(old_aq, r - 1),
+            slab(new_aq, r - 1),
+            "padded rank slot moved"
+        );
+    }
+    // Eval runs and returns sane numbers.
+    let (loss, acc) = rt.evaluate("lora", &t2, &masks, &ds).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn adapter_family_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    let dim = rt.manifest.dim.clone();
+    let spec = Spec::load(&format!("{dir}/vocab.json")).unwrap();
+    let mut rng = Rng::new(6);
+    let ds = grammar::generate(&spec, "mmlu", 64, &mut rng).unwrap();
+
+    let mut state_rng = Rng::new(8);
+    let trainable = init_trainable(&rt.manifest, &rt.manifest.adapter,
+                                   &mut state_rng);
+    let opt = init_opt(&rt.manifest.adapter);
+    let mut session = SessionState::from_maps(&trainable, &opt).unwrap();
+
+    // FedAdapter-style: width 8 adapters on the deepest 6 layers.
+    let cfg = LoraConfig::uniform(LayerSet::Depth(6), 8, dim.n_layers);
+    let masks = Masks {
+        rank_mask: cfg.rank_mask(dim.n_layers, dim.adapter_w_max),
+        layer_mask: cfg.layer_mask(dim.n_layers),
+    };
+    let batches = ds.batches(dim.batch_size);
+    let mut step = 0f32;
+    let mut first = None;
+    let mut last = 0f32;
+    for _ in 0..4 {
+        for (toks, labels) in &batches {
+            step += 1.0;
+            let stats = rt
+                .train_step("adapter", &mut session, &masks, toks, labels,
+                            2e-3, step)
+                .unwrap();
+            assert!(stats.loss.is_finite());
+            first.get_or_insert(stats.loss);
+            last = stats.loss;
+        }
+    }
+    assert!(last < first.unwrap() + 0.5, "adapter training unstable");
+}

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md <!-- RESULTS --> from results/*.csv.
+
+Build-tooling only (not part of the request path): summarizes each
+experiment CSV into the paper-style rows quoted in EXPERIMENTS.md.
+"""
+
+import csv
+import glob
+import os
+import sys
+
+
+def load(path):
+    runs = {}
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            key = (row["method"], row["task"])
+            runs.setdefault(key, []).append(row)
+    return runs
+
+
+def summarize(path):
+    runs = load(path)
+    if not runs:
+        return ""
+    # shared target = min over methods of best acc, with tolerance
+    best = {k: max(float(r["test_acc"]) for r in v)
+            for k, v in runs.items()}
+    target = min(best.values()) * 0.995
+    lines = [f"### {os.path.basename(path)[:-4]} (target acc {target:.3f})",
+             "",
+             "| method | task | best acc | t→target | traffic→target | wait avg |",
+             "|---|---|---|---|---|---|"]
+    # reference time = slowest to target
+    times = {}
+    for k, v in runs.items():
+        t = next((float(r["sim_time"]) for r in v
+                  if float(r["test_acc"]) >= target), None)
+        times[k] = t
+    worst = max((t for t in times.values() if t), default=None)
+    for k, v in sorted(runs.items()):
+        t = times[k]
+        traffic = 0
+        tt = None
+        for r in v:
+            traffic += int(r["up_bytes"]) + int(r["down_bytes"])
+            if tt is None and float(r["test_acc"]) >= target:
+                tt = traffic
+        wait = sum(float(r["avg_waiting"]) for r in v) / len(v)
+        speed = f"{worst/t:.2f}×" if (t and worst) else "—"
+        lines.append(
+            f"| {k[0]} | {k[1]} | {best[k]:.3f} | "
+            f"{f'{t:.0f}s ({speed})' if t else '—'} | "
+            f"{f'{tt/1e6:.1f} MB' if tt else '—'} | {wait:.1f}s |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    blocks = []
+    for path in sorted(glob.glob("results/fig*.csv")):
+        blocks.append(summarize(path))
+    text = open("EXPERIMENTS.md").read()
+    marker = "<!-- RESULTS -->"
+    if marker not in text:
+        print("marker missing", file=sys.stderr)
+        sys.exit(1)
+    text = text.replace(marker, "\n\n".join(blocks) or marker, 1)
+    # e2e block if present
+    e2e = "results/e2e_sst2.csv"
+    if os.path.exists(e2e):
+        text = text.replace("<!-- E2E -->", summarize(e2e), 1)
+    open("EXPERIMENTS.md", "w").write(text)
+    print(f"filled EXPERIMENTS.md with {len(blocks)} experiment blocks")
+
+
+if __name__ == "__main__":
+    main()
