@@ -286,6 +286,72 @@ fn main() {
         });
     }
 
+    // ---- engine: sequential vs parallel phase ④ ----------------------------
+    // Full-size global tensors so each mock device does real memory
+    // work; same seed at every thread count ⇒ identical RunRecords,
+    // only the wall-clock changes. Emits BENCH_engine.json.
+    if want("engine") {
+        let engine_round = |n_dev: usize, threads: usize| -> f64 {
+            let mut s = strategy::by_name("legend", L, R, 32).unwrap();
+            let mut fleet = Fleet::new(FleetConfig::sized(n_dev));
+            let mut trainer = MockTrainer::new("lora");
+            let cfg = FedConfig {
+                rounds: 2,
+                train_size: n_dev * 64,
+                test_size: 64,
+                threads,
+                ..Default::default()
+            };
+            let global = TensorMap::zeros(&real_specs());
+            let t0 = Instant::now();
+            let _ = run_federated(&cfg, &mut fleet, s.as_mut(),
+                                  &mut trainer, &meta, &spec, global)
+                .unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        println!(
+            "{:<40} {:>12} {:>12} {:>12} {:>7}",
+            "engine_seq_vs_par", "seq", "par", "speedup", "devs"
+        );
+        let mut rows = Vec::new();
+        for n_dev in [8usize, 64, 256] {
+            let best = |threads: usize| {
+                (0..3)
+                    .map(|_| engine_round(n_dev, threads))
+                    .fold(f64::MAX, f64::min)
+            };
+            let seq_ms = best(1);
+            let par_ms = best(0);
+            let speedup = seq_ms / par_ms.max(1e-9);
+            println!(
+                "{:<40} {:>9.1} ms {:>9.1} ms {:>11.2}× {:>7}",
+                format!("engine_2_rounds_{n_dev}dev"),
+                seq_ms,
+                par_ms,
+                speedup,
+                n_dev
+            );
+            rows.push(Value::obj(vec![
+                ("devices", Value::Num(n_dev as f64)),
+                ("rounds", Value::Num(2.0)),
+                ("seq_ms", Value::Num(seq_ms)),
+                ("par_ms", Value::Num(par_ms)),
+                ("speedup", Value::Num(speedup)),
+            ]));
+        }
+        let threads_auto = legend::coordinator::engine::effective_threads(0);
+        let doc = Value::obj(vec![
+            ("bench", Value::Str("engine_seq_vs_par".into())),
+            ("trainer", Value::Str("mock".into())),
+            ("threads_auto", Value::Num(threads_auto as f64)),
+            ("fleets", Value::Arr(rows)),
+        ]);
+        match std::fs::write("BENCH_engine.json", doc.to_string()) {
+            Ok(()) => println!("wrote BENCH_engine.json"),
+            Err(e) => println!("(BENCH_engine.json not written: {e})"),
+        }
+    }
+
     // ---- artifact-backed (L1/L2 hot path) -----------------------------------
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = Runtime::load("artifacts").expect("runtime");

@@ -7,6 +7,15 @@
 //! granularity so HetLoRA's zero-padded mismatched ranks aggregate
 //! correctly too. Slots no device holds this round keep their previous
 //! global value.
+//!
+//! Two implementations of the same eq. 17 math:
+//! * [`aggregate`] — the buffered one-shot reference over a
+//!   `&[DeviceUpdate]` (kept for tests/benches and as the oracle the
+//!   property suite compares against);
+//! * [`StreamingAggregator`] — folds updates one at a time as they
+//!   arrive from the round engine, holding only the running weighted
+//!   sums: O(model size) memory, independent of the fleet size. Folded
+//!   in the same order, it is bit-identical to the buffered path.
 
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
@@ -120,6 +129,133 @@ pub fn aggregate(global: &mut TensorMap, updates: &[DeviceUpdate],
             if wsum[e] > 0.0 {
                 g[e] = (acc[e] / wsum[e]) as f32;
             } // else: keep previous global value (n_l = 0 this round)
+        }
+    }
+}
+
+/// Streaming eq. 17: fold updates into running per-element weighted
+/// sums as they arrive, then write the averages back once per round.
+///
+/// ```text
+/// let mut agg = StreamingAggregator::new(&global, l, r);
+/// for each arriving update { agg.push(&update.trainable, &cfg, w); }
+/// agg.finish(&mut global);
+/// ```
+#[derive(Debug, Clone)]
+pub struct StreamingAggregator {
+    n_layers: usize,
+    rank_dim: usize,
+    /// Per global tensor: (name, pattern, element count).
+    layout: Vec<(String, Pattern, usize)>,
+    acc: Vec<Vec<f64>>,
+    wsum: Vec<Vec<f64>>,
+    n_updates: usize,
+}
+
+impl StreamingAggregator {
+    /// Capture the global model's tensor layout; no data is copied.
+    pub fn new(global: &TensorMap, n_layers: usize, rank_dim: usize)
+               -> Self {
+        let layout: Vec<(String, Pattern, usize)> = global
+            .entries
+            .iter()
+            .map(|(spec, g)| {
+                (
+                    spec.name.clone(),
+                    classify(&spec.shape, n_layers, rank_dim),
+                    g.len(),
+                )
+            })
+            .collect();
+        let acc = layout.iter().map(|&(_, _, n)| vec![0f64; n]).collect();
+        let wsum =
+            layout.iter().map(|&(_, _, n)| vec![0f64; n]).collect();
+        StreamingAggregator {
+            n_layers,
+            rank_dim,
+            layout,
+            acc,
+            wsum,
+            n_updates: 0,
+        }
+    }
+
+    /// Fold one device's update into the running sums (O(model size);
+    /// the update can be dropped immediately afterwards).
+    pub fn push(&mut self, trainable: &TensorMap, config: &LoraConfig,
+                weight: f64) {
+        let mask = config.rank_mask(self.n_layers, self.rank_dim);
+        for (ti, (name, pat, n)) in self.layout.iter().enumerate() {
+            let x = trainable
+                .get(name)
+                .expect("device update missing tensor");
+            debug_assert_eq!(x.len(), *n, "shape drift in {name}");
+            let (acc, wsum) = (&mut self.acc[ti], &mut self.wsum[ti]);
+            let w = weight;
+            match *pat {
+                Pattern::Full => {
+                    for (e, &v) in x.iter().enumerate() {
+                        acc[e] += w * v as f64;
+                        wsum[e] += w;
+                    }
+                }
+                Pattern::Rows { r, inner } => {
+                    for l in 0..self.n_layers {
+                        for j in 0..r {
+                            let m = mask[l * r + j] as f64 * w;
+                            if m == 0.0 {
+                                continue;
+                            }
+                            let off = (l * r + j) * inner;
+                            for e in off..off + inner {
+                                acc[e] += m * x[e] as f64;
+                                wsum[e] += m;
+                            }
+                        }
+                    }
+                }
+                Pattern::Cols { r, inner } => {
+                    for l in 0..self.n_layers {
+                        for j in 0..r {
+                            let m = mask[l * r + j] as f64 * w;
+                            if m == 0.0 {
+                                continue;
+                            }
+                            let base = l * inner * r + j;
+                            for i in 0..inner {
+                                let e = base + i * r;
+                                acc[e] += m * x[e] as f64;
+                                wsum[e] += m;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.n_updates += 1;
+    }
+
+    /// Number of updates folded so far.
+    pub fn n_updates(&self) -> usize {
+        self.n_updates
+    }
+
+    /// Write the layer-wise averages into `global`. Slots no device
+    /// held this round keep their previous global value; with zero
+    /// updates this is a no-op (matches [`aggregate`] on `&[]`).
+    pub fn finish(self, global: &mut TensorMap) {
+        if self.n_updates == 0 {
+            return;
+        }
+        for (ti, (spec, g)) in global.entries.iter_mut().enumerate() {
+            debug_assert_eq!(spec.name, self.layout[ti].0,
+                             "global layout drift");
+            let (acc, wsum) = (&self.acc[ti], &self.wsum[ti]);
+            for e in 0..g.len() {
+                if wsum[e] > 0.0 {
+                    g[e] = (acc[e] / wsum[e]) as f32;
+                }
+            }
         }
     }
 }
@@ -272,6 +408,33 @@ mod tests {
     fn empty_update_set_is_noop() {
         let mut g = filled(5.0);
         aggregate(&mut g, &[], L, R);
+        assert!(g.get("aq").unwrap().iter().all(|&x| x == 5.0));
+    }
+
+    #[test]
+    fn streaming_matches_buffered_bitwise() {
+        let ups = vec![
+            update(2.0, L, vec![3; L]),
+            update(6.0, 1, vec![1; L]),
+            update(-1.5, 2, vec![2; L]),
+        ];
+        let mut buffered = filled(9.0);
+        aggregate(&mut buffered, &ups, L, R);
+
+        let mut streamed = filled(9.0);
+        let mut agg = StreamingAggregator::new(&streamed, L, R);
+        for u in &ups {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        assert_eq!(agg.n_updates(), 3);
+        agg.finish(&mut streamed);
+        assert_eq!(buffered, streamed, "streaming must be bit-identical");
+    }
+
+    #[test]
+    fn streaming_empty_is_noop() {
+        let mut g = filled(5.0);
+        StreamingAggregator::new(&g, L, R).finish(&mut g);
         assert!(g.get("aq").unwrap().iter().all(|&x| x == 5.0));
     }
 }

@@ -1,0 +1,548 @@
+//! # RoundEngine — the parallel, streaming round loop
+//!
+//! Architecture. `server::run_federated` used to be a ~250-line
+//! monolith that simulated every device *sequentially* and buffered
+//! all `n` update TensorMaps before aggregating — O(n) wall-clock and
+//! O(n) memory per round, against a paper whose whole point is
+//! exploiting heterogeneity across large fleets. This module factors
+//! the six phases (§3) into an engine with three independent axes:
+//!
+//! 1. **Execution** — phase ④ (local fine-tuning) is expressed as a
+//!    vector of [`TrainJob`]s handed to [`Trainer::train_cohort`].
+//!    Backends whose per-device handles are `Send` (the mock; any
+//!    future multi-client PJRT pool) run them on a scoped worker pool
+//!    ([`train_parallel`]); non-thread-safe backends run them in
+//!    device order ([`train_sequential`]). Either way the engine
+//!    *re-serializes* outcomes into device-index order through a
+//!    reorder buffer, so every downstream effect — transport
+//!    accounting, aggregation folds, loss bookkeeping — is identical
+//!    at every thread count: same seed ⇒ bit-identical [`RunRecord`].
+//!
+//! 2. **Aggregation** — instead of buffering `Vec<DeviceUpdate>` and
+//!    calling the one-shot `aggregate()`, the engine folds each update
+//!    into a [`StreamingAggregator`] as it is re-serialized, then
+//!    finalizes once per round. The fold itself is O(model size),
+//!    independent of the fleet; the fold order (device index) makes
+//!    the result bit-identical to the buffered eq. 17 path. Caveat:
+//!    under parallel execution the reorder buffer holds outcomes that
+//!    finished ahead of the lowest-index straggler, so worst-case
+//!    transient memory is still skew-bounded by the cohort size —
+//!    backpressure on the in-flight window is a ROADMAP item.
+//!
+//! 3. **Participation** — cohort selection is delegated to a
+//!    [`Participation`] policy with two hooks: `sample` picks which
+//!    devices take part before configuration (full participation,
+//!    uniform client sampling), and `admit` filters the configured
+//!    cohort by predicted eq. 12 completion time (straggler-deadline
+//!    drop). New FL scenarios plug in without touching this loop.
+//!    Devices outside the cohort exchange no bytes this round: no
+//!    status report, no assignment, no upload (Fig. 11 accounting
+//!    stays honest under sampling).
+//!
+//! Determinism contract: all RNG draws (data, fleet observation,
+//! participation) happen on the coordinator thread in a fixed order;
+//! per-device training state is keyed by device id and derived from
+//! the run seed, never from arrival order.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use anyhow::Result;
+
+use crate::data::{grammar, partition, Dataset, Spec};
+use crate::device::profile::calib;
+use crate::device::Fleet;
+use crate::metrics::{RoundRecord, RunRecord};
+use crate::model::masks::LoraConfig;
+use crate::model::state::TensorMap;
+use crate::runtime::Masks;
+use crate::sim::clock::{simulate_round, DeviceRound, VirtualClock};
+use crate::util::rng::Rng;
+
+use super::aggregation::StreamingAggregator;
+use super::capacity::CapacityEstimator;
+use super::participation::Participation;
+use super::server::{cosine_lr, FedConfig, ModelMeta};
+use super::strategy::{Strategy, StrategyCtx};
+use super::trainer::{CohortSink, DeviceTrainer, LocalOutcome, Trainer};
+use super::transport::Transport;
+
+/// One device's phase-④ work item. Everything a worker thread needs,
+/// by value or by shared reference: the assignment payload is read
+/// straight from the global model (the in-process "wire" — transport
+/// counts the active-slot bytes that would actually travel).
+pub struct TrainJob<'a> {
+    pub device_id: usize,
+    pub init: &'a TensorMap,
+    pub masks: Masks,
+    pub shard: &'a Dataset,
+    pub lr: f32,
+    pub max_batches: usize,
+}
+
+/// Resolve a `threads` setting: 0 = one worker per available core.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Drive `handles[i]` over `jobs[i]` in job order on the calling
+/// thread. Works for any backend (handles need not be `Send`).
+pub fn train_sequential<H: DeviceTrainer>(
+    jobs: &[TrainJob<'_>], handles: &mut [H], sink: CohortSink<'_>,
+) -> Result<()> {
+    debug_assert_eq!(jobs.len(), handles.len());
+    for (i, (job, h)) in jobs.iter().zip(handles.iter_mut()).enumerate() {
+        let out = h.train_local(job)?;
+        sink(i, out)?;
+    }
+    Ok(())
+}
+
+/// Drive `handles[i]` over `jobs[i]` on up to `threads` scoped worker
+/// threads (0 = auto). Outcomes are delivered to `sink` on the calling
+/// thread *as they complete*, in arbitrary order — callers that need
+/// device-index order install a reorder buffer (the engine does).
+///
+/// Each device's outcome is a pure function of `(job, handle)`, so the
+/// result set is independent of scheduling; only delivery order varies.
+pub fn train_parallel<H: DeviceTrainer + Send>(
+    jobs: &[TrainJob<'_>], handles: &mut [H], threads: usize,
+    sink: CohortSink<'_>,
+) -> Result<()> {
+    debug_assert_eq!(jobs.len(), handles.len());
+    let n = jobs.len();
+    let workers = effective_threads(threads).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return train_sequential(jobs, handles, sink);
+    }
+
+    // Work stealing off an atomic cursor; each handle is touched by
+    // exactly one claim, the Mutex only proves that to the compiler.
+    let cells: Vec<Mutex<&mut H>> =
+        handles.iter_mut().map(Mutex::new).collect();
+    let next = AtomicUsize::new(0);
+    // First failure aborts the round: workers stop claiming new jobs
+    // instead of training the rest of the cohort to completion.
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Result<LocalOutcome>)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (cells, next, abort) = (&cells, &next, &abort);
+            s.spawn(move || loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = cells[i]
+                    .lock()
+                    .expect("job cell poisoned")
+                    .train_local(&jobs[i]);
+                if out.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                if tx.send((i, out)).is_err() {
+                    break; // receiver gone: the round was aborted
+                }
+            });
+        }
+        drop(tx);
+        // Drain until the channel closes (all workers exited) so no
+        // sender blocks; on abort the tail of the cohort is simply
+        // never claimed. A sink (fold/accounting) failure outranks
+        // training failures — it fired first and is deterministic;
+        // among training failures, surface the lowest job index
+        // (best-effort determinism — which jobs ran at all depends on
+        // abort timing).
+        let mut sink_err: Option<anyhow::Error> = None;
+        let mut train_err: Option<(usize, anyhow::Error)> = None;
+        while let Ok((i, res)) = rx.recv() {
+            match res {
+                Ok(out)
+                    if sink_err.is_none() && train_err.is_none() =>
+                {
+                    if let Err(e) = sink(i, out) {
+                        abort.store(true, Ordering::Relaxed);
+                        sink_err = Some(e);
+                    }
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    if train_err
+                        .as_ref()
+                        .map_or(true, |(j, _)| i < *j)
+                    {
+                        train_err =
+                            Some((i, e.context(format!("job {i}"))));
+                    }
+                }
+            }
+        }
+        match (sink_err, train_err) {
+            (Some(e), _) => Err(e),
+            (None, Some((_, e))) => Err(e),
+            (None, None) => Ok(()),
+        }
+    })
+}
+
+/// The round-loop engine. Owns nothing across runs; all persistent
+/// state (estimator, clock, transport tallies) lives for one `run`.
+pub struct RoundEngine<'a> {
+    cfg: &'a FedConfig,
+    meta: &'a ModelMeta,
+}
+
+impl<'a> RoundEngine<'a> {
+    pub fn new(cfg: &'a FedConfig, meta: &'a ModelMeta) -> Self {
+        RoundEngine { cfg, meta }
+    }
+
+    /// Run one full federated fine-tuning experiment.
+    pub fn run(&self, fleet: &mut Fleet, strategy: &mut dyn Strategy,
+               trainer: &mut dyn Trainer, spec: &Spec,
+               mut global: TensorMap,
+               participation: &mut dyn Participation)
+               -> Result<RunRecord> {
+        let cfg = self.cfg;
+        let meta = self.meta;
+        let n = fleet.len();
+        let family = trainer.family();
+        let rank_dim = meta.rank_dim(family);
+        let unit_bytes = meta.unit_bytes(family);
+
+        // ---- data ---------------------------------------------------------
+        let mut data_rng = Rng::new(cfg.seed).child("data");
+        let task = spec.task(&cfg.task)?.clone();
+        let train =
+            grammar::generate(spec, &cfg.task, cfg.train_size, &mut data_rng)?;
+        let test_size = (cfg.test_size / 64).max(1) * 64;
+        let test =
+            grammar::generate(spec, &cfg.task, test_size, &mut data_rng)?;
+        let how = if cfg.alpha > 0.0 {
+            partition::Partition::Dirichlet { alpha: cfg.alpha }
+        } else {
+            partition::Partition::Iid
+        };
+        let batch = trainer.batch_size();
+        let shards = partition::split(&train, n, how, task.n_classes,
+                                      batch, &mut data_rng);
+
+        // ---- state --------------------------------------------------------
+        let mut estimator = CapacityEstimator::paper(n);
+        let transport = Transport::new();
+        let mut clock = VirtualClock::new();
+        let mut record = RunRecord::new(&strategy.name(), &cfg.task);
+        let mut part_rng = Rng::new(cfg.seed).child("participation");
+        let mut last_losses = vec![0f64; n];
+        let mut last_round_time = 0f64;
+        let mut last_acc = 0f64;
+        let mut last_test_loss = 0f64;
+
+        for h in 1..=cfg.rounds {
+            if h > 1 {
+                fleet.advance_round();
+            }
+            transport.begin_round(h);
+
+            // ①a cohort sampling (pre-configuration). An empty or
+            // out-of-range sample keeps the round minimal (device 0
+            // only) rather than silently reverting to full
+            // participation — mirroring the admit() fallback below.
+            let cohort =
+                sanitize(participation.sample(h, n, &mut part_rng), n)
+                    .unwrap_or_else(|| vec![0]);
+
+            // ①b status reports → capacity estimation (eq. 8–9).
+            // Only sampled devices report: a skipped device costs
+            // zero bytes this round, STATUS_BYTES included.
+            for &i in &cohort {
+                let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
+                transport.recv_status(i);
+                estimator.update(i, mu_hat, beta_hat);
+            }
+            let estimates: Vec<_> = cohort
+                .iter()
+                .map(|&i| estimator.get(i).expect("cohort reported"))
+                .collect();
+            let n_batches: Vec<usize> = cohort
+                .iter()
+                .map(|&i| {
+                    shards[i].len().div_ceil(batch).min(cfg.max_batches)
+                })
+                .collect();
+
+            // ② LoRA configuration (§4.4) over the cohort.
+            let fwd_times: Vec<f64> = estimates
+                .iter()
+                .map(|c| calib::FWD_FRAC * c.mu * meta.n_layers as f64)
+                .collect();
+            let ctx = StrategyCtx {
+                round: h,
+                n_layers: meta.n_layers,
+                rank_dim,
+                fwd_times: fwd_times.clone(),
+                estimates: estimates.clone(),
+                n_batches: n_batches.clone(),
+                unit_rank_bytes: unit_bytes,
+                compute_budgets: vec![f64::MAX; cohort.len()],
+                comm_budgets: vec![usize::MAX; cohort.len()],
+                last_losses: cohort
+                    .iter()
+                    .map(|&i| last_losses[i])
+                    .collect(),
+                last_round_time,
+                device_ids: cohort.clone(),
+            };
+            let plan = strategy.configure(&ctx);
+            debug_assert_eq!(plan.device_configs.len(), cohort.len());
+
+            // ①c deadline admission: predicted eq. 12 completion from
+            // the PS-side *estimates* (the true parameters are not
+            // observable at the server). Same DeviceRound math as
+            // phase ⑥, just fed with estimates instead of truth.
+            let predicted: Vec<f64> = (0..cohort.len())
+                .map(|j| {
+                    device_round(meta, unit_bytes, cohort[j],
+                                 estimates[j].mu, estimates[j].beta,
+                                 fwd_times[j],
+                                 &plan.device_configs[j],
+                                 n_batches[j])
+                        .completion_time()
+                })
+                .collect();
+            let admitted = {
+                let a = sanitize(
+                    participation.admit(h, &cohort, &predicted),
+                    n,
+                );
+                match a {
+                    Some(a)
+                        if a.iter()
+                            .all(|i| cohort.binary_search(i).is_ok()) =>
+                    {
+                        a
+                    }
+                    // A policy that admits nobody (or out-of-cohort
+                    // ids) still gets a well-formed round: keep the
+                    // single fastest-predicted device — honoring the
+                    // drop intent — rather than silently reverting to
+                    // full participation (eq. 12/13 need ≥ 1
+                    // participant).
+                    _ => {
+                        let j_min = predicted
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(j, _)| j)
+                            .unwrap_or(0);
+                        vec![cohort[j_min]]
+                    }
+                }
+            };
+            // Cohort positions of the admitted devices.
+            let admitted_pos: Vec<usize> = admitted
+                .iter()
+                .map(|i| cohort.binary_search(i).unwrap())
+                .collect();
+
+            // ③ assignment + download accounting (§4.6), ④ local
+            // fine-tuning, ⑤ streaming upload accounting + layer-wise
+            // aggregation (eq. 17).
+            let lr = cosine_lr(cfg.lr0, h, cfg.rounds) as f32;
+            let jobs: Vec<TrainJob<'_>> = admitted_pos
+                .iter()
+                .map(|&j| {
+                    let i = cohort[j];
+                    let config = &plan.device_configs[j];
+                    transport.send_assignment(i, &global, config,
+                                              meta.n_layers, rank_dim);
+                    TrainJob {
+                        device_id: i,
+                        init: &global,
+                        masks: Masks {
+                            rank_mask: config
+                                .rank_mask(meta.n_layers, rank_dim),
+                            layer_mask: config.layer_mask(meta.n_layers),
+                        },
+                        shard: &shards[i],
+                        lr,
+                        max_batches: cfg.max_batches,
+                    }
+                })
+                .collect();
+
+            let mut agg =
+                StreamingAggregator::new(&global, meta.n_layers, rank_dim);
+            let mut loss_sum = 0f64;
+            {
+                // Reorder buffer: outcomes may arrive in any order
+                // from the worker pool; fold them in device-index
+                // order so accounting and eq. 17 sums are bit-stable.
+                let mut pending: BTreeMap<usize, LocalOutcome> =
+                    BTreeMap::new();
+                let mut next_k = 0usize;
+                let transport = &transport;
+                let plan = &plan;
+                let (cohort_r, admitted_pos_r) = (&cohort, &admitted_pos);
+                let (agg_r, losses_r, loss_sum_r) =
+                    (&mut agg, &mut last_losses, &mut loss_sum);
+                let mut fold = |k: usize, out: LocalOutcome| {
+                    let j = admitted_pos_r[k];
+                    let i = cohort_r[j];
+                    let config = &plan.device_configs[j];
+                    transport.recv_update(i, &out.trainable, config,
+                                          meta.n_layers, rank_dim);
+                    agg_r.push(&out.trainable, config, 1.0);
+                    losses_r[i] = out.mean_loss;
+                    *loss_sum_r += out.mean_loss;
+                    Ok::<(), anyhow::Error>(())
+                };
+                let mut sink = |k: usize, out: LocalOutcome| {
+                    pending.insert(k, out);
+                    while let Some(out) = pending.remove(&next_k) {
+                        fold(next_k, out)?;
+                        next_k += 1;
+                    }
+                    Ok::<(), anyhow::Error>(())
+                };
+                trainer.train_cohort(&jobs, cfg.threads, &mut sink)?;
+                debug_assert_eq!(next_k, jobs.len(),
+                                 "missing device outcomes");
+            }
+            drop(jobs);
+            let tally = transport.round_tally();
+            agg.finish(&mut global);
+
+            // ⑥ timing (eq. 12/13) with TRUE device parameters, over
+            // the devices that actually took part.
+            let rounds_t: Vec<DeviceRound> = admitted_pos
+                .iter()
+                .map(|&j| {
+                    let i = cohort[j];
+                    let d = &fleet.devices[i];
+                    device_round(meta, unit_bytes, i, d.true_mu(),
+                                 d.true_beta(unit_bytes),
+                                 d.compute.forward_time(meta.n_layers),
+                                 &plan.device_configs[j], n_batches[j])
+                })
+                .collect();
+            let timing = simulate_round(&rounds_t);
+            clock.advance(&timing);
+            last_round_time = timing.round_time;
+
+            // Evaluation of the aggregated global model.
+            if h % cfg.eval_every == 0 || h == cfg.rounds {
+                let eval_masks = Masks {
+                    rank_mask: plan
+                        .eval_config
+                        .rank_mask(meta.n_layers, rank_dim),
+                    layer_mask: plan.eval_config.layer_mask(meta.n_layers),
+                };
+                let (tl, ta) =
+                    trainer.evaluate(&global, &eval_masks, &test)?;
+                last_acc = ta;
+                last_test_loss = tl;
+            }
+
+            let mean_depth = admitted_pos
+                .iter()
+                .map(|&j| {
+                    plan.device_configs[j].depth(meta.n_layers) as f64
+                })
+                .sum::<f64>()
+                / admitted.len().max(1) as f64;
+            record.rounds.push(RoundRecord {
+                round: h,
+                sim_time: clock.elapsed,
+                round_time: timing.round_time,
+                avg_waiting: timing.avg_waiting,
+                up_bytes: tally.uplink,
+                down_bytes: tally.downlink,
+                train_loss: loss_sum / admitted.len().max(1) as f64,
+                test_acc: last_acc,
+                test_loss: last_test_loss,
+                mean_depth,
+                participants: admitted.len(),
+                dropped: cohort.len() - admitted.len(),
+            });
+            if cfg.verbose {
+                println!(
+                    "[{}/{}] {} t={:.0}s acc={:.3} loss={:.3} \
+                     depth={:.1} wait={:.1}s part={}/{}",
+                    h,
+                    cfg.rounds,
+                    strategy.name(),
+                    clock.elapsed,
+                    last_acc,
+                    loss_sum / admitted.len().max(1) as f64,
+                    mean_depth,
+                    timing.avg_waiting,
+                    admitted.len(),
+                    n,
+                );
+            }
+        }
+        Ok(record)
+    }
+}
+
+/// Eq. 12 inputs for one device. Shared by deadline admission (fed
+/// with PS-side *estimates*) and phase ⑥ timing (fed with TRUE device
+/// parameters) so the two can never drift apart.
+#[allow(clippy::too_many_arguments)]
+fn device_round(meta: &ModelMeta, unit_bytes: usize, device_id: usize,
+                mu: f64, beta: f64, fwd_time_per_batch: f64,
+                config: &LoraConfig, n_batches: usize) -> DeviceRound {
+    DeviceRound {
+        device_id,
+        fwd_time_per_batch,
+        mu,
+        beta,
+        depth: config.backprop_depth(meta.n_layers),
+        ranks: config.active_ranks(meta.n_layers),
+        n_batches,
+        extra_upload_s: beta
+            * (meta.head_bytes as f64 / unit_bytes.max(1) as f64),
+    }
+}
+
+/// Sorted, deduped, in-range, non-empty — or None.
+fn sanitize(mut ids: Vec<usize>, n: usize) -> Option<Vec<usize>> {
+    ids.retain(|&i| i < n);
+    ids.sort_unstable();
+    ids.dedup();
+    if ids.is_empty() {
+        None
+    } else {
+        Some(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_sorts_dedups_bounds() {
+        assert_eq!(sanitize(vec![3, 1, 3, 9], 5), Some(vec![1, 3]));
+        assert_eq!(sanitize(vec![9, 10], 5), None);
+        assert_eq!(sanitize(vec![], 5), None);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

@@ -9,16 +9,24 @@
 //!   aggregation of heterogeneous updates (§4.5, eq. 17);
 //! * [`strategy`] — LEGEND, its two ablations, and the FedLoRA /
 //!   HetLoRA / FedAdapter baselines plus the §2 pre-test variants;
-//! * [`trainer`] — local fine-tuning backends (PJRT-real and mock);
-//! * [`server`] — the parameter-server round loop tying it together.
+//! * [`trainer`] — local fine-tuning backends (PJRT-real and mock),
+//!   split into coordinator-facing [`trainer::Trainer`] and `Send`-able
+//!   per-device [`trainer::DeviceTrainer`] handles;
+//! * [`participation`] — cohort policies (full / uniform sampling /
+//!   straggler-deadline drop);
+//! * [`engine`] — the parallel, streaming round loop;
+//! * [`server`] — run configuration + the public entry points.
 
 pub mod aggregation;
 pub mod capacity;
+pub mod engine;
 pub mod lcd;
+pub mod participation;
 pub mod serialize;
 pub mod server;
 pub mod strategy;
 pub mod transport;
 pub mod trainer;
 
-pub use server::{run_federated, FedConfig, ModelMeta};
+pub use engine::RoundEngine;
+pub use server::{run_federated, run_federated_with, FedConfig, ModelMeta};

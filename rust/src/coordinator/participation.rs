@@ -1,0 +1,195 @@
+//! Participation policies — which devices take part in a round.
+//!
+//! The paper's prototype uses full participation (every device, every
+//! round). Production federated systems rarely do: cross-device FL
+//! samples a cohort per round, and semi-synchronous systems drop
+//! predicted stragglers to bound round time. The [`Participation`]
+//! trait factors that decision out of the round loop
+//! (`coordinator/engine.rs`) with two hooks:
+//!
+//! * [`Participation::sample`] — *before* configuration: pick the
+//!   round's cohort. Sampled-out devices exchange no bytes at all.
+//! * [`Participation::admit`] — *after* configuration: given each
+//!   cohort member's predicted eq. 12 completion time (from the
+//!   PS-side capacity estimates), drop the ones that would blow a
+//!   deadline. Dropped devices never receive an assignment, so they
+//!   contribute zero uplink/downlink to the round tally.
+//!
+//! All randomness flows through the engine-provided [`Rng`] (a child
+//! stream of the run seed), so cohorts are reproducible and
+//! independent of thread count.
+
+use crate::sim::clock::median_completion;
+use crate::util::rng::Rng;
+
+/// Cohort-selection policy hook.
+pub trait Participation {
+    fn name(&self) -> String;
+
+    /// Pick the devices that take part this round (any order; the
+    /// engine sorts/dedups). Must be non-empty: an empty or fully
+    /// out-of-range result makes the engine run a minimal round with
+    /// device 0 only. Default: everyone.
+    fn sample(&mut self, _round: usize, n_devices: usize,
+              _rng: &mut Rng) -> Vec<usize> {
+        (0..n_devices).collect()
+    }
+
+    /// Filter the configured cohort by predicted completion time
+    /// (`predicted[j]` belongs to `cohort[j]`). Must return a
+    /// non-empty subset of `cohort`; an empty or out-of-cohort result
+    /// makes the engine admit only the fastest-predicted device (a
+    /// round needs ≥ 1 participant). Default: keep everyone.
+    fn admit(&mut self, _round: usize, cohort: &[usize],
+             _predicted: &[f64]) -> Vec<usize> {
+        cohort.to_vec()
+    }
+}
+
+/// The paper's setting: all devices, every round.
+pub struct Full;
+
+impl Participation for Full {
+    fn name(&self) -> String {
+        "full".into()
+    }
+}
+
+/// Uniform client sampling: a fresh random ⌈fraction·n⌉-subset per
+/// round (cross-device FL style).
+pub struct UniformSample {
+    pub fraction: f64,
+}
+
+impl Participation for UniformSample {
+    fn name(&self) -> String {
+        format!("sample({:.2})", self.fraction)
+    }
+
+    fn sample(&mut self, _round: usize, n_devices: usize,
+              rng: &mut Rng) -> Vec<usize> {
+        let k = ((self.fraction * n_devices as f64).ceil() as usize)
+            .clamp(1, n_devices.max(1));
+        let mut ids: Vec<usize> = (0..n_devices).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(k);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+/// Straggler-deadline drop (semi-synchronous rounds): admit devices
+/// whose predicted eq. 12 completion time is within
+/// `factor × median(cohort)`; always keep the `min_keep` fastest so a
+/// round can never empty out.
+pub struct DeadlineDrop {
+    pub factor: f64,
+    pub min_keep: usize,
+}
+
+impl DeadlineDrop {
+    pub fn new(factor: f64) -> Self {
+        DeadlineDrop { factor, min_keep: 1 }
+    }
+}
+
+impl Participation for DeadlineDrop {
+    fn name(&self) -> String {
+        format!("deadline({:.2}×median)", self.factor)
+    }
+
+    fn admit(&mut self, _round: usize, cohort: &[usize],
+             predicted: &[f64]) -> Vec<usize> {
+        if cohort.is_empty() {
+            return Vec::new();
+        }
+        let deadline = self.factor * median_completion(predicted);
+        let mut keep: Vec<usize> = (0..cohort.len())
+            .filter(|&j| predicted[j] <= deadline)
+            .collect();
+        if keep.len() < self.min_keep.min(cohort.len()) {
+            // Deadline too tight: fall back to the fastest devices.
+            let mut order: Vec<usize> = (0..cohort.len()).collect();
+            order.sort_by(|&a, &b| {
+                predicted[a]
+                    .total_cmp(&predicted[b])
+                    .then(cohort[a].cmp(&cohort[b]))
+            });
+            keep = order;
+            keep.truncate(self.min_keep.min(cohort.len()));
+            keep.sort_unstable();
+        }
+        keep.into_iter().map(|j| cohort[j]).collect()
+    }
+}
+
+/// Build a policy by name (CLI entry point).
+pub fn by_name(name: &str, sample_frac: f64, deadline_factor: f64)
+               -> Option<Box<dyn Participation>> {
+    Some(match name {
+        "full" => Box::new(Full),
+        "sample" => Box::new(UniformSample { fraction: sample_frac }),
+        "deadline" => Box::new(DeadlineDrop::new(deadline_factor)),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_selects_everyone() {
+        let mut p = Full;
+        let mut rng = Rng::new(1);
+        assert_eq!(p.sample(1, 4, &mut rng), vec![0, 1, 2, 3]);
+        assert_eq!(p.admit(1, &[0, 2], &[1.0, 2.0]), vec![0, 2]);
+    }
+
+    #[test]
+    fn uniform_sample_size_and_determinism() {
+        let mut p = UniformSample { fraction: 0.25 };
+        let mut rng = Rng::new(7);
+        let a = p.sample(1, 80, &mut rng);
+        assert_eq!(a.len(), 20);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert!(a.iter().all(|&i| i < 80));
+        // Same seed ⇒ same cohort; later draws differ.
+        let mut rng2 = Rng::new(7);
+        assert_eq!(p.sample(1, 80, &mut rng2), a);
+        let b = p.sample(2, 80, &mut rng);
+        assert_ne!(a, b, "fresh cohort per round");
+    }
+
+    #[test]
+    fn uniform_sample_never_empty() {
+        let mut p = UniformSample { fraction: 0.001 };
+        let mut rng = Rng::new(3);
+        assert_eq!(p.sample(1, 10, &mut rng).len(), 1);
+    }
+
+    #[test]
+    fn deadline_drops_only_stragglers() {
+        let mut p = DeadlineDrop::new(1.5);
+        let cohort = [0, 1, 2, 3, 4];
+        let predicted = [1.0, 1.1, 1.2, 1.3, 10.0];
+        // median 1.2, deadline 1.8 → device 4 dropped.
+        assert_eq!(p.admit(1, &cohort, &predicted), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_keeps_fastest_when_too_tight() {
+        let mut p = DeadlineDrop { factor: 0.01, min_keep: 2 };
+        let cohort = [5, 6, 7];
+        let predicted = [3.0, 1.0, 2.0];
+        assert_eq!(p.admit(1, &cohort, &predicted), vec![6, 7]);
+    }
+
+    #[test]
+    fn by_name_covers_policies() {
+        for n in ["full", "sample", "deadline"] {
+            assert!(by_name(n, 0.3, 1.5).is_some(), "{n}");
+        }
+        assert!(by_name("nope", 0.3, 1.5).is_none());
+    }
+}

@@ -1,4 +1,5 @@
-//! The parameter-server round loop (§3's six modules wired together).
+//! The parameter-server entry points (§3's six modules wired
+//! together).
 //!
 //! Per round: ① devices report status → capacity EMA (§4.3);
 //! ② strategy picks per-device LoRA configurations (§4.4, LCD for
@@ -8,23 +9,23 @@
 //! (§4.5); ⑥ virtual-clock timing via eq. (12)/(13) and global-model
 //! evaluation. Produces a [`RunRecord`] with everything Figs. 7–13
 //! need.
+//!
+//! The loop itself lives in [`super::engine::RoundEngine`]; this
+//! module keeps the run configuration, model metadata, the LR
+//! schedule, and the public [`run_federated`] /
+//! [`run_federated_with`] entry points.
 
 use anyhow::Result;
 
-use crate::data::{grammar, partition, Dataset, Spec};
-use crate::device::profile::calib;
+use crate::data::Spec;
 use crate::device::Fleet;
-use crate::metrics::{RoundRecord, RunRecord};
+use crate::metrics::RunRecord;
 use crate::model::state::TensorMap;
 use crate::model::Manifest;
-use crate::runtime::Masks;
-use crate::sim::clock::{simulate_round, DeviceRound, VirtualClock};
-use crate::util::rng::Rng;
 
-use super::aggregation::{aggregate, DeviceUpdate};
-use super::capacity::CapacityEstimator;
-use super::transport::Transport;
-use super::strategy::{Strategy, StrategyCtx};
+use super::engine::RoundEngine;
+use super::participation::{Full, Participation};
+use super::strategy::Strategy;
 use super::trainer::Trainer;
 
 /// Federated-run configuration.
@@ -46,6 +47,10 @@ pub struct FedConfig {
     pub max_batches: usize,
     /// Target accuracy for the completion-time metric (Fig. 8).
     pub target_acc: f64,
+    /// Worker threads for phase ④ when the backend's device handles
+    /// are `Send` (0 = one per available core). Results are
+    /// bit-identical at every setting — see `coordinator/engine.rs`.
+    pub threads: usize,
     pub verbose: bool,
 }
 
@@ -62,6 +67,7 @@ impl Default for FedConfig {
             alpha: 10.0,
             max_batches: 8,
             target_acc: 0.85,
+            threads: 0,
             verbose: false,
         }
     }
@@ -125,195 +131,34 @@ pub fn cosine_lr(lr0: f64, round: usize, total: usize) -> f64 {
     lr0 * (0.1 + 0.9 * 0.5 * (1.0 + (std::f64::consts::PI * t).cos()))
 }
 
-/// Run one full federated fine-tuning experiment.
+/// Run one full federated fine-tuning experiment with full
+/// participation (the paper's setting).
 pub fn run_federated(cfg: &FedConfig, fleet: &mut Fleet,
                      strategy: &mut dyn Strategy,
                      trainer: &mut dyn Trainer, meta: &ModelMeta,
-                     spec: &Spec, mut global: TensorMap)
+                     spec: &Spec, global: TensorMap)
                      -> Result<RunRecord> {
-    let n = fleet.len();
-    let family = trainer.family();
-    let rank_dim = meta.rank_dim(family);
-    let unit_bytes = meta.unit_bytes(family);
+    run_federated_with(cfg, fleet, strategy, trainer, meta, spec, global,
+                       &mut Full)
+}
 
-    // ---- data -------------------------------------------------------------
-    let mut data_rng = Rng::new(cfg.seed).child("data");
-    let task = spec.task(&cfg.task)?.clone();
-    let train =
-        grammar::generate(spec, &cfg.task, cfg.train_size, &mut data_rng)?;
-    let test_size = (cfg.test_size / 64).max(1) * 64;
-    let test =
-        grammar::generate(spec, &cfg.task, test_size, &mut data_rng)?;
-    let how = if cfg.alpha > 0.0 {
-        partition::Partition::Dirichlet { alpha: cfg.alpha }
-    } else {
-        partition::Partition::Iid
-    };
-    let min_shard = trainer.batch_size();
-    let shards = partition::split(&train, n, how, task.n_classes,
-                                  min_shard, &mut data_rng);
-
-    // ---- state ------------------------------------------------------------
-    let mut estimator = CapacityEstimator::paper(n);
-    let mut transport = Transport::new();
-    let mut clock = VirtualClock::new();
-    let mut record = RunRecord::new(&strategy.name(), &cfg.task);
-    let mut last_losses = vec![0f64; n];
-    let mut last_round_time = 0f64;
-    let mut last_acc = 0f64;
-    let mut last_test_loss = 0f64;
-    let batch = trainer.batch_size();
-
-    for h in 1..=cfg.rounds {
-        if h > 1 {
-            fleet.advance_round();
-        }
-        transport.begin_round(h);
-        // ① status reports → capacity estimation (eq. 8–9).
-        for i in 0..n {
-            let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
-            transport.recv_status(i);
-            estimator.update(i, mu_hat, beta_hat);
-        }
-        let estimates: Vec<_> =
-            (0..n).map(|i| estimator.get(i).unwrap()).collect();
-        let n_batches: Vec<usize> = shards
-            .iter()
-            .map(|s| s.len().div_ceil(batch).min(cfg.max_batches))
-            .collect();
-
-        // ② LoRA configuration (§4.4).
-        let ctx = StrategyCtx {
-            round: h,
-            n_layers: meta.n_layers,
-            rank_dim,
-            fwd_times: estimates
-                .iter()
-                .map(|c| calib::FWD_FRAC * c.mu * meta.n_layers as f64)
-                .collect(),
-            estimates,
-            n_batches: n_batches.clone(),
-            unit_rank_bytes: unit_bytes,
-            compute_budgets: vec![f64::MAX; n],
-            comm_budgets: vec![usize::MAX; n],
-            last_losses: last_losses.clone(),
-            last_round_time,
-        };
-        let plan = strategy.configure(&ctx);
-        debug_assert_eq!(plan.device_configs.len(), n);
-
-        // ③–⑤ assignment, local fine-tuning, aggregation.
-        let lr = cosine_lr(cfg.lr0, h, cfg.rounds) as f32;
-        let mut updates: Vec<DeviceUpdate> = Vec::with_capacity(n);
-        let mut loss_sum = 0f64;
-        for (i, config) in plan.device_configs.iter().enumerate() {
-            let masks = Masks {
-                rank_mask: config.rank_mask(meta.n_layers, rank_dim),
-                layer_mask: config.layer_mask(meta.n_layers),
-            };
-            // §4.6 assignment travels through the transport layer,
-            // which counts the active-slot bytes it would put on the
-            // wire (Fig. 11's quantity).
-            let assigned = transport.send_assignment(
-                i, &global, config, meta.n_layers, rank_dim);
-            let outcome = trainer.train_local(
-                i, &assigned, &masks, &shards[i], lr, cfg.max_batches,
-            )?;
-            transport.recv_update(i, &outcome.trainable, config,
-                                  meta.n_layers, rank_dim);
-            loss_sum += outcome.mean_loss;
-            last_losses[i] = outcome.mean_loss;
-            updates.push(DeviceUpdate {
-                trainable: outcome.trainable,
-                config: config.clone(),
-                weight: 1.0,
-            });
-        }
-        let tally = transport.round_tally();
-        let (up_bytes, down_bytes) = (tally.uplink, tally.downlink);
-        aggregate(&mut global, &updates, meta.n_layers, rank_dim);
-
-        // ⑥ timing (eq. 12/13) with TRUE device parameters.
-        let rounds_t: Vec<DeviceRound> = plan
-            .device_configs
-            .iter()
-            .enumerate()
-            .map(|(i, config)| {
-                let d = &fleet.devices[i];
-                let beta = d.true_beta(unit_bytes);
-                DeviceRound {
-                    device_id: i,
-                    fwd_time_per_batch: d
-                        .compute
-                        .forward_time(meta.n_layers),
-                    mu: d.true_mu(),
-                    beta,
-                    depth: config.backprop_depth(meta.n_layers),
-                    ranks: config.active_ranks(meta.n_layers),
-                    n_batches: n_batches[i],
-                    extra_upload_s: beta
-                        * (meta.head_bytes as f64
-                            / unit_bytes.max(1) as f64),
-                }
-            })
-            .collect();
-        let timing = simulate_round(&rounds_t);
-        clock.advance(&timing);
-        last_round_time = timing.round_time;
-
-        // Evaluation of the aggregated global model.
-        if h % cfg.eval_every == 0 || h == cfg.rounds {
-            let eval_masks = Masks {
-                rank_mask: plan
-                    .eval_config
-                    .rank_mask(meta.n_layers, rank_dim),
-                layer_mask: plan.eval_config.layer_mask(meta.n_layers),
-            };
-            let (tl, ta) =
-                trainer.evaluate(&global, &eval_masks, &test)?;
-            last_acc = ta;
-            last_test_loss = tl;
-        }
-
-        let mean_depth = plan
-            .device_configs
-            .iter()
-            .map(|c| c.depth(meta.n_layers) as f64)
-            .sum::<f64>()
-            / n as f64;
-        record.rounds.push(RoundRecord {
-            round: h,
-            sim_time: clock.elapsed,
-            round_time: timing.round_time,
-            avg_waiting: timing.avg_waiting,
-            up_bytes,
-            down_bytes,
-            train_loss: loss_sum / n as f64,
-            test_acc: last_acc,
-            test_loss: last_test_loss,
-            mean_depth,
-        });
-        if cfg.verbose {
-            println!(
-                "[{}/{}] {} t={:.0}s acc={:.3} loss={:.3} depth={:.1} \
-                 wait={:.1}s",
-                h,
-                cfg.rounds,
-                strategy.name(),
-                clock.elapsed,
-                last_acc,
-                loss_sum / n as f64,
-                mean_depth,
-                timing.avg_waiting
-            );
-        }
-    }
-    Ok(record)
+/// Same, with an explicit [`Participation`] policy (client sampling,
+/// straggler deadlines, …).
+#[allow(clippy::too_many_arguments)]
+pub fn run_federated_with(cfg: &FedConfig, fleet: &mut Fleet,
+                          strategy: &mut dyn Strategy,
+                          trainer: &mut dyn Trainer, meta: &ModelMeta,
+                          spec: &Spec, global: TensorMap,
+                          participation: &mut dyn Participation)
+                          -> Result<RunRecord> {
+    RoundEngine::new(cfg, meta)
+        .run(fleet, strategy, trainer, spec, global, participation)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::participation::{DeadlineDrop, UniformSample};
     use crate::coordinator::strategy::{FedLora, Legend};
     use crate::coordinator::trainer::MockTrainer;
     use crate::device::FleetConfig;
@@ -375,6 +220,10 @@ mod tests {
         }
         assert!(r.rounds.iter().all(|x| x.up_bytes > 0));
         assert!(r.final_accuracy() > 0.0);
+        // Full participation: everyone, every round.
+        let n = FleetConfig::pretest().total();
+        assert!(r.rounds.iter().all(|x| x.participants == n));
+        assert!(r.rounds.iter().all(|x| x.dropped == 0));
     }
 
     #[test]
@@ -419,5 +268,56 @@ mod tests {
         let r = run(&mut s, 3);
         let d = r.rounds.last().unwrap().mean_depth;
         assert!(d > 1.0 && d <= 12.0, "mean depth {d}");
+    }
+
+    // FedLoRA keeps every device's config identical and independent of
+    // the capacity estimates, so byte/time comparisons between
+    // participation policies are exact, not statistical.
+    fn run_with(participation: &mut dyn crate::coordinator::participation::Participation,
+                rounds: usize) -> RunRecord {
+        let meta = ModelMeta::synthetic(12, 16, 32);
+        let mut fleet = Fleet::new(FleetConfig::pretest());
+        let mut trainer = MockTrainer::new("lora");
+        let mut s = FedLora { rank: 8 };
+        let cfg = FedConfig {
+            rounds,
+            train_size: 256,
+            test_size: 64,
+            ..Default::default()
+        };
+        run_federated_with(&cfg, &mut fleet, &mut s, &mut trainer, &meta,
+                           &toy_spec(), toy_global(&meta), participation)
+        .unwrap()
+    }
+
+    #[test]
+    fn sampled_rounds_move_fewer_bytes() {
+        let full = run_with(&mut Full, 4);
+        let sampled =
+            run_with(&mut UniformSample { fraction: 0.4 }, 4);
+        let n = FleetConfig::pretest().total();
+        let k = (0.4f64 * n as f64).ceil() as usize;
+        assert!(sampled.rounds.iter().all(|r| r.participants == k));
+        // Skipped devices contribute zero bytes in both directions.
+        for (s, f) in sampled.rounds.iter().zip(&full.rounds) {
+            assert!(s.up_bytes < f.up_bytes, "uplink shrinks");
+            assert!(s.down_bytes < f.down_bytes, "downlink shrinks");
+        }
+    }
+
+    #[test]
+    fn deadline_drop_records_dropped_devices() {
+        // A tight deadline on the heterogeneous pretest fleet must
+        // drop someone, and round time may only shrink vs full.
+        let full = run_with(&mut Full, 4);
+        let dropped = run_with(&mut DeadlineDrop::new(1.01), 4);
+        assert!(
+            dropped.rounds.iter().any(|r| r.dropped > 0),
+            "tight deadline never dropped a device"
+        );
+        for (d, f) in dropped.rounds.iter().zip(&full.rounds) {
+            assert!(d.participants + d.dropped == f.participants);
+            assert!(d.round_time <= f.round_time + 1e-9);
+        }
     }
 }

@@ -34,6 +34,13 @@ pub struct StrategyCtx {
     pub last_losses: Vec<f64>,
     /// Virtual duration of the previous round [s].
     pub last_round_time: f64,
+    /// Global device ids of this round's cohort: every per-device
+    /// vector above is indexed by *cohort position*, and
+    /// `device_ids[j]` maps position `j` back to the fleet id. Under
+    /// full participation this is `0..n`; a sampling/deadline
+    /// [`crate::coordinator::participation::Participation`] policy
+    /// hands strategies only the sampled cohort.
+    pub device_ids: Vec<usize>,
 }
 
 impl StrategyCtx {
@@ -259,6 +266,10 @@ pub struct FedAdapter {
     /// Device losses of the previous round per candidate slot.
     last_assignment: Vec<usize>,
     prev_losses: Vec<f64>,
+    /// Cohort the previous round's losses belong to — feedback is
+    /// positional, so it only folds when the cohort is unchanged
+    /// (client sampling reshuffles cohorts every round).
+    prev_ids: Vec<usize>,
 }
 
 impl FedAdapter {
@@ -275,12 +286,14 @@ impl FedAdapter {
             scores: vec![(0.0, 0); 3],
             last_assignment: Vec::new(),
             prev_losses: Vec::new(),
+            prev_ids: Vec::new(),
         }
     }
 
     fn fold_feedback(&mut self, ctx: &StrategyCtx) {
         if self.last_assignment.is_empty()
             || self.prev_losses.len() != ctx.last_losses.len()
+            || self.prev_ids != ctx.device_ids
         {
             return;
         }
@@ -346,6 +359,7 @@ impl Strategy for FedAdapter {
             .collect();
         self.last_assignment = assignment;
         self.prev_losses = ctx.last_losses.clone();
+        self.prev_ids = ctx.device_ids.clone();
         // Evaluate under the widest candidate's mask on all layers any
         // group trained.
         let max_w = self
@@ -489,6 +503,7 @@ mod tests {
             comm_budgets: vec![usize::MAX; n],
             last_losses: vec![0.0; n],
             last_round_time: 0.0,
+            device_ids: (0..n).collect(),
         }
     }
 
@@ -578,6 +593,22 @@ mod tests {
         let _ = s.configure(&c);
         assert_ne!(s.candidates, before, "window recenter must fire");
         assert_eq!(s.candidates[0], before[1], "best candidate kept");
+    }
+
+    #[test]
+    fn fedadapter_ignores_feedback_from_a_different_cohort() {
+        let mut s = FedAdapter::paper(12, 32);
+        let mut c = ctx(&[0.01; 6]);
+        let _ = s.configure(&c); // prev_ids = [0..6]
+        // A sampled round hands back a different cohort of equal size:
+        // positional deltas would pair losses from different devices.
+        c.round = 2;
+        c.device_ids = vec![1, 2, 3, 4, 5, 6];
+        c.last_losses = vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0];
+        let scores_before = s.scores.clone();
+        let _ = s.configure(&c);
+        assert_eq!(s.scores, scores_before,
+                   "cross-cohort feedback must not fold");
     }
 
     #[test]

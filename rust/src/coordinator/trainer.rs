@@ -1,14 +1,30 @@
 //! Local fine-tuning backends.
 //!
-//! [`PjrtTrainer`] is the real thing: it drives the AOT train/eval
-//! executables through the PJRT runtime, keeping per-device AdamW
-//! state and step counters across rounds (optimizer state is local to
-//! a device, as in FedNLP-style systems). [`MockTrainer`] is a
-//! deterministic stand-in used by coordinator unit/property tests and
-//! the L3-only benchmarks — it exercises the identical server code
-//! path with zero FLOPs.
+//! The trait is split in two so phase ④ of the round loop can run
+//! devices concurrently (see `coordinator/engine.rs`):
+//!
+//! * [`Trainer`] is the coordinator-facing side: family/batch
+//!   metadata, global-model evaluation, and [`Trainer::train_cohort`],
+//!   which runs one round's local epochs and feeds outcomes to a sink.
+//! * [`DeviceTrainer`] is a *per-device handle* owning all
+//!   device-local state — optimizer moments, step counters, the
+//!   data-shuffle RNG, mock progress. Handles are plain data, so a
+//!   backend whose handles are `Send` can train them on worker
+//!   threads (`engine::train_parallel`); a backend tied to a
+//!   non-thread-safe runtime trains them in device order
+//!   (`engine::train_sequential`).
+//!
+//! [`PjrtTrainer`] is the real backend: it drives the AOT train/eval
+//! executables through the PJRT runtime. Its handles hold per-device
+//! AdamW state and step counters across rounds (optimizer state is
+//! local to a device, as in FedNLP-style systems), but they also
+//! borrow the shared `Runtime`, whose PJRT client is not thread-safe —
+//! so PJRT cohorts run sequentially. [`MockTrainer`] is a
+//! deterministic FLOP-free stand-in used by coordinator
+//! unit/property tests and the L3-only benchmarks; its handles are
+//! `Send` and train in parallel.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -17,6 +33,8 @@ use crate::model::state::{init_opt, TensorMap};
 use crate::runtime::session::SessionState;
 use crate::runtime::{Masks, Runtime};
 use crate::util::rng::Rng;
+
+use super::engine::{train_parallel, train_sequential, TrainJob};
 
 /// Result of one device's local epoch.
 #[derive(Debug, Clone)]
@@ -27,38 +45,116 @@ pub struct LocalOutcome {
     pub n_steps: usize,
 }
 
-/// Local-training backend interface (real PJRT or mock).
+/// Receives `(job_index, outcome)` pairs as devices finish. The engine
+/// installs a reorder buffer here so downstream accounting and
+/// aggregation always happen in device-index order regardless of which
+/// worker thread finished first.
+pub type CohortSink<'s> =
+    &'s mut dyn FnMut(usize, LocalOutcome) -> Result<()>;
+
+/// A per-device local-training handle. Owns every piece of
+/// device-local state so nothing on the coordinator is mutated during
+/// training; implementations that are `Send` may be driven from
+/// worker threads.
+pub trait DeviceTrainer {
+    /// Run one local epoch from `job.init` under `job.masks` over
+    /// `job.shard` (at most `job.max_batches` batches).
+    fn train_local(&mut self, job: &TrainJob<'_>) -> Result<LocalOutcome>;
+}
+
+/// Coordinator-facing training backend (real PJRT or mock).
 pub trait Trainer {
     fn family(&self) -> &'static str;
     fn batch_size(&self) -> usize;
-    /// Run one local epoch from `init`, under `masks`, over `shard`
-    /// (at most `max_batches` batches).
-    fn train_local(&mut self, device_id: usize, init: &TensorMap,
-                   masks: &Masks, shard: &Dataset, lr: f32,
-                   max_batches: usize) -> Result<LocalOutcome>;
+    /// Run phase ④ for one round's cohort. `jobs[i]` carries device
+    /// `jobs[i].device_id`'s assignment; outcomes are delivered to
+    /// `sink` as `(i, outcome)`. Implementations may complete jobs in
+    /// any order and on any thread, but each device's outcome MUST be
+    /// a pure function of `(job, that device's persistent state)` so
+    /// results are identical at every `threads` setting.
+    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], threads: usize,
+                    sink: CohortSink<'_>) -> Result<()>;
     /// Evaluate a global model on `ds`; returns (mean_loss, accuracy).
     fn evaluate(&mut self, trainable: &TensorMap, masks: &Masks,
                 ds: &Dataset) -> Result<(f64, f64)>;
 }
 
-/// Real backend: PJRT executables, per-device optimizer state.
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// One device's persistent PJRT-side state: AdamW moments, step
+/// counter, and a device-keyed shuffle RNG (so the shuffle stream is
+/// independent of the order devices train in).
+struct PjrtDeviceState {
+    opt: TensorMap,
+    step: f32,
+    rng: Rng,
+}
+
+/// Per-device handle borrowing the shared runtime. NOT `Send`: the
+/// PJRT CPU client behind `rt` is not thread-safe, so PJRT cohorts
+/// train sequentially.
+struct PjrtDevice<'r> {
+    rt: &'r Runtime,
+    family: &'static str,
+    state: PjrtDeviceState,
+}
+
+impl DeviceTrainer for PjrtDevice<'_> {
+    fn train_local(&mut self, job: &TrainJob<'_>) -> Result<LocalOutcome> {
+        let mut session =
+            SessionState::from_maps(job.init, &self.state.opt)?;
+        let shuffled = job.shard.shuffled(&mut self.state.rng);
+        let batches = shuffled.batches(self.rt.manifest.dim.batch_size);
+        let n = batches.len().min(job.max_batches.max(1));
+        let (mut loss_sum, mut correct, mut seen) = (0f64, 0f64, 0usize);
+        for (toks, labels) in batches.iter().take(n) {
+            self.state.step += 1.0;
+            let stats = self.rt.train_step(
+                self.family, &mut session, &job.masks, toks, labels,
+                job.lr, self.state.step,
+            )?;
+            loss_sum += stats.loss as f64;
+            correct += stats.correct as f64;
+            seen += labels.len();
+        }
+        let (trainable, new_opt) = session.to_maps()?;
+        self.state.opt = new_opt;
+        Ok(LocalOutcome {
+            trainable,
+            mean_loss: loss_sum / n as f64,
+            train_accuracy: correct / seen.max(1) as f64,
+            n_steps: n,
+        })
+    }
+}
+
+/// Real backend: PJRT executables + per-device optimizer state.
 pub struct PjrtTrainer<'a> {
     rt: &'a Runtime,
     family: &'static str,
-    opt: HashMap<usize, TensorMap>,
-    steps: HashMap<usize, f32>,
-    rng: Rng,
+    seed: u64,
+    devices: BTreeMap<usize, PjrtDeviceState>,
 }
 
 impl<'a> PjrtTrainer<'a> {
     pub fn new(rt: &'a Runtime, family: &'static str, seed: u64) -> Self {
-        PjrtTrainer {
-            rt,
-            family,
-            opt: HashMap::new(),
-            steps: HashMap::new(),
-            rng: Rng::new(seed).child("trainer"),
-        }
+        PjrtTrainer { rt, family, seed, devices: BTreeMap::new() }
+    }
+
+    fn state_for(&mut self, device_id: usize) -> PjrtDeviceState {
+        let fam = self.rt.manifest.family(self.family);
+        let seed = self.seed;
+        self.devices.remove(&device_id).unwrap_or_else(|| {
+            PjrtDeviceState {
+                opt: init_opt(fam),
+                step: 0.0,
+                rng: Rng::new(seed)
+                    .child("trainer")
+                    .child(&format!("dev{device_id}")),
+            }
+        })
     }
 }
 
@@ -71,38 +167,21 @@ impl Trainer for PjrtTrainer<'_> {
         self.rt.manifest.dim.batch_size
     }
 
-    fn train_local(&mut self, device_id: usize, init: &TensorMap,
-                   masks: &Masks, shard: &Dataset, lr: f32,
-                   max_batches: usize) -> Result<LocalOutcome> {
-        let fam = self.rt.manifest.family(self.family).clone();
-        let opt = self
-            .opt
-            .entry(device_id)
-            .or_insert_with(|| init_opt(&fam));
-        let step = self.steps.entry(device_id).or_insert(0.0);
-
-        let mut session = SessionState::from_maps(init, opt)?;
-        let shuffled = shard.shuffled(&mut self.rng);
-        let batches = shuffled.batches(self.rt.manifest.dim.batch_size);
-        let n = batches.len().min(max_batches.max(1));
-        let (mut loss_sum, mut correct, mut seen) = (0f64, 0f64, 0usize);
-        for (toks, labels) in batches.iter().take(n) {
-            *step += 1.0;
-            let stats = self.rt.train_step(
-                self.family, &mut session, masks, toks, labels, lr, *step,
-            )?;
-            loss_sum += stats.loss as f64;
-            correct += stats.correct as f64;
-            seen += labels.len();
+    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], _threads: usize,
+                    sink: CohortSink<'_>) -> Result<()> {
+        let mut handles: Vec<PjrtDevice<'_>> = jobs
+            .iter()
+            .map(|j| PjrtDevice {
+                rt: self.rt,
+                family: self.family,
+                state: self.state_for(j.device_id),
+            })
+            .collect();
+        let res = train_sequential(jobs, &mut handles, sink);
+        for (job, h) in jobs.iter().zip(handles) {
+            self.devices.insert(job.device_id, h.state);
         }
-        let (trainable, new_opt) = session.to_maps()?;
-        *opt = new_opt;
-        Ok(LocalOutcome {
-            trainable,
-            mean_loss: loss_sum / n as f64,
-            train_accuracy: correct / seen.max(1) as f64,
-            n_steps: n,
-        })
+        res
     }
 
     fn evaluate(&mut self, trainable: &TensorMap, masks: &Masks,
@@ -111,25 +190,73 @@ impl Trainer for PjrtTrainer<'_> {
     }
 }
 
-/// Deterministic FLOP-free backend for tests/benches.
+// ---------------------------------------------------------------------------
+// Mock backend
+// ---------------------------------------------------------------------------
+
+/// One mock device's persistent state + training rule. `Send`, so mock
+/// cohorts exercise the parallel engine path.
 ///
-/// Training nudges active slots by a fixed delta and tracks a
-/// "progress" scalar per slot-mass trained; accuracy is a saturating
-/// function of progress, so more layers/ranks/steps → higher accuracy,
-/// mirroring the qualitative behaviour the coordinator cares about.
-pub struct MockTrainer {
-    family: &'static str,
+/// Training nudges every tensor element by a fixed delta per local
+/// batch and accumulates a "progress" scalar per slot-mass trained;
+/// loss/accuracy are saturating functions of progress, so more
+/// layers/ranks/steps → better numbers, mirroring the qualitative
+/// behaviour the coordinator cares about. The outcome depends only on
+/// the job and this device's own history — never on other devices —
+/// which is what makes the parallel path bit-identical to sequential.
+pub struct MockDevice {
     batch: usize,
     pub progress: f64,
 }
 
+impl DeviceTrainer for MockDevice {
+    fn train_local(&mut self, job: &TrainJob<'_>) -> Result<LocalOutcome> {
+        let mut out = job.init.clone();
+        let active: f64 =
+            job.masks.rank_mask.iter().map(|&m| m as f64).sum();
+        let n = job
+            .shard
+            .len()
+            .div_ceil(self.batch)
+            .min(job.max_batches.max(1));
+        // One deterministic nudge pass per local batch (work scales
+        // with the epoch length, like a real backend's would).
+        for _ in 0..n {
+            for (_, v) in &mut out.entries {
+                for x in v.iter_mut() {
+                    *x += 1e-3;
+                }
+            }
+        }
+        self.progress += active * n as f64 * 0.01;
+        Ok(LocalOutcome {
+            trainable: out,
+            mean_loss: 1.0 / (1.0 + 0.02 * self.progress),
+            train_accuracy: 1.0 - 1.0 / (1.0 + 0.05 * self.progress),
+            n_steps: n,
+        })
+    }
+}
+
+/// Deterministic FLOP-free backend for tests/benches.
+pub struct MockTrainer {
+    family: &'static str,
+    batch: usize,
+    devices: BTreeMap<usize, MockDevice>,
+}
+
 impl MockTrainer {
     pub fn new(family: &'static str) -> Self {
-        MockTrainer { family, batch: 4, progress: 0.0 }
+        MockTrainer { family, batch: 4, devices: BTreeMap::new() }
+    }
+
+    /// Σ progress over all devices (fleet-wide training effort).
+    pub fn total_progress(&self) -> f64 {
+        self.devices.values().map(|d| d.progress).sum()
     }
 
     pub fn accuracy(&self) -> f64 {
-        1.0 - 1.0 / (1.0 + 0.05 * self.progress)
+        1.0 - 1.0 / (1.0 + 0.05 * self.total_progress())
     }
 }
 
@@ -142,34 +269,27 @@ impl Trainer for MockTrainer {
         self.batch
     }
 
-    fn train_local(&mut self, _device_id: usize, init: &TensorMap,
-                   masks: &Masks, shard: &Dataset, _lr: f32,
-                   max_batches: usize) -> Result<LocalOutcome> {
-        let mut out = init.clone();
-        let active: f64 =
-            masks.rank_mask.iter().map(|&m| m as f64).sum();
-        let n = shard
-            .len()
-            .div_ceil(self.batch)
-            .min(max_batches.max(1));
-        // Nudge every active-slot tensor deterministically.
-        for (_, v) in &mut out.entries {
-            for x in v.iter_mut() {
-                *x += 1e-3;
-            }
+    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], threads: usize,
+                    sink: CohortSink<'_>) -> Result<()> {
+        let batch = self.batch;
+        let mut handles: Vec<MockDevice> = jobs
+            .iter()
+            .map(|j| {
+                self.devices
+                    .remove(&j.device_id)
+                    .unwrap_or(MockDevice { batch, progress: 0.0 })
+            })
+            .collect();
+        let res = train_parallel(jobs, &mut handles, threads, sink);
+        for (job, h) in jobs.iter().zip(handles) {
+            self.devices.insert(job.device_id, h);
         }
-        self.progress += active * n as f64 * 0.01;
-        Ok(LocalOutcome {
-            trainable: out,
-            mean_loss: 1.0 / (1.0 + 0.02 * self.progress),
-            train_accuracy: self.accuracy(),
-            n_steps: n,
-        })
+        res
     }
 
     fn evaluate(&mut self, _trainable: &TensorMap, _masks: &Masks,
                 _ds: &Dataset) -> Result<(f64, f64)> {
-        Ok((1.0 / (1.0 + 0.02 * self.progress), self.accuracy()))
+        Ok((1.0 / (1.0 + 0.02 * self.total_progress()), self.accuracy()))
     }
 }
 
@@ -197,6 +317,31 @@ mod tests {
         }])
     }
 
+    fn job<'a>(device_id: usize, init: &'a TensorMap, masks: &Masks,
+               shard: &'a Dataset, max_batches: usize) -> TrainJob<'a> {
+        TrainJob {
+            device_id,
+            init,
+            masks: masks.clone(),
+            shard,
+            lr: 1e-3,
+            max_batches,
+        }
+    }
+
+    fn run_one(t: &mut MockTrainer, device_id: usize, init: &TensorMap,
+               masks: &Masks, shard: &Dataset, max_batches: usize)
+               -> LocalOutcome {
+        let jobs = vec![job(device_id, init, masks, shard, max_batches)];
+        let mut got = None;
+        t.train_cohort(&jobs, 1, &mut |_, o| {
+            got = Some(o);
+            Ok(())
+        })
+        .unwrap();
+        got.unwrap()
+    }
+
     #[test]
     fn mock_trainer_progresses_monotonically() {
         let mut t = MockTrainer::new("lora");
@@ -206,11 +351,9 @@ mod tests {
             layer_mask: vec![1.0; 2],
         };
         let init = toy_map();
-        let o1 = t.train_local(0, &init, &masks, &ds, 1e-3, 100).unwrap();
+        let o1 = run_one(&mut t, 0, &init, &masks, &ds, 100);
         let a1 = t.accuracy();
-        let o2 = t
-            .train_local(0, &o1.trainable, &masks, &ds, 1e-3, 100)
-            .unwrap();
+        let o2 = run_one(&mut t, 0, &o1.trainable, &masks, &ds, 100);
         assert!(o2.mean_loss < o1.mean_loss);
         assert!(t.accuracy() > a1);
         assert_eq!(o1.n_steps, 4);
@@ -224,21 +367,76 @@ mod tests {
             rank_mask: vec![1.0; 4],
             layer_mask: vec![1.0; 2],
         };
-        let o = t
-            .train_local(0, &toy_map(), &masks, &ds, 1e-3, 3)
-            .unwrap();
+        let init = toy_map();
+        let o = run_one(&mut t, 0, &init, &masks, &ds, 3);
         assert_eq!(o.n_steps, 3);
     }
 
     #[test]
     fn more_active_slots_progress_faster() {
         let ds = toy_dataset(16);
-        let wide = Masks { rank_mask: vec![1.0; 8], layer_mask: vec![1.0; 2] };
-        let narrow = Masks { rank_mask: vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0], layer_mask: vec![1.0; 2] };
+        let wide =
+            Masks { rank_mask: vec![1.0; 8], layer_mask: vec![1.0; 2] };
+        let narrow = Masks {
+            rank_mask: vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0],
+            layer_mask: vec![1.0; 2],
+        };
+        let init = toy_map();
         let mut a = MockTrainer::new("lora");
         let mut b = MockTrainer::new("lora");
-        a.train_local(0, &toy_map(), &wide, &ds, 1e-3, 100).unwrap();
-        b.train_local(0, &toy_map(), &narrow, &ds, 1e-3, 100).unwrap();
+        run_one(&mut a, 0, &init, &wide, &ds, 100);
+        run_one(&mut b, 0, &init, &narrow, &ds, 100);
         assert!(a.accuracy() > b.accuracy());
+    }
+
+    #[test]
+    fn device_state_is_isolated_per_device() {
+        // Training device 0 must not change device 1's loss.
+        let ds = toy_dataset(16);
+        let masks = Masks {
+            rank_mask: vec![1.0; 4],
+            layer_mask: vec![1.0; 2],
+        };
+        let init = toy_map();
+        let mut t = MockTrainer::new("lora");
+        run_one(&mut t, 0, &init, &masks, &ds, 100);
+        run_one(&mut t, 0, &init, &masks, &ds, 100);
+        let o1 = run_one(&mut t, 1, &init, &masks, &ds, 100);
+
+        let mut fresh = MockTrainer::new("lora");
+        let o1f = run_one(&mut fresh, 1, &init, &masks, &ds, 100);
+        assert_eq!(o1.mean_loss, o1f.mean_loss,
+                   "device 1 unaffected by device 0 history");
+    }
+
+    #[test]
+    fn cohort_outcomes_identical_at_any_thread_count() {
+        let ds = toy_dataset(32);
+        let masks = Masks {
+            rank_mask: vec![1.0; 4],
+            layer_mask: vec![1.0; 2],
+        };
+        let init = toy_map();
+        let run = |threads: usize| -> Vec<LocalOutcome> {
+            let mut t = MockTrainer::new("lora");
+            let jobs: Vec<TrainJob<'_>> = (0..12)
+                .map(|i| job(i, &init, &masks, &ds, 4))
+                .collect();
+            let mut outs: Vec<Option<LocalOutcome>> =
+                (0..jobs.len()).map(|_| None).collect();
+            t.train_cohort(&jobs, threads, &mut |i, o| {
+                outs[i] = Some(o);
+                Ok(())
+            })
+            .unwrap();
+            outs.into_iter().map(|o| o.unwrap()).collect()
+        };
+        let seq = run(1);
+        let par = run(4);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.mean_loss, b.mean_loss);
+            assert_eq!(a.trainable, b.trainable);
+            assert_eq!(a.n_steps, b.n_steps);
+        }
     }
 }

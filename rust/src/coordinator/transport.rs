@@ -7,6 +7,23 @@
 //! the same place the paper does. Payloads are the *logically
 //! transmitted* bytes: only a device's active LoRA slots travel (plus
 //! the head and a fixed-size status report), never the padded tensors.
+//!
+//! Accounting rules under partial participation (engine cohorts):
+//! a sampled-out device exchanges **nothing** — no `STATUS_BYTES`, no
+//! assignment, no update. A deadline-dropped device reported status
+//! before the drop decision, so it contributes `STATUS_BYTES` and
+//! nothing else (ISSUE: "STATUS_BYTES only for devices that actually
+//! reported"). Only devices the engine actually touched appear in the
+//! round tally.
+//!
+//! Thread safety: tallies are atomic and the message log is behind a
+//! mutex, so every method takes `&self` and the endpoint can be shared
+//! across coordinator shards. The round engine still performs all
+//! accounting on its own thread in device-index order, which keeps the
+//! message log deterministic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
@@ -41,14 +58,37 @@ pub struct Tally {
     pub messages: usize,
 }
 
+#[derive(Debug, Default)]
+struct Counters {
+    downlink: AtomicUsize,
+    uplink: AtomicUsize,
+    messages: AtomicUsize,
+}
+
+impl Counters {
+    fn snapshot(&self) -> Tally {
+        Tally {
+            downlink: self.downlink.load(Ordering::Acquire),
+            uplink: self.uplink.load(Ordering::Acquire),
+            messages: self.messages.load(Ordering::Acquire),
+        }
+    }
+
+    fn reset(&self) {
+        self.downlink.store(0, Ordering::Release);
+        self.uplink.store(0, Ordering::Release);
+        self.messages.store(0, Ordering::Release);
+    }
+}
+
 /// The PS-side transport endpoint.
 #[derive(Debug, Default)]
 pub struct Transport {
-    round: usize,
-    current: Tally,
-    total: Tally,
+    round: AtomicUsize,
+    current: Counters,
+    total: Counters,
     /// Optional message log (enabled for tests/debugging).
-    pub log: Option<Vec<Message>>,
+    log: Option<Mutex<Vec<Message>>>,
 }
 
 /// Size of a status report: two f64 measurements + ids/padding,
@@ -61,44 +101,53 @@ impl Transport {
     }
 
     pub fn with_log() -> Self {
-        Transport { log: Some(Vec::new()), ..Default::default() }
+        Transport {
+            log: Some(Mutex::new(Vec::new())),
+            ..Default::default()
+        }
     }
 
-    pub fn begin_round(&mut self, round: usize) {
-        self.round = round;
-        self.current = Tally::default();
+    pub fn begin_round(&self, round: usize) {
+        self.round.store(round, Ordering::Release);
+        self.current.reset();
     }
 
-    fn record(&mut self, tag: Tag, device: usize, bytes: usize,
+    fn record(&self, tag: Tag, device: usize, bytes: usize,
               uplink: bool) {
         if uplink {
-            self.current.uplink += bytes;
-            self.total.uplink += bytes;
+            self.current.uplink.fetch_add(bytes, Ordering::AcqRel);
+            self.total.uplink.fetch_add(bytes, Ordering::AcqRel);
         } else {
-            self.current.downlink += bytes;
-            self.total.downlink += bytes;
+            self.current.downlink.fetch_add(bytes, Ordering::AcqRel);
+            self.total.downlink.fetch_add(bytes, Ordering::AcqRel);
         }
-        self.current.messages += 1;
-        self.total.messages += 1;
-        if let Some(log) = &mut self.log {
-            log.push(Message { tag, device, round: self.round, bytes });
+        self.current.messages.fetch_add(1, Ordering::AcqRel);
+        self.total.messages.fetch_add(1, Ordering::AcqRel);
+        if let Some(log) = &self.log {
+            log.lock().expect("log poisoned").push(Message {
+                tag,
+                device,
+                round: self.round.load(Ordering::Acquire),
+                bytes,
+            });
         }
     }
 
     /// PS → device: assign the active LoRA slots + head (§4.6).
-    /// Returns the payload so callers can hand it to the device.
-    pub fn send_assignment(&mut self, device: usize, global: &TensorMap,
+    /// Returns the counted payload bytes. The in-process "wire" is a
+    /// shared reference to the global model (devices never mutate
+    /// their assignment), so nothing is copied here.
+    pub fn send_assignment(&self, device: usize, global: &TensorMap,
                            config: &LoraConfig, n_layers: usize,
-                           rank_dim: usize) -> TensorMap {
+                           rank_dim: usize) -> usize {
         let bytes = serialize::active_payload_bytes(
             global, config, n_layers, rank_dim);
         self.record(Tag::Assign, device, bytes, false);
-        // In-process "wire": the device works on its own copy.
-        global.clone()
+        bytes
     }
 
     /// device → PS: upload the updated active slots.
-    pub fn recv_update(&mut self, device: usize, update: &TensorMap,
+    pub fn recv_update(&self, device: usize, update: &TensorMap,
                        config: &LoraConfig, n_layers: usize,
                        rank_dim: usize) -> usize {
         let bytes = serialize::active_payload_bytes(
@@ -108,16 +157,23 @@ impl Transport {
     }
 
     /// device → PS: status report (μ̂, β̂).
-    pub fn recv_status(&mut self, device: usize) {
+    pub fn recv_status(&self, device: usize) {
         self.record(Tag::Status, device, STATUS_BYTES, true);
     }
 
     pub fn round_tally(&self) -> Tally {
-        self.current
+        self.current.snapshot()
     }
 
     pub fn total_tally(&self) -> Tally {
-        self.total
+        self.total.snapshot()
+    }
+
+    /// Snapshot of the message log (None unless built `with_log`).
+    pub fn log_snapshot(&self) -> Option<Vec<Message>> {
+        self.log
+            .as_ref()
+            .map(|l| l.lock().expect("log poisoned").clone())
     }
 }
 
@@ -143,24 +199,24 @@ mod tests {
 
     #[test]
     fn tallies_conserve_and_split_by_direction() {
-        let mut t = Transport::with_log();
+        let t = Transport::with_log();
         t.begin_round(1);
         let g = global();
         let c = cfg(2);
-        let payload = t.send_assignment(0, &g, &c, L, R);
-        assert_eq!(payload.numel(), g.numel());
+        let down = t.send_assignment(0, &g, &c, L, R);
         t.recv_status(0);
         let up = t.recv_update(0, &g, &c, L, R);
         let tally = t.round_tally();
-        assert_eq!(tally.downlink, up, "symmetric assign/update payload");
+        assert_eq!(down, up, "symmetric assign/update payload");
+        assert_eq!(tally.downlink, up);
         assert_eq!(tally.uplink, up + STATUS_BYTES);
         assert_eq!(tally.messages, 3);
-        assert_eq!(t.log.as_ref().unwrap().len(), 3);
+        assert_eq!(t.log_snapshot().unwrap().len(), 3);
     }
 
     #[test]
     fn deeper_config_costs_more_bytes() {
-        let mut t = Transport::new();
+        let t = Transport::new();
         t.begin_round(1);
         let g = global();
         let _ = t.send_assignment(0, &g, &cfg(1), L, R);
@@ -173,11 +229,51 @@ mod tests {
 
     #[test]
     fn begin_round_resets_current_not_total() {
-        let mut t = Transport::new();
+        let t = Transport::new();
         t.begin_round(1);
         t.recv_status(0);
         t.begin_round(2);
         assert_eq!(t.round_tally(), Tally::default());
         assert_eq!(t.total_tally().uplink, STATUS_BYTES);
+    }
+
+    #[test]
+    fn skipped_devices_cost_nothing() {
+        // Devices 0 and 2 take part, device 1 is sampled out: the
+        // tally must be exactly two devices' worth of traffic and two
+        // STATUS_BYTES — nothing for the skipped device.
+        let t = Transport::with_log();
+        t.begin_round(1);
+        let g = global();
+        let c = cfg(4);
+        let mut down = 0;
+        let mut up = 0;
+        for dev in [0usize, 2] {
+            t.recv_status(dev);
+            down += t.send_assignment(dev, &g, &c, L, R);
+            up += t.recv_update(dev, &g, &c, L, R);
+        }
+        let tally = t.round_tally();
+        assert_eq!(tally.downlink, down);
+        assert_eq!(tally.uplink, up + 2 * STATUS_BYTES);
+        assert_eq!(tally.messages, 6);
+        let log = t.log_snapshot().unwrap();
+        assert!(log.iter().all(|m| m.device != 1),
+                "skipped device must never appear on the wire");
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        // &self endpoint: concurrent status reports all land.
+        let t = Transport::new();
+        t.begin_round(1);
+        std::thread::scope(|s| {
+            for dev in 0..8 {
+                let t = &t;
+                s.spawn(move || t.recv_status(dev));
+            }
+        });
+        assert_eq!(t.round_tally().uplink, 8 * STATUS_BYTES);
+        assert_eq!(t.round_tally().messages, 8);
     }
 }

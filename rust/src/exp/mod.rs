@@ -8,9 +8,10 @@ pub mod report;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::participation::{Full, Participation};
 use crate::coordinator::strategy::{self, Strategy};
 use crate::coordinator::trainer::PjrtTrainer;
-use crate::coordinator::{run_federated, FedConfig, ModelMeta};
+use crate::coordinator::{run_federated_with, FedConfig, ModelMeta};
 use crate::data::Spec;
 use crate::device::{Fleet, FleetConfig};
 use crate::metrics::RunRecord;
@@ -48,10 +49,19 @@ impl ExpEnv {
                        &mut rng)
     }
 
-    /// Run one (strategy, task) experiment with the real PJRT trainer.
+    /// Run one (strategy, task) experiment with the real PJRT trainer
+    /// (full participation, the paper's setting).
     pub fn run_strategy(&self, strategy: &mut dyn Strategy,
                         cfg: &FedConfig, fleet_cfg: &FleetConfig)
                         -> Result<RunRecord> {
+        self.run_strategy_with(strategy, cfg, fleet_cfg, &mut Full)
+    }
+
+    /// Same, with an explicit participation policy.
+    pub fn run_strategy_with(&self, strategy: &mut dyn Strategy,
+                             cfg: &FedConfig, fleet_cfg: &FleetConfig,
+                             participation: &mut dyn Participation)
+                             -> Result<RunRecord> {
         let family: &'static str = match strategy.family() {
             "adapter" => "adapter",
             _ => "lora",
@@ -62,13 +72,21 @@ impl ExpEnv {
         });
         let mut trainer = PjrtTrainer::new(&self.rt, family, cfg.seed);
         let global = self.fresh_global(family, cfg.seed);
-        run_federated(cfg, &mut fleet, strategy, &mut trainer,
-                      &self.meta, &self.spec, global)
+        run_federated_with(cfg, &mut fleet, strategy, &mut trainer,
+                           &self.meta, &self.spec, global, participation)
     }
 
     /// Run a named method (CLI entry).
     pub fn run_method(&self, method: &str, cfg: &FedConfig,
                       fleet_cfg: &FleetConfig) -> Result<RunRecord> {
+        self.run_method_with(method, cfg, fleet_cfg, &mut Full)
+    }
+
+    /// Run a named method under a participation policy (CLI entry).
+    pub fn run_method_with(&self, method: &str, cfg: &FedConfig,
+                           fleet_cfg: &FleetConfig,
+                           participation: &mut dyn Participation)
+                           -> Result<RunRecord> {
         let mut s = strategy::by_name(
             method,
             self.meta.n_layers,
@@ -76,7 +94,7 @@ impl ExpEnv {
             self.meta.w_max,
         )
         .ok_or_else(|| anyhow!("unknown method {method:?}"))?;
-        self.run_strategy(s.as_mut(), cfg, fleet_cfg)
+        self.run_strategy_with(s.as_mut(), cfg, fleet_cfg, participation)
     }
 }
 

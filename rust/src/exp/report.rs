@@ -37,6 +37,10 @@ pub fn parse_csv(text: &str) -> Result<Vec<RunRecord>> {
         idx("test_loss")?,
         idx("mean_depth")?,
     );
+    // Participation columns are optional: CSVs written before the
+    // RoundEngine predate them (0 = unknown).
+    let opt_col = |name: &str| cols.iter().position(|c| *c == name);
+    let (ip, idp) = (opt_col("participants"), opt_col("dropped"));
     let mut runs: Vec<RunRecord> = Vec::new();
     for (ln, line) in lines.enumerate() {
         if line.trim().is_empty() {
@@ -61,6 +65,20 @@ pub fn parse_csv(text: &str) -> Result<Vec<RunRecord>> {
             test_acc: parse_f(ia)?,
             test_loss: parse_f(itsl)?,
             mean_depth: parse_f(imd)?,
+            // Absent column → 0 (pre-engine CSV); present but
+            // malformed → error, like every other column.
+            participants: match ip {
+                None => 0,
+                Some(i) => f[i].parse().map_err(|e| {
+                    anyhow!("line {}: {e}", ln + 2)
+                })?,
+            },
+            dropped: match idp {
+                None => 0,
+                Some(i) => f[i].parse().map_err(|e| {
+                    anyhow!("line {}: {e}", ln + 2)
+                })?,
+            },
         };
         let (method, task) = (f[im], f[it]);
         match runs
@@ -179,6 +197,8 @@ mod tests {
                 test_acc: 0.2 * (i + 1) as f64,
                 test_loss: 1.0,
                 mean_depth: 8.0,
+                participants: 10,
+                dropped: 0,
             });
             b.rounds.push(RoundRecord {
                 round: i,
@@ -191,6 +211,8 @@ mod tests {
                 test_acc: 0.18 * (i + 1) as f64,
                 test_loss: 1.0,
                 mean_depth: 12.0,
+                participants: 10,
+                dropped: 0,
             });
         }
         vec![a, b]

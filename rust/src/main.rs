@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   run    one federated run:   legend run --method legend --task sst2
+//!          participation: --participation full|sample|deadline
+//!          (--sample-frac F, --deadline-factor F), phase-④ worker
+//!          threads: --threads N (0 = auto; results are bit-identical
+//!          at every setting)
 //!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
 //!   fleet  describe the simulated 80-device testbed (Table 1)
 //!   data   describe the synthetic datasets (Table 2)
@@ -11,6 +15,7 @@
 
 use anyhow::{anyhow, Result};
 
+use legend::coordinator::participation;
 use legend::coordinator::FedConfig;
 use legend::data::grammar;
 use legend::device::{Fleet, FleetConfig};
@@ -39,8 +44,19 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         alpha: args.get_parse("alpha", d.alpha)?,
         max_batches: args.get_parse("max-batches", d.max_batches)?,
         target_acc: args.get_parse("target-acc", d.target_acc)?,
+        threads: args.get_parse("threads", d.threads)?,
         verbose: !args.flag("quiet"),
     })
+}
+
+fn participation_from(args: &Args)
+                      -> Result<Box<dyn participation::Participation>> {
+    let name = args.get_choice("participation", "full",
+                               &["full", "sample", "deadline"])?;
+    let frac = args.get_parse("sample-frac", 0.3f64)?;
+    let factor = args.get_parse("deadline-factor", 1.5f64)?;
+    participation::by_name(&name, frac, factor)
+        .ok_or_else(|| anyhow!("unknown participation {name:?}"))
 }
 
 fn run() -> Result<()> {
@@ -51,10 +67,12 @@ fn run() -> Result<()> {
             let cfg = fed_config_from(&args)?;
             let method = args.get_or("method", "legend");
             let devices = args.get_parse("devices", 10usize)?;
+            let mut part = participation_from(&args)?;
             args.reject_unknown()?;
             let env = ExpEnv::load(&artifacts)?;
             let fleet_cfg = FleetConfig::sized(devices);
-            let rec = env.run_method(&method, &cfg, &fleet_cfg)?;
+            let rec = env.run_method_with(&method, &cfg, &fleet_cfg,
+                                          part.as_mut())?;
             let path =
                 metrics::write_csv(&format!("run_{method}_{}", cfg.task),
                                    std::slice::from_ref(&rec))?;

@@ -28,6 +28,12 @@ pub struct RoundRecord {
     pub test_loss: f64,
     /// Mean LoRA depth assigned this round (diagnostic).
     pub mean_depth: f64,
+    /// Devices that trained and reported this round (cohort minus
+    /// deadline drops; equals the fleet size under full
+    /// participation).
+    pub participants: usize,
+    /// Cohort devices dropped by the participation policy's deadline.
+    pub dropped: usize,
 }
 
 /// A full (method, task) run.
@@ -94,18 +100,34 @@ impl RunRecord {
         self.rounds.last().map(|r| r.sim_time).unwrap_or(0.0)
     }
 
+    /// Mean devices trained per round (participation diagnostic —
+    /// equals the fleet size under full participation).
+    pub fn mean_participation(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.participants as f64).sum::<f64>()
+            / self.rounds.len() as f64
+    }
+
+    /// Total cohort devices dropped by deadlines over the run.
+    pub fn total_dropped(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped).sum()
+    }
+
     // ---- serialization ----------------------------------------------------
 
     pub const CSV_HEADER: &'static str = "method,task,round,sim_time,\
 round_time,avg_waiting,up_bytes,down_bytes,train_loss,test_acc,\
-test_loss,mean_depth";
+test_loss,mean_depth,participants,dropped";
 
     pub fn to_csv_rows(&self) -> String {
         let mut out = String::new();
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{},{},{:.3},{:.3},{:.3},{},{},{:.5},{:.5},{:.5},{:.2}",
+                "{},{},{},{:.3},{:.3},{:.3},{},{},{:.5},{:.5},{:.5},\
+                 {:.2},{},{}",
                 self.method,
                 self.task,
                 r.round,
@@ -117,7 +139,9 @@ test_loss,mean_depth";
                 r.train_loss,
                 r.test_acc,
                 r.test_loss,
-                r.mean_depth
+                r.mean_depth,
+                r.participants,
+                r.dropped
             );
         }
         out
@@ -145,6 +169,14 @@ test_loss,mean_depth";
                                 (
                                     "avg_waiting",
                                     Value::Num(r.avg_waiting),
+                                ),
+                                (
+                                    "participants",
+                                    Value::Num(r.participants as f64),
+                                ),
+                                (
+                                    "dropped",
+                                    Value::Num(r.dropped as f64),
                                 ),
                             ])
                         })
@@ -174,9 +206,9 @@ pub fn summary_table(runs: &[RunRecord], target: f64) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "{:<16} {:<6} {:>9} {:>12} {:>12} {:>11} {:>10}",
+        "{:<16} {:<6} {:>9} {:>12} {:>12} {:>11} {:>10} {:>8}",
         "method", "task", "final_acc", "t_to_target", "traffic_MB",
-        "wait_avg_s", "rounds"
+        "wait_avg_s", "rounds", "part"
     );
     for r in runs {
         let t = r
@@ -191,14 +223,15 @@ pub fn summary_table(runs: &[RunRecord], target: f64) -> String {
             });
         let _ = writeln!(
             out,
-            "{:<16} {:<6} {:>9.4} {:>12} {:>12} {:>11.1} {:>10}",
+            "{:<16} {:<6} {:>9.4} {:>12} {:>12} {:>11.1} {:>10} {:>8.1}",
             r.method,
             r.task,
             r.final_accuracy(),
             t,
             traffic,
             r.mean_waiting(),
-            r.rounds.len()
+            r.rounds.len(),
+            r.mean_participation()
         );
     }
     out
@@ -221,10 +254,20 @@ mod tests {
                 up_bytes: 100,
                 down_bytes: 50,
                 test_acc: a,
+                participants: 8,
+                dropped: 2,
                 ..Default::default()
             });
         }
         r
+    }
+
+    #[test]
+    fn participation_summaries() {
+        let r = run_with_accs(&[0.1, 0.2, 0.3]);
+        assert!((r.mean_participation() - 8.0).abs() < 1e-12);
+        assert_eq!(r.total_dropped(), 6);
+        assert_eq!(RunRecord::default().mean_participation(), 0.0);
     }
 
     #[test]

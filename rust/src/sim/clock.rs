@@ -62,6 +62,16 @@ pub fn simulate_round(devices: &[DeviceRound]) -> RoundTiming {
     RoundTiming { round_time, avg_waiting, straggler, per_device }
 }
 
+/// Median of per-device completion times — the deadline basis for
+/// semi-synchronous participation policies
+/// (`coordinator/participation.rs`): a round's deadline is
+/// `factor × median_completion(predicted)` over the cohort's eq. 12
+/// predictions. Thin wrapper over [`crate::util::stats::percentile`]
+/// so the crate keeps a single quantile implementation.
+pub fn median_completion(times: &[f64]) -> f64 {
+    crate::util::stats::percentile(times, 50.0)
+}
+
 /// Accumulates virtual time across rounds.
 #[derive(Debug, Clone, Default)]
 pub struct VirtualClock {
@@ -148,6 +158,14 @@ mod tests {
         assert_eq!(c.rounds, 2);
         assert!((c.elapsed - 2.0 * t.round_time).abs() < 1e-12);
         assert!((c.mean_waiting() - t.avg_waiting).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_completion_is_the_middle_time() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(median_completion(&xs), 3.0);
+        assert_eq!(median_completion(&[7.0]), 7.0);
+        assert_eq!(median_completion(&[1.0, 2.0]), 1.5);
     }
 
     #[test]

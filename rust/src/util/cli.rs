@@ -96,6 +96,23 @@ impl Args {
         }
     }
 
+    /// Like [`Args::get_or`], but the value must be one of `choices`
+    /// (enum-style flags such as `--participation full|sample|deadline`).
+    pub fn get_choice(&self, name: &str, default: &str,
+                      choices: &[&str]) -> Result<String, CliError> {
+        debug_assert!(choices.contains(&default));
+        let v = self.get_or(name, default);
+        if choices.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(CliError::BadValue {
+                key: name.to_string(),
+                value: v,
+                why: format!("expected one of {}", choices.join("|")),
+            })
+        }
+    }
+
     /// Error if any --key / --flag was never queried (typo protection).
     pub fn reject_unknown(&self) -> Result<(), CliError> {
         let seen = self.consumed.borrow();
@@ -161,5 +178,22 @@ mod tests {
     fn bad_value_errors() {
         let a = parse("run --rounds banana");
         assert!(a.get_parse("rounds", 1usize).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_set() {
+        let a = parse("run --participation sample");
+        let choices = ["full", "sample", "deadline"];
+        assert_eq!(
+            a.get_choice("participation", "full", &choices).unwrap(),
+            "sample"
+        );
+        let b = parse("run --participation nope");
+        assert!(b.get_choice("participation", "full", &choices).is_err());
+        let c = parse("run");
+        assert_eq!(
+            c.get_choice("participation", "full", &choices).unwrap(),
+            "full"
+        );
     }
 }

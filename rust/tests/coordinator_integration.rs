@@ -2,9 +2,11 @@
 //! 80-device fleet with the mock trainer (fast, no artifacts), plus a
 //! real-PJRT mini federated run when artifacts are present.
 
+use legend::coordinator::participation::UniformSample;
 use legend::coordinator::strategy::{self, Strategy};
 use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
-use legend::coordinator::{run_federated, FedConfig, ModelMeta};
+use legend::coordinator::{run_federated, run_federated_with, FedConfig,
+                          ModelMeta};
 use legend::data::Spec;
 use legend::device::{Fleet, FleetConfig};
 use legend::metrics::RunRecord;
@@ -38,7 +40,8 @@ fn toy_global(meta: &ModelMeta, rank_dim: usize) -> TensorMap {
     ])
 }
 
-fn mock_run(method: &str, rounds: usize) -> RunRecord {
+fn mock_run_threaded(method: &str, rounds: usize, threads: usize)
+                     -> RunRecord {
     let meta = ModelMeta::synthetic(12, 16, 32);
     let mut s =
         strategy::by_name(method, meta.n_layers, meta.r_max, meta.w_max)
@@ -51,11 +54,16 @@ fn mock_run(method: &str, rounds: usize) -> RunRecord {
         rounds,
         train_size: 2048,
         test_size: 64,
+        threads,
         ..Default::default()
     };
     run_federated(&cfg, &mut fleet, s.as_mut(), &mut trainer, &meta,
                   &toy_spec(), toy_global(&meta, rank_dim))
     .unwrap()
+}
+
+fn mock_run(method: &str, rounds: usize) -> RunRecord {
+    mock_run_threaded(method, rounds, 0)
 }
 
 #[test]
@@ -103,6 +111,50 @@ fn deterministic_given_seed() {
         assert!((x.sim_time - y.sim_time).abs() < 1e-9);
         assert!((x.avg_waiting - y.avg_waiting).abs() < 1e-9);
     }
+}
+
+#[test]
+fn run_record_bit_identical_across_thread_counts() {
+    // Acceptance: a fixed seed produces identical RunRecord JSON at 1
+    // and N threads on the full 80-device fleet.
+    let seq = mock_run_threaded("legend", 5, 1);
+    let par = mock_run_threaded("legend", 5, 8);
+    assert_eq!(seq.to_json().to_string(), par.to_json().to_string());
+    assert_eq!(seq.to_csv_rows(), par.to_csv_rows());
+    for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+        assert_eq!(a.up_bytes, b.up_bytes);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+    }
+}
+
+#[test]
+fn client_sampling_completes_on_the_paper_fleet() {
+    let meta = ModelMeta::synthetic(12, 16, 32);
+    let mut s = strategy::by_name("legend", 12, 16, 32).unwrap();
+    let mut fleet = Fleet::new(FleetConfig::paper());
+    let mut trainer = MockTrainer::new("lora");
+    let cfg = FedConfig {
+        rounds: 5,
+        train_size: 2048,
+        test_size: 64,
+        ..Default::default()
+    };
+    let rec = run_federated_with(
+        &cfg, &mut fleet, s.as_mut(), &mut trainer, &meta, &toy_spec(),
+        toy_global(&meta, 16),
+        &mut UniformSample { fraction: 0.25 },
+    )
+    .unwrap();
+    assert_eq!(rec.rounds.len(), 5);
+    // ⌈0.25 · 80⌉ = 20 devices per round, every round.
+    assert!(rec.rounds.iter().all(|r| r.participants == 20));
+    assert!((rec.mean_participation() - 20.0).abs() < 1e-12);
+    assert!(rec.rounds.iter().all(|r| r.up_bytes > 0));
+    // Distinct cohorts across rounds ⇒ traffic varies with the
+    // sampled devices' heterogeneous configs.
+    assert!(rec.final_accuracy() > 0.0);
 }
 
 #[test]

@@ -2,9 +2,17 @@
 //! using the in-crate `util::prop` harness — LCD, aggregation,
 //! assignment/masks, capacity estimation, partitioning, timing, JSON.
 
-use legend::coordinator::aggregation::{aggregate, DeviceUpdate};
+use legend::coordinator::aggregation::{aggregate, DeviceUpdate,
+                                       StreamingAggregator};
 use legend::coordinator::capacity::{Capacity, CapacityEstimator};
 use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
+use legend::coordinator::participation::{DeadlineDrop, Participation,
+                                         UniformSample};
+use legend::coordinator::strategy as fedstrategy;
+use legend::coordinator::trainer::MockTrainer;
+use legend::coordinator::{run_federated, FedConfig, ModelMeta};
+use legend::data::Spec;
+use legend::device::{Fleet, FleetConfig};
 use legend::data::{partition, Dataset, Example};
 use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
 use legend::model::state::TensorMap;
@@ -213,6 +221,58 @@ fn prop_aggregation_matches_naive_reference() {
 }
 
 #[test]
+fn prop_streaming_aggregator_matches_buffered() {
+    // The streaming fold must be ELEMENT-WISE IDENTICAL (bit-exact,
+    // not approximately equal) to the buffered one-shot aggregate()
+    // on random heterogeneous-depth/rank update sets.
+    let d = 3usize;
+    let specs = vec![
+        TensorSpec { name: "aq".into(), shape: vec![L, R, d] },
+        TensorSpec { name: "bq".into(), shape: vec![L, d, R] },
+        TensorSpec { name: "head_w".into(), shape: vec![d, 4] },
+    ];
+    check("streaming-vs-buffered", 96, |rng, _| {
+        let n = rng.range_incl(0, 14);
+        let mut updates: Vec<DeviceUpdate> =
+            (0..n).map(|_| random_update(rng, &specs)).collect();
+        for u in &mut updates {
+            if rng.bernoulli(0.3) {
+                u.weight = rng.uniform(0.1, 4.0);
+            }
+        }
+        let mut global = TensorMap::zeros(&specs);
+        for (_, v) in &mut global.entries {
+            for x in v.iter_mut() {
+                *x = rng.uniform(-1.0, 1.0) as f32;
+            }
+        }
+        let mut buffered = global.clone();
+        aggregate(&mut buffered, &updates, L, R);
+
+        let mut agg = StreamingAggregator::new(&global, L, R);
+        for u in &updates {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        prop_assert!(agg.n_updates() == n, "push count");
+        agg.finish(&mut global);
+
+        for (spec, want) in &buffered.entries {
+            let got = global.get(&spec.name).unwrap();
+            for (e, (&g, &w)) in
+                got.iter().zip(want.iter()).enumerate()
+            {
+                prop_assert!(
+                    g.to_bits() == w.to_bits(),
+                    "{}[{e}]: streaming {g} != buffered {w}",
+                    spec.name
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_aggregation_idempotent_on_identical_updates() {
     let specs =
         vec![TensorSpec { name: "aq".into(), shape: vec![L, R, 2] }];
@@ -370,6 +430,101 @@ fn prop_round_timing_invariants() {
             t.avg_waiting <= t.round_time + 1e-9,
             "waiting > round time"
         );
+        Ok(())
+    });
+}
+
+fn engine_spec() -> Spec {
+    let json = r#"{
+      "vocab_size": 256, "seq_len": 16,
+      "special": {"pad": 0, "cls": 1, "mask": 2, "sep": 3},
+      "filler": [4, 50], "noise": [200, 256],
+      "tasks": {
+        "sst2": {"kind": "single", "n_classes": 2,
+                 "banks": [[50, 80], [80, 110]],
+                 "len_range": [5, 10], "bank_words": [2, 4],
+                 "label_noise": 0.0}
+      }
+    }"#;
+    Spec::from_json(&Value::parse(json).unwrap()).unwrap()
+}
+
+fn engine_run(method: &str, seed: u64, threads: usize)
+              -> legend::metrics::RunRecord {
+    let meta = ModelMeta::synthetic(L, R, 32);
+    let mut s = fedstrategy::by_name(method, L, R, 32).unwrap();
+    let mut fleet =
+        Fleet::new(FleetConfig { seed, ..FleetConfig::pretest() });
+    let mut trainer = MockTrainer::new(s.family());
+    let cfg = FedConfig {
+        rounds: 3,
+        train_size: 256,
+        test_size: 64,
+        seed,
+        threads,
+        ..Default::default()
+    };
+    let global = TensorMap::zeros(&[
+        TensorSpec {
+            name: "aq".into(),
+            shape: vec![L, meta.rank_dim(s.family()), 4],
+        },
+        TensorSpec { name: "head_w".into(), shape: vec![4, 2] },
+    ]);
+    run_federated(&cfg, &mut fleet, s.as_mut(), &mut trainer, &meta,
+                  &engine_spec(), global)
+    .unwrap()
+}
+
+#[test]
+fn prop_engine_output_invariant_under_thread_count() {
+    // Same seed ⇒ bit-identical RunRecord at 1 vs many threads, for
+    // every method (the engine's determinism contract).
+    let methods =
+        ["legend", "fedlora", "hetlora", "legend-no-rd", "fedadapter"];
+    check("engine-thread-invariance", 10, |rng, case| {
+        let method = methods[case % methods.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        let a = engine_run(method, seed, 1);
+        let b = engine_run(method, seed, 4);
+        prop_assert!(
+            a.to_json().to_string() == b.to_json().to_string(),
+            "{method} seed {seed}: JSON differs across thread counts"
+        );
+        prop_assert!(
+            a.to_csv_rows() == b.to_csv_rows(),
+            "{method} seed {seed}: CSV differs across thread counts"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_participation_cohorts_are_valid() {
+    check("participation-valid", 128, |rng, _| {
+        let n = rng.range_incl(1, 120);
+        let mut p = UniformSample { fraction: rng.uniform(0.0, 1.2) };
+        let cohort = p.sample(rng.range_incl(1, 50), n, rng);
+        prop_assert!(!cohort.is_empty(), "empty cohort");
+        prop_assert!(
+            cohort.windows(2).all(|w| w[0] < w[1]),
+            "cohort not sorted/unique"
+        );
+        prop_assert!(cohort.iter().all(|&i| i < n), "out of range");
+
+        let predicted: Vec<f64> =
+            cohort.iter().map(|_| rng.uniform(0.1, 100.0)).collect();
+        let mut d = DeadlineDrop::new(rng.uniform(0.01, 3.0));
+        let admitted = d.admit(1, &cohort, &predicted);
+        prop_assert!(!admitted.is_empty(), "deadline emptied the round");
+        prop_assert!(
+            admitted.iter().all(|i| cohort.contains(i)),
+            "admitted ⊄ cohort"
+        );
+        let mut sorted = admitted.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert!(sorted.len() == admitted.len(), "duplicates");
         Ok(())
     });
 }
