@@ -17,8 +17,11 @@
 
 use std::time::Instant;
 
-use legend::coordinator::aggregation::{aggregate, DeviceUpdate};
+use legend::coordinator::aggregation::{aggregate, DeviceUpdate,
+                                       ShardedAggregator,
+                                       StreamingAggregator};
 use legend::coordinator::capacity::CapacityEstimator;
+use legend::coordinator::engine::effective_threads;
 use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
 use legend::coordinator::strategy::{self};
 use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
@@ -339,16 +342,81 @@ fn main() {
                 ("speedup", Value::Num(speedup)),
             ]));
         }
-        let threads_auto = legend::coordinator::engine::effective_threads(0);
+        // ---- fold throughput: single-thread vs sharded eq. 17 ------------
+        // One 256-device cohort of full-size mock updates fed straight
+        // into the aggregator — the coordinator-side fold hot path,
+        // isolated from training. The owned per-update maps are cloned
+        // outside the timed region so both paths do identical work.
+        let fold_updates = random_updates(256, 11);
+        let fold_specs = real_specs();
+        let shards = effective_threads(0).clamp(2, fold_specs.len());
+        let fold_best = |n_shards: usize| -> f64 {
+            (0..3)
+                .map(|_| {
+                    let owned: Vec<TensorMap> = fold_updates
+                        .iter()
+                        .map(|u| u.trainable.clone())
+                        .collect();
+                    let mut global = TensorMap::zeros(&fold_specs);
+                    let t0 = Instant::now();
+                    if n_shards <= 1 {
+                        let mut agg =
+                            StreamingAggregator::new(&global, L, R);
+                        for (u, t) in fold_updates.iter().zip(&owned) {
+                            agg.push(t, &u.config, u.weight);
+                        }
+                        agg.finish(&mut global);
+                    } else {
+                        let mut agg = ShardedAggregator::new(
+                            &global, L, R, n_shards, 16,
+                        );
+                        for (u, t) in fold_updates.iter().zip(owned) {
+                            agg.push(t, &u.config, u.weight).unwrap();
+                        }
+                        agg.finish(&mut global).unwrap();
+                    }
+                    std::hint::black_box(&global);
+                    t0.elapsed().as_secs_f64() * 1e3
+                })
+                .fold(f64::MAX, f64::min)
+        };
+        let single_ms = fold_best(1);
+        let sharded_ms = fold_best(shards);
+        let fold_speedup = single_ms / sharded_ms.max(1e-9);
+        println!(
+            "{:<40} {:>9.1} ms {:>9.1} ms {:>11.2}× {:>7}",
+            format!("engine_fold_256dev_{shards}shards"),
+            single_ms,
+            sharded_ms,
+            fold_speedup,
+            256
+        );
+
+        let threads_auto = effective_threads(0);
         let doc = Value::obj(vec![
             ("bench", Value::Str("engine_seq_vs_par".into())),
             ("trainer", Value::Str("mock".into())),
             ("threads_auto", Value::Num(threads_auto as f64)),
             ("fleets", Value::Arr(rows)),
+            (
+                "fold",
+                Value::obj(vec![
+                    ("devices", Value::Num(256.0)),
+                    ("shards", Value::Num(shards as f64)),
+                    ("single_ms", Value::Num(single_ms)),
+                    ("sharded_ms", Value::Num(sharded_ms)),
+                    ("speedup", Value::Num(fold_speedup)),
+                ]),
+            ),
         ]);
-        match std::fs::write("BENCH_engine.json", doc.to_string()) {
-            Ok(()) => println!("wrote BENCH_engine.json"),
-            Err(e) => println!("(BENCH_engine.json not written: {e})"),
+        // The bench's CWD is the crate dir (rust/); BENCH_*.json files
+        // belong at the workspace root where CI picks them up.
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_engine.json");
+        match std::fs::write(&out, doc.to_string()) {
+            Ok(()) => println!("wrote {}", out.display()),
+            Err(e) => println!("({} not written: {e})", out.display()),
         }
     }
 

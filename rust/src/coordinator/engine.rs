@@ -8,26 +8,33 @@
 //! the six phases (§3) into an engine with three independent axes:
 //!
 //! 1. **Execution** — phase ④ (local fine-tuning) is expressed as a
-//!    vector of [`TrainJob`]s handed to [`Trainer::train_cohort`].
-//!    Backends whose per-device handles are `Send` (the mock; any
-//!    future multi-client PJRT pool) run them on a scoped worker pool
-//!    ([`train_parallel`]); non-thread-safe backends run them in
-//!    device order ([`train_sequential`]). Either way the engine
-//!    *re-serializes* outcomes into device-index order through a
-//!    reorder buffer, so every downstream effect — transport
-//!    accounting, aggregation folds, loss bookkeeping — is identical
-//!    at every thread count: same seed ⇒ bit-identical [`RunRecord`].
+//!    vector of [`TrainJob`]s handed to [`Trainer::train_cohort`]
+//!    together with [`ExecOpts`]. Backends whose per-device handles
+//!    are `Send` (the mock; any future multi-client PJRT pool) run
+//!    them on a scoped worker pool ([`train_parallel`]);
+//!    non-thread-safe backends run them in device order
+//!    ([`train_sequential`]). Either way outcomes reach the sink
+//!    *re-serialized into device-index order* (the reorder buffer
+//!    lives inside [`train_parallel`]), so every downstream effect —
+//!    transport accounting, aggregation folds, loss bookkeeping — is
+//!    identical at every thread count: same seed ⇒ bit-identical
+//!    [`RunRecord`]. Backpressure: with `ExecOpts::window = W > 0`,
+//!    workers pause before running a job more than `W` ahead of the
+//!    fold cursor, so completed-but-unfolded outcomes never exceed
+//!    `W` and per-round transient memory is O(model + W) instead of
+//!    cohort-bounded under skew.
 //!
 //! 2. **Aggregation** — instead of buffering `Vec<DeviceUpdate>` and
 //!    calling the one-shot `aggregate()`, the engine folds each update
-//!    into a [`StreamingAggregator`] as it is re-serialized, then
+//!    into a [`ShardedAggregator`] as it is re-serialized, then
 //!    finalizes once per round. The fold itself is O(model size),
-//!    independent of the fleet; the fold order (device index) makes
-//!    the result bit-identical to the buffered eq. 17 path. Caveat:
-//!    under parallel execution the reorder buffer holds outcomes that
-//!    finished ahead of the lowest-index straggler, so worst-case
-//!    transient memory is still skew-bounded by the cohort size —
-//!    backpressure on the in-flight window is a ROADMAP item.
+//!    independent of the fleet, and with `FedConfig::agg_shards > 1`
+//!    it is partitioned per tensor across worker threads (disjoint
+//!    element sets, merged in deterministic shard-index order), so the
+//!    coordinator core stops being the fold bottleneck at large
+//!    cohorts. The fold order (device index) makes the result
+//!    bit-identical to the buffered eq. 17 path at every
+//!    `threads × shards × window` setting.
 //!
 //! 3. **Participation** — cohort selection is delegated to a
 //!    [`Participation`] policy with two hooks: `sample` picks which
@@ -46,7 +53,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -60,7 +67,7 @@ use crate::runtime::Masks;
 use crate::sim::clock::{simulate_round, DeviceRound, VirtualClock};
 use crate::util::rng::Rng;
 
-use super::aggregation::StreamingAggregator;
+use super::aggregation::ShardedAggregator;
 use super::capacity::CapacityEstimator;
 use super::participation::Participation;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
@@ -92,36 +99,67 @@ pub fn effective_threads(threads: usize) -> usize {
     }
 }
 
+/// Phase-④ execution knobs, threaded from [`super::server::FedConfig`]
+/// through [`Trainer::train_cohort`] to [`train_parallel`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecOpts {
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+    /// In-flight window `W` (0 = unbounded): workers pause before
+    /// running a job more than `W` ahead of the fold cursor, bounding
+    /// completed-but-unfolded outcomes — and thus per-round transient
+    /// memory — to O(W) instead of O(cohort) under skew. Purely a
+    /// scheduling constraint: results are bit-identical at every `W`.
+    pub window: usize,
+}
+
+/// Observability for the execution path (window/backpressure tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Peak size of the reorder buffer: outcomes that had completed
+    /// but were not yet delivered to the sink. With `window = W > 0`
+    /// this never exceeds `W`.
+    pub max_pending: usize,
+}
+
 /// Drive `handles[i]` over `jobs[i]` in job order on the calling
 /// thread. Works for any backend (handles need not be `Send`).
 pub fn train_sequential<H: DeviceTrainer>(
     jobs: &[TrainJob<'_>], handles: &mut [H], sink: CohortSink<'_>,
-) -> Result<()> {
+) -> Result<ExecStats> {
     debug_assert_eq!(jobs.len(), handles.len());
     for (i, (job, h)) in jobs.iter().zip(handles.iter_mut()).enumerate() {
         let out = h.train_local(job)?;
         sink(i, out)?;
     }
-    Ok(())
+    Ok(ExecStats::default())
 }
 
-/// Drive `handles[i]` over `jobs[i]` on up to `threads` scoped worker
-/// threads (0 = auto). Outcomes are delivered to `sink` on the calling
-/// thread *as they complete*, in arbitrary order — callers that need
-/// device-index order install a reorder buffer (the engine does).
+/// Drive `handles[i]` over `jobs[i]` on up to `opts.threads` scoped
+/// worker threads (0 = auto). Outcomes are delivered to `sink` on the
+/// calling thread **in job-index order** — the reorder buffer lives
+/// here, and with `opts.window = W > 0` workers pause before running a
+/// job more than `W` ahead of the fold cursor, so the buffer never
+/// holds more than `W` outcomes.
 ///
-/// Each device's outcome is a pure function of `(job, handle)`, so the
-/// result set is independent of scheduling; only delivery order varies.
+/// Each device's outcome is a pure function of `(job, handle)`, and
+/// delivery order is fixed, so the sink sees an identical stream at
+/// every `threads × window` setting; only the wall-clock varies.
 pub fn train_parallel<H: DeviceTrainer + Send>(
-    jobs: &[TrainJob<'_>], handles: &mut [H], threads: usize,
+    jobs: &[TrainJob<'_>], handles: &mut [H], opts: &ExecOpts,
     sink: CohortSink<'_>,
-) -> Result<()> {
+) -> Result<ExecStats> {
     debug_assert_eq!(jobs.len(), handles.len());
     let n = jobs.len();
-    let workers = effective_threads(threads).min(n.max(1));
+    let workers = effective_threads(opts.threads).min(n.max(1));
     if workers <= 1 || n <= 1 {
         return train_sequential(jobs, handles, sink);
     }
+    let window = if opts.window == 0 {
+        usize::MAX
+    } else {
+        opts.window
+    };
 
     // Work stealing off an atomic cursor; each handle is touched by
     // exactly one claim, the Mutex only proves that to the compiler.
@@ -131,11 +169,19 @@ pub fn train_parallel<H: DeviceTrainer + Send>(
     // First failure aborts the round: workers stop claiming new jobs
     // instead of training the rest of the cohort to completion.
     let abort = AtomicBool::new(false);
+    // Fold cursor: the lowest job index not yet delivered to the
+    // sink. A worker holding claim `i` parks until `i < cursor + W`;
+    // the receiver advances the cursor under the mutex and signals
+    // the condvar after each in-order delivery (and on abort, so
+    // parked workers can exit).
+    let cursor = Mutex::new(0usize);
+    let unblock = Condvar::new();
     let (tx, rx) = mpsc::channel::<(usize, Result<LocalOutcome>)>();
     std::thread::scope(|s| {
         for _ in 0..workers {
             let tx = tx.clone();
             let (cells, next, abort) = (&cells, &next, &abort);
+            let (cursor, unblock) = (&cursor, &unblock);
             s.spawn(move || loop {
                 if abort.load(Ordering::Relaxed) {
                     break;
@@ -143,6 +189,17 @@ pub fn train_parallel<H: DeviceTrainer + Send>(
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
+                }
+                {
+                    // In-flight window: park until job i is within W
+                    // of the fold cursor (or the round aborted).
+                    let mut c = cursor.lock().expect("cursor poisoned");
+                    while i >= (*c).saturating_add(window) {
+                        if abort.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        c = unblock.wait(c).expect("cursor poisoned");
+                    }
                 }
                 let out = cells[i]
                     .lock()
@@ -159,21 +216,42 @@ pub fn train_parallel<H: DeviceTrainer + Send>(
         drop(tx);
         // Drain until the channel closes (all workers exited) so no
         // sender blocks; on abort the tail of the cohort is simply
-        // never claimed. A sink (fold/accounting) failure outranks
-        // training failures — it fired first and is deterministic;
-        // among training failures, surface the lowest job index
-        // (best-effort determinism — which jobs ran at all depends on
-        // abort timing).
+        // never claimed. Outcomes are re-serialized into job-index
+        // order through the reorder buffer before reaching the sink.
+        // A sink (fold/accounting) failure outranks training failures
+        // — it fired first and is deterministic; among training
+        // failures, surface the lowest job index (best-effort
+        // determinism — which jobs ran at all depends on abort
+        // timing).
+        let mut pending: BTreeMap<usize, LocalOutcome> = BTreeMap::new();
+        let mut stats = ExecStats::default();
+        let mut next_k = 0usize;
         let mut sink_err: Option<anyhow::Error> = None;
         let mut train_err: Option<(usize, anyhow::Error)> = None;
+        // Set abort under the cursor lock so a worker that checked
+        // the flag just before parking cannot miss the wake-up.
+        let fail = |flag: &AtomicBool| {
+            let _c = cursor.lock().expect("cursor poisoned");
+            flag.store(true, Ordering::Relaxed);
+            unblock.notify_all();
+        };
         while let Ok((i, res)) = rx.recv() {
             match res {
                 Ok(out)
                     if sink_err.is_none() && train_err.is_none() =>
                 {
-                    if let Err(e) = sink(i, out) {
-                        abort.store(true, Ordering::Relaxed);
-                        sink_err = Some(e);
+                    pending.insert(i, out);
+                    stats.max_pending =
+                        stats.max_pending.max(pending.len());
+                    while let Some(out) = pending.remove(&next_k) {
+                        if let Err(e) = sink(next_k, out) {
+                            sink_err = Some(e);
+                            fail(&abort);
+                            break;
+                        }
+                        next_k += 1;
+                        *cursor.lock().expect("cursor poisoned") = next_k;
+                        unblock.notify_all();
                     }
                 }
                 Ok(_) => {}
@@ -185,13 +263,17 @@ pub fn train_parallel<H: DeviceTrainer + Send>(
                         train_err =
                             Some((i, e.context(format!("job {i}"))));
                     }
+                    fail(&abort);
                 }
             }
         }
         match (sink_err, train_err) {
             (Some(e), _) => Err(e),
             (None, Some((_, e))) => Err(e),
-            (None, None) => Ok(()),
+            (None, None) => {
+                debug_assert_eq!(next_k, n, "missing device outcomes");
+                Ok(stats)
+            }
         }
     })
 }
@@ -245,6 +327,11 @@ impl<'a> RoundEngine<'a> {
         let mut record = RunRecord::new(&strategy.name(), &cfg.task);
         let mut part_rng = Rng::new(cfg.seed).child("participation");
         let mut last_losses = vec![0f64; n];
+        // Round each device's loss was recorded (0 = never): a device
+        // re-entering a sampled cohort after sitting out must not have
+        // a many-rounds-old loss surfaced to strategies as "last
+        // round" — stale entries read as 0 (round-1 semantics).
+        let mut loss_rounds = vec![0usize; n];
         let mut last_round_time = 0f64;
         let mut last_acc = 0f64;
         let mut last_test_loss = 0f64;
@@ -299,7 +386,16 @@ impl<'a> RoundEngine<'a> {
                 comm_budgets: vec![usize::MAX; cohort.len()],
                 last_losses: cohort
                     .iter()
-                    .map(|&i| last_losses[i])
+                    .map(|&i| {
+                        // Only a loss recorded in the immediately
+                        // previous round is "last round"; anything
+                        // older surfaces as 0 (round-1 semantics).
+                        if loss_rounds[i] + 1 == h {
+                            last_losses[i]
+                        } else {
+                            0.0
+                        }
+                    })
                     .collect(),
                 last_round_time,
                 device_ids: cohort.clone(),
@@ -382,47 +478,50 @@ impl<'a> RoundEngine<'a> {
                 })
                 .collect();
 
-            let mut agg =
-                StreamingAggregator::new(&global, meta.n_layers, rank_dim);
+            // Shard fold queues inherit the window: with W set, at
+            // most W updates sit in a lagging shard's queue before
+            // push() back-pressures, keeping transient memory
+            // O(model + W) end to end.
+            let shard_cap = if cfg.window > 0 { cfg.window } else { 8 };
+            let mut agg = ShardedAggregator::new(
+                &global, meta.n_layers, rank_dim, cfg.agg_shards,
+                shard_cap,
+            );
             let mut loss_sum = 0f64;
             {
-                // Reorder buffer: outcomes may arrive in any order
-                // from the worker pool; fold them in device-index
-                // order so accounting and eq. 17 sums are bit-stable.
-                let mut pending: BTreeMap<usize, LocalOutcome> =
-                    BTreeMap::new();
-                let mut next_k = 0usize;
+                // Outcomes arrive in device-index order (the reorder
+                // buffer lives in train_parallel), so accounting and
+                // eq. 17 folds are bit-stable at every threads ×
+                // shards × window setting.
                 let transport = &transport;
                 let plan = &plan;
                 let (cohort_r, admitted_pos_r) = (&cohort, &admitted_pos);
-                let (agg_r, losses_r, loss_sum_r) =
-                    (&mut agg, &mut last_losses, &mut loss_sum);
-                let mut fold = |k: usize, out: LocalOutcome| {
+                let (agg_r, losses_r, loss_rounds_r, loss_sum_r) = (
+                    &mut agg,
+                    &mut last_losses,
+                    &mut loss_rounds,
+                    &mut loss_sum,
+                );
+                let mut sink = |k: usize, out: LocalOutcome| {
                     let j = admitted_pos_r[k];
                     let i = cohort_r[j];
                     let config = &plan.device_configs[j];
                     transport.recv_update(i, &out.trainable, config,
                                           meta.n_layers, rank_dim);
-                    agg_r.push(&out.trainable, config, 1.0);
                     losses_r[i] = out.mean_loss;
+                    loss_rounds_r[i] = h;
                     *loss_sum_r += out.mean_loss;
-                    Ok::<(), anyhow::Error>(())
+                    agg_r.push(out.trainable, config, 1.0)
                 };
-                let mut sink = |k: usize, out: LocalOutcome| {
-                    pending.insert(k, out);
-                    while let Some(out) = pending.remove(&next_k) {
-                        fold(next_k, out)?;
-                        next_k += 1;
-                    }
-                    Ok::<(), anyhow::Error>(())
+                let opts = ExecOpts {
+                    threads: cfg.threads,
+                    window: cfg.window,
                 };
-                trainer.train_cohort(&jobs, cfg.threads, &mut sink)?;
-                debug_assert_eq!(next_k, jobs.len(),
-                                 "missing device outcomes");
+                trainer.train_cohort(&jobs, &opts, &mut sink)?;
             }
             drop(jobs);
             let tally = transport.round_tally();
-            agg.finish(&mut global);
+            agg.finish(&mut global)?;
 
             // ⑥ timing (eq. 12/13) with TRUE device parameters, over
             // the devices that actually took part.

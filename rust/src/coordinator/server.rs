@@ -51,6 +51,16 @@ pub struct FedConfig {
     /// are `Send` (0 = one per available core). Results are
     /// bit-identical at every setting — see `coordinator/engine.rs`.
     pub threads: usize,
+    /// Aggregation fold shards: the eq. 17 fold is partitioned per
+    /// tensor across this many worker threads (0 = one per available
+    /// core, 1 = fold inline on the coordinator thread). Bit-identical
+    /// at every setting.
+    pub agg_shards: usize,
+    /// In-flight window W for phase ④ (0 = unbounded): workers pause
+    /// before running a job more than W ahead of the fold cursor, so
+    /// per-round transient memory is O(model + W) instead of
+    /// cohort-bounded under skew. Bit-identical at every setting.
+    pub window: usize,
     pub verbose: bool,
 }
 
@@ -68,6 +78,8 @@ impl Default for FedConfig {
             max_batches: 8,
             target_acc: 0.85,
             threads: 0,
+            agg_shards: 1,
+            window: 0,
             verbose: false,
         }
     }

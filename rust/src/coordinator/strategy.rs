@@ -7,6 +7,8 @@
 //! code in `server.rs`, so strategies differ *only* in the paper's
 //! actual design axes.
 
+use std::collections::BTreeMap;
+
 use crate::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
 
 use super::capacity::Capacity;
@@ -29,8 +31,12 @@ pub struct StrategyCtx {
     /// Per-device budgets (eq. 14/15); f64::MAX / usize::MAX = unbound.
     pub compute_budgets: Vec<f64>,
     pub comm_budgets: Vec<usize>,
-    /// Mean local train loss per device last round (0 on round 1) —
-    /// feedback for search-based strategies (FedAdapter).
+    /// Mean local train loss per device *from the immediately previous
+    /// round* — feedback for search-based strategies (FedAdapter).
+    /// 0 means "no fresh loss" (round 1, the device was
+    /// deadline-dropped, or it sat out sampled rounds since it last
+    /// trained): the engine tracks the round each loss was recorded
+    /// and never surfaces an older loss as "last round".
     pub last_losses: Vec<f64>,
     /// Virtual duration of the previous round [s].
     pub last_round_time: f64,
@@ -263,13 +269,14 @@ pub struct FedAdapter {
     pub w_max: usize,
     /// (sum of loss drops, rounds) per candidate in current window.
     scores: Vec<(f64, usize)>,
-    /// Device losses of the previous round per candidate slot.
-    last_assignment: Vec<usize>,
-    prev_losses: Vec<f64>,
-    /// Cohort the previous round's losses belong to — feedback is
-    /// positional, so it only folds when the cohort is unchanged
-    /// (client sampling reshuffles cohorts every round).
-    prev_ids: Vec<usize>,
+    /// Per-device feedback state from the previous `configure`, keyed
+    /// by fleet device id: (candidate index, the loss the device
+    /// entered that round with, the round of assignment). Id-keying —
+    /// not cohort position — means resampled cohorts still fold for
+    /// the devices both rounds share, and devices that never trained
+    /// (deadline-dropped; stale losses surface as 0) never fold
+    /// phantom drops.
+    assigned: BTreeMap<usize, (usize, f64, usize)>,
 }
 
 impl FedAdapter {
@@ -284,21 +291,31 @@ impl FedAdapter {
             window: 5,
             w_max,
             scores: vec![(0.0, 0); 3],
-            last_assignment: Vec::new(),
-            prev_losses: Vec::new(),
-            prev_ids: Vec::new(),
+            assigned: BTreeMap::new(),
         }
     }
 
     fn fold_feedback(&mut self, ctx: &StrategyCtx) {
-        if self.last_assignment.is_empty()
-            || self.prev_losses.len() != ctx.last_losses.len()
-            || self.prev_ids != ctx.device_ids
-        {
-            return;
-        }
-        for (i, &c) in self.last_assignment.iter().enumerate() {
-            let drop = self.prev_losses[i] - ctx.last_losses[i];
+        for (j, &id) in ctx.device_ids.iter().enumerate() {
+            let Some(&(c, loss_in, round)) = self.assigned.get(&id)
+            else {
+                continue;
+            };
+            // Only the immediately previous round's assignment is
+            // attributable to its candidate — an older one measured a
+            // global model many rounds stale.
+            if round + 1 != ctx.round {
+                continue;
+            }
+            let loss_out = ctx.last_losses[j];
+            // 0 is "no fresh loss": the device was deadline-dropped
+            // last round (never trained under the candidate), or it
+            // had no baseline when assigned. Either way there is no
+            // attributable drop.
+            if loss_out == 0.0 || loss_in == 0.0 {
+                continue;
+            }
+            let drop = loss_in - loss_out;
             if drop.is_finite() {
                 self.scores[c].0 += drop;
                 self.scores[c].1 += 1;
@@ -357,9 +374,14 @@ impl Strategy for FedAdapter {
                 )
             })
             .collect();
-        self.last_assignment = assignment;
-        self.prev_losses = ctx.last_losses.clone();
-        self.prev_ids = ctx.device_ids.clone();
+        self.assigned = ctx
+            .device_ids
+            .iter()
+            .enumerate()
+            .map(|(j, &id)| {
+                (id, (assignment[j], ctx.last_losses[j], ctx.round))
+            })
+            .collect();
         // Evaluate under the widest candidate's mask on all layers any
         // group trained.
         let max_w = self
@@ -484,6 +506,8 @@ pub fn by_name(name: &str, n_layers: usize, r_max: usize, w_max: usize)
 
 #[cfg(test)]
 mod tests {
+    use std::collections::BTreeMap;
+
     use super::*;
 
     fn ctx(mus: &[f64]) -> StrategyCtx {
@@ -587,8 +611,9 @@ mod tests {
         // Feed back: candidate 1 shows the biggest loss drop.
         c.round = 5;
         c.last_losses = vec![1.0, 0.1, 1.0, 1.0, 0.1, 1.0];
-        s.prev_losses = vec![1.0; 6];
-        s.last_assignment = vec![0, 1, 2, 0, 1, 2];
+        s.assigned = (0..6usize)
+            .map(|i| (i, (i % 3, 1.0, 4usize)))
+            .collect();
         let before = s.candidates.clone();
         let _ = s.configure(&c);
         assert_ne!(s.candidates, before, "window recenter must fire");
@@ -596,19 +621,48 @@ mod tests {
     }
 
     #[test]
-    fn fedadapter_ignores_feedback_from_a_different_cohort() {
+    fn fedadapter_folds_feedback_by_device_id_across_cohorts() {
+        // A resampled cohort shares devices 2 and 5 with the previous
+        // round at different positions: id-keyed feedback folds their
+        // drops to the right candidates; ids never assigned (7, 9) and
+        // ids resampled out (6) contribute nothing.
         let mut s = FedAdapter::paper(12, 32);
-        let mut c = ctx(&[0.01; 6]);
-        let _ = s.configure(&c); // prev_ids = [0..6]
-        // A sampled round hands back a different cohort of equal size:
-        // positional deltas would pair losses from different devices.
-        c.round = 2;
-        c.device_ids = vec![1, 2, 3, 4, 5, 6];
-        c.last_losses = vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0];
-        let scores_before = s.scores.clone();
+        let mut c = ctx(&[0.01; 4]);
+        c.round = 3;
+        c.device_ids = vec![2, 5, 7, 9];
+        c.last_losses = vec![0.4, 0.9, 1.0, 1.0];
+        s.assigned = BTreeMap::from([
+            (2, (2, 1.0, 2)),
+            (5, (0, 1.0, 2)),
+            (6, (1, 1.0, 2)),
+        ]);
         let _ = s.configure(&c);
-        assert_eq!(s.scores, scores_before,
-                   "cross-cohort feedback must not fold");
+        assert_eq!(s.scores[2].1, 1, "device 2 folded once");
+        assert!((s.scores[2].0 - 0.6).abs() < 1e-12);
+        assert_eq!(s.scores[0].1, 1, "device 5 folded once");
+        assert!((s.scores[0].0 - 0.1).abs() < 1e-12);
+        assert_eq!(s.scores[1], (0.0, 0), "device 6 never folds");
+    }
+
+    #[test]
+    fn fedadapter_skips_dropped_and_stale_devices() {
+        let mut s = FedAdapter::paper(12, 32);
+        let mut c = ctx(&[0.01; 3]);
+        c.round = 4;
+        c.device_ids = vec![0, 1, 2];
+        // 0: deadline-dropped last round — its stale loss surfaces as
+        //    0 (round-1 semantics), so no phantom drop folds.
+        // 1: assignment is from round 1, not round 3 — too old.
+        // 2: assigned without a baseline loss (loss_in 0).
+        c.last_losses = vec![0.0, 0.8, 0.7];
+        s.assigned = BTreeMap::from([
+            (0, (0, 1.0, 3)),
+            (1, (1, 1.0, 1)),
+            (2, (2, 0.0, 3)),
+        ]);
+        let before = s.scores.clone();
+        let _ = s.configure(&c);
+        assert_eq!(s.scores, before, "no phantom folds");
     }
 
     #[test]

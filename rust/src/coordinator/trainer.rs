@@ -34,7 +34,8 @@ use crate::runtime::session::SessionState;
 use crate::runtime::{Masks, Runtime};
 use crate::util::rng::Rng;
 
-use super::engine::{train_parallel, train_sequential, TrainJob};
+use super::engine::{train_parallel, train_sequential, ExecOpts,
+                    TrainJob};
 
 /// Result of one device's local epoch.
 #[derive(Debug, Clone)]
@@ -45,10 +46,11 @@ pub struct LocalOutcome {
     pub n_steps: usize,
 }
 
-/// Receives `(job_index, outcome)` pairs as devices finish. The engine
-/// installs a reorder buffer here so downstream accounting and
-/// aggregation always happen in device-index order regardless of which
-/// worker thread finished first.
+/// Receives `(job_index, outcome)` pairs **in job-index order** — the
+/// execution layer (`engine::train_parallel`) re-serializes worker
+/// completions through its reorder buffer before calling the sink, so
+/// downstream accounting and aggregation see an identical stream
+/// regardless of which worker thread finished first.
 pub type CohortSink<'s> =
     &'s mut dyn FnMut(usize, LocalOutcome) -> Result<()>;
 
@@ -68,11 +70,13 @@ pub trait Trainer {
     fn batch_size(&self) -> usize;
     /// Run phase ④ for one round's cohort. `jobs[i]` carries device
     /// `jobs[i].device_id`'s assignment; outcomes are delivered to
-    /// `sink` as `(i, outcome)`. Implementations may complete jobs in
-    /// any order and on any thread, but each device's outcome MUST be
-    /// a pure function of `(job, that device's persistent state)` so
-    /// results are identical at every `threads` setting.
-    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], threads: usize,
+    /// `sink` as `(i, outcome)` in job-index order. Implementations
+    /// may complete jobs on any thread (honoring `opts.threads` and
+    /// the `opts.window` in-flight bound), but each device's outcome
+    /// MUST be a pure function of `(job, that device's persistent
+    /// state)` so results are identical at every `threads × window`
+    /// setting.
+    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], opts: &ExecOpts,
                     sink: CohortSink<'_>) -> Result<()>;
     /// Evaluate a global model on `ds`; returns (mean_loss, accuracy).
     fn evaluate(&mut self, trainable: &TensorMap, masks: &Masks,
@@ -167,7 +171,7 @@ impl Trainer for PjrtTrainer<'_> {
         self.rt.manifest.dim.batch_size
     }
 
-    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], _threads: usize,
+    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], _opts: &ExecOpts,
                     sink: CohortSink<'_>) -> Result<()> {
         let mut handles: Vec<PjrtDevice<'_>> = jobs
             .iter()
@@ -181,7 +185,7 @@ impl Trainer for PjrtTrainer<'_> {
         for (job, h) in jobs.iter().zip(handles) {
             self.devices.insert(job.device_id, h.state);
         }
-        res
+        res.map(|_| ())
     }
 
     fn evaluate(&mut self, trainable: &TensorMap, masks: &Masks,
@@ -269,7 +273,7 @@ impl Trainer for MockTrainer {
         self.batch
     }
 
-    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], threads: usize,
+    fn train_cohort(&mut self, jobs: &[TrainJob<'_>], opts: &ExecOpts,
                     sink: CohortSink<'_>) -> Result<()> {
         let batch = self.batch;
         let mut handles: Vec<MockDevice> = jobs
@@ -280,11 +284,11 @@ impl Trainer for MockTrainer {
                     .unwrap_or(MockDevice { batch, progress: 0.0 })
             })
             .collect();
-        let res = train_parallel(jobs, &mut handles, threads, sink);
+        let res = train_parallel(jobs, &mut handles, opts, sink);
         for (job, h) in jobs.iter().zip(handles) {
             self.devices.insert(job.device_id, h);
         }
-        res
+        res.map(|_| ())
     }
 
     fn evaluate(&mut self, _trainable: &TensorMap, _masks: &Masks,
@@ -334,7 +338,8 @@ mod tests {
                -> LocalOutcome {
         let jobs = vec![job(device_id, init, masks, shard, max_batches)];
         let mut got = None;
-        t.train_cohort(&jobs, 1, &mut |_, o| {
+        let opts = ExecOpts { threads: 1, window: 0 };
+        t.train_cohort(&jobs, &opts, &mut |_, o| {
             got = Some(o);
             Ok(())
         })
@@ -424,7 +429,8 @@ mod tests {
                 .collect();
             let mut outs: Vec<Option<LocalOutcome>> =
                 (0..jobs.len()).map(|_| None).collect();
-            t.train_cohort(&jobs, threads, &mut |i, o| {
+            let opts = ExecOpts { threads, window: 0 };
+            t.train_cohort(&jobs, &opts, &mut |i, o| {
                 outs[i] = Some(o);
                 Ok(())
             })

@@ -4,8 +4,11 @@
 //!   run    one federated run:   legend run --method legend --task sst2
 //!          participation: --participation full|sample|deadline
 //!          (--sample-frac F, --deadline-factor F), phase-④ worker
-//!          threads: --threads N (0 = auto; results are bit-identical
-//!          at every setting)
+//!          threads: --threads N (0 = auto), aggregation fold shards:
+//!          --agg-shards S (0 = auto, 1 = inline), in-flight window:
+//!          --window W (0 = unbounded; bounds per-round transient
+//!          memory to O(model + W)). Results are bit-identical at
+//!          every threads × agg-shards × window setting.
 //!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
 //!   fleet  describe the simulated 80-device testbed (Table 1)
 //!   data   describe the synthetic datasets (Table 2)
@@ -45,6 +48,8 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         max_batches: args.get_parse("max-batches", d.max_batches)?,
         target_acc: args.get_parse("target-acc", d.target_acc)?,
         threads: args.get_parse("threads", d.threads)?,
+        agg_shards: args.get_parse("agg-shards", d.agg_shards)?,
+        window: args.get_parse("window", d.window)?,
         verbose: !args.flag("quiet"),
     })
 }

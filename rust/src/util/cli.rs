@@ -3,7 +3,9 @@
 //! Grammar: `legend <subcommand> [--key value]* [--flag]* [positional]*`.
 //! Flags are recognized as `--name` with an optional value; `--name=value`
 //! also works. Unknown keys are an error (catches typos in experiment
-//! invocations).
+//! invocations). Numeric engine knobs (`--threads`, `--agg-shards`,
+//! `--window`, …) go through [`Args::get_parse`], so a malformed value
+//! fails loudly instead of silently falling back to the default.
 
 use std::collections::BTreeMap;
 
@@ -178,6 +180,22 @@ mod tests {
     fn bad_value_errors() {
         let a = parse("run --rounds banana");
         assert!(a.get_parse("rounds", 1usize).is_err());
+    }
+
+    #[test]
+    fn engine_knobs_parse_and_default() {
+        // The `run` surface for the sharded fold + in-flight window.
+        let a = parse("run --threads 4 --agg-shards 2 --window 16");
+        assert_eq!(a.get_parse("threads", 0usize).unwrap(), 4);
+        assert_eq!(a.get_parse("agg-shards", 1usize).unwrap(), 2);
+        assert_eq!(a.get_parse("window", 0usize).unwrap(), 16);
+        assert!(a.reject_unknown().is_ok());
+        // Omitted knobs keep their defaults (inline fold, unbounded).
+        let b = parse("run");
+        assert_eq!(b.get_parse("agg-shards", 1usize).unwrap(), 1);
+        assert_eq!(b.get_parse("window", 0usize).unwrap(), 0);
+        let c = parse("run --window=-3");
+        assert!(c.get_parse("window", 0usize).is_err());
     }
 
     #[test]

@@ -3,13 +3,16 @@
 //! assignment/masks, capacity estimation, partitioning, timing, JSON.
 
 use legend::coordinator::aggregation::{aggregate, DeviceUpdate,
+                                       ShardedAggregator,
                                        StreamingAggregator};
 use legend::coordinator::capacity::{Capacity, CapacityEstimator};
+use legend::coordinator::engine::{train_parallel, ExecOpts, TrainJob};
 use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
 use legend::coordinator::participation::{DeadlineDrop, Participation,
                                          UniformSample};
 use legend::coordinator::strategy as fedstrategy;
-use legend::coordinator::trainer::MockTrainer;
+use legend::coordinator::trainer::{DeviceTrainer, LocalOutcome,
+                                   MockTrainer};
 use legend::coordinator::{run_federated, FedConfig, ModelMeta};
 use legend::data::Spec;
 use legend::device::{Fleet, FleetConfig};
@@ -18,6 +21,7 @@ use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
 use legend::model::state::TensorMap;
 use legend::model::TensorSpec;
 use legend::prop_assert;
+use legend::runtime::Masks;
 use legend::sim::clock::{simulate_round, DeviceRound};
 use legend::util::json::Value;
 use legend::util::prop::check;
@@ -273,6 +277,70 @@ fn prop_streaming_aggregator_matches_buffered() {
 }
 
 #[test]
+fn prop_sharded_aggregator_matches_streaming_bitwise() {
+    // The per-tensor sharded fold must be ELEMENT-WISE IDENTICAL
+    // (bit-exact) to the single-thread StreamingAggregator at every
+    // shard count — shards own disjoint element sets and fold the
+    // same stream in the same order, so nothing may drift.
+    let d = 3usize;
+    let specs = vec![
+        TensorSpec { name: "aq".into(), shape: vec![L, R, d] },
+        TensorSpec { name: "bq".into(), shape: vec![L, d, R] },
+        TensorSpec { name: "av".into(), shape: vec![L, R, d] },
+        TensorSpec { name: "bv".into(), shape: vec![L, d, R] },
+        TensorSpec { name: "head_w".into(), shape: vec![d, 4] },
+    ];
+    check("sharded-vs-streaming", 24, |rng, _| {
+        let n = rng.range_incl(0, 14);
+        let mut updates: Vec<DeviceUpdate> =
+            (0..n).map(|_| random_update(rng, &specs)).collect();
+        for u in &mut updates {
+            if rng.bernoulli(0.3) {
+                u.weight = rng.uniform(0.1, 4.0);
+            }
+        }
+        let mut global = TensorMap::zeros(&specs);
+        for (_, v) in &mut global.entries {
+            for x in v.iter_mut() {
+                *x = rng.uniform(-1.0, 1.0) as f32;
+            }
+        }
+        let mut streamed = global.clone();
+        let mut agg = StreamingAggregator::new(&streamed, L, R);
+        for u in &updates {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        agg.finish(&mut streamed);
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut sharded = global.clone();
+            let mut agg =
+                ShardedAggregator::new(&sharded, L, R, shards, 4);
+            for u in &updates {
+                agg.push(u.trainable.clone(), &u.config, u.weight)
+                    .map_err(|e| e.to_string())?;
+            }
+            prop_assert!(agg.n_updates() == n, "push count");
+            agg.finish(&mut sharded).map_err(|e| e.to_string())?;
+            for (spec, want) in &streamed.entries {
+                let got = sharded.get(&spec.name).unwrap();
+                for (e, (&g, &w)) in
+                    got.iter().zip(want.iter()).enumerate()
+                {
+                    prop_assert!(
+                        g.to_bits() == w.to_bits(),
+                        "{} shards, {}[{e}]: {g} != {w}",
+                        shards,
+                        spec.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_aggregation_idempotent_on_identical_updates() {
     let specs =
         vec![TensorSpec { name: "aq".into(), shape: vec![L, R, 2] }];
@@ -449,7 +517,8 @@ fn engine_spec() -> Spec {
     Spec::from_json(&Value::parse(json).unwrap()).unwrap()
 }
 
-fn engine_run(method: &str, seed: u64, threads: usize)
+fn engine_run(method: &str, seed: u64, threads: usize,
+              agg_shards: usize, window: usize)
               -> legend::metrics::RunRecord {
     let meta = ModelMeta::synthetic(L, R, 32);
     let mut s = fedstrategy::by_name(method, L, R, 32).unwrap();
@@ -462,6 +531,8 @@ fn engine_run(method: &str, seed: u64, threads: usize)
         test_size: 64,
         seed,
         threads,
+        agg_shards,
+        window,
         ..Default::default()
     };
     let global = TensorMap::zeros(&[
@@ -477,26 +548,114 @@ fn engine_run(method: &str, seed: u64, threads: usize)
 }
 
 #[test]
-fn prop_engine_output_invariant_under_thread_count() {
-    // Same seed ⇒ bit-identical RunRecord at 1 vs many threads, for
-    // every method (the engine's determinism contract).
+fn prop_engine_output_invariant_under_threads_shards_window() {
+    // Same seed ⇒ bit-identical RunRecord at every
+    // threads × agg-shards × window setting, for every method (the
+    // engine's determinism contract). The baseline is the fully
+    // serial path: 1 thread, inline fold, unbounded window.
     let methods =
         ["legend", "fedlora", "hetlora", "legend-no-rd", "fedadapter"];
-    check("engine-thread-invariance", 10, |rng, case| {
+    let combos: [(usize, usize, usize); 4] =
+        [(4, 1, 0), (4, 4, 2), (2, 8, 1), (3, 2, 5)];
+    check("engine-threads-shards-window-invariance", 10, |rng, case| {
         let method = methods[case % methods.len()];
+        let (threads, shards, window) = combos[case % combos.len()];
         let seed = rng.next_u64() % 1_000_003;
-        let a = engine_run(method, seed, 1);
-        let b = engine_run(method, seed, 4);
+        let a = engine_run(method, seed, 1, 1, 0);
+        let b = engine_run(method, seed, threads, shards, window);
         prop_assert!(
             a.to_json().to_string() == b.to_json().to_string(),
-            "{method} seed {seed}: JSON differs across thread counts"
+            "{method} seed {seed}: JSON differs at threads={threads} \
+             shards={shards} window={window}"
         );
         prop_assert!(
             a.to_csv_rows() == b.to_csv_rows(),
-            "{method} seed {seed}: CSV differs across thread counts"
+            "{method} seed {seed}: CSV differs at threads={threads} \
+             shards={shards} window={window}"
         );
         Ok(())
     });
+}
+
+/// Adversarial completion order: job 0 straggles while everything
+/// else finishes instantly — the order that used to grow the reorder
+/// buffer to the whole cohort.
+struct StaggeredDevice {
+    delay_ms: u64,
+}
+
+impl DeviceTrainer for StaggeredDevice {
+    fn train_local(&mut self, job: &TrainJob<'_>)
+                   -> anyhow::Result<LocalOutcome> {
+        std::thread::sleep(std::time::Duration::from_millis(
+            self.delay_ms,
+        ));
+        Ok(LocalOutcome {
+            trainable: job.init.clone(),
+            mean_loss: job.device_id as f64,
+            train_accuracy: 0.0,
+            n_steps: 1,
+        })
+    }
+}
+
+#[test]
+fn window_bounds_reorder_buffer_under_adversarial_completion() {
+    let n = 24usize;
+    let init = TensorMap::zeros(&[TensorSpec {
+        name: "aq".into(),
+        shape: vec![2, 2, 2],
+    }]);
+    let shard = Dataset {
+        examples: vec![Example { tokens: vec![1, 2, 3, 0], label: 0 }],
+    };
+    let masks = Masks {
+        rank_mask: vec![1.0; 4],
+        layer_mask: vec![1.0; 2],
+    };
+    for window in [1usize, 2, 4, 7, 0] {
+        let jobs: Vec<TrainJob<'_>> = (0..n)
+            .map(|i| TrainJob {
+                device_id: i,
+                init: &init,
+                masks: masks.clone(),
+                shard: &shard,
+                lr: 1e-3,
+                max_batches: 1,
+            })
+            .collect();
+        let mut handles: Vec<StaggeredDevice> = (0..n)
+            .map(|i| StaggeredDevice {
+                delay_ms: if i == 0 { 40 } else { 0 },
+            })
+            .collect();
+        let mut seen: Vec<(usize, f64)> = Vec::new();
+        let stats = train_parallel(
+            &jobs,
+            &mut handles,
+            &ExecOpts { threads: 8, window },
+            &mut |k, out| {
+                seen.push((k, out.mean_loss));
+                Ok(())
+            },
+        )
+        .unwrap();
+        // The hard bound: completed-but-undelivered outcomes never
+        // exceed W (W = 0 is unbounded, but still ≤ cohort).
+        let bound = if window > 0 { window } else { n };
+        assert!(
+            stats.max_pending <= bound,
+            "window {window}: max_pending {} > {bound}",
+            stats.max_pending
+        );
+        // Delivery is in job-index order with the right outcomes, at
+        // every window setting.
+        assert_eq!(seen.len(), n, "window {window}");
+        for (k, (got_k, loss)) in seen.iter().enumerate() {
+            assert_eq!(*got_k, k, "window {window}: order");
+            assert_eq!(*loss, k as f64, "window {window}: outcome");
+        }
+    }
 }
 
 #[test]
