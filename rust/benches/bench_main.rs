@@ -392,6 +392,60 @@ fn main() {
             256
         );
 
+        // ---- async vs barrier rounds --------------------------------------
+        // Wall-clock of the staleness-windowed engine vs the eq. 12
+        // barrier loop on the same fleet/seed (mock-trained, so this
+        // isolates coordination cost), plus the virtual-time totals —
+        // the async engine's whole point is that commit windows close
+        // before the straggler.
+        let engine_mode_run = |n_dev: usize, s_max: usize,
+                               async_mode: bool| -> (f64, f64) {
+            let mut s = strategy::by_name("legend", L, R, 32).unwrap();
+            let mut fleet = Fleet::new(FleetConfig::sized(n_dev));
+            let mut trainer = MockTrainer::new("lora");
+            let cfg = FedConfig {
+                rounds: 2,
+                train_size: n_dev * 64,
+                test_size: 64,
+                async_mode,
+                staleness_alpha: 0.5,
+                max_staleness: s_max,
+                ..Default::default()
+            };
+            let global = TensorMap::zeros(&real_specs());
+            let t0 = Instant::now();
+            let rec = run_federated(&cfg, &mut fleet, s.as_mut(),
+                                    &mut trainer, &meta, &spec, global)
+                .unwrap();
+            (t0.elapsed().as_secs_f64() * 1e3, rec.total_time())
+        };
+        let best_mode = |s_max: usize, async_mode: bool| -> (f64, f64) {
+            // Keep the (wall-clock, virtual-time) pair of the fastest
+            // rep together — virtual time is deterministic across
+            // reps today, but mixing metrics from different reps
+            // would be silently wrong if that ever changes.
+            (0..3)
+                .map(|_| engine_mode_run(64, s_max, async_mode))
+                .fold((f64::MAX, f64::MAX), |acc, x| {
+                    if x.0 < acc.0 {
+                        x
+                    } else {
+                        acc
+                    }
+                })
+        };
+        let (barrier_ms, barrier_vt) = best_mode(0, false);
+        let (async_ms, async_vt) = best_mode(2, true);
+        println!(
+            "{:<40} {:>9.1} ms {:>9.1} ms {:>6.1}s→{:>5.1}s {:>4}",
+            "engine_async_vs_barrier_64dev",
+            barrier_ms,
+            async_ms,
+            barrier_vt,
+            async_vt,
+            64
+        );
+
         let threads_auto = effective_threads(0);
         let doc = Value::obj(vec![
             ("bench", Value::Str("engine_seq_vs_par".into())),
@@ -406,6 +460,19 @@ fn main() {
                     ("single_ms", Value::Num(single_ms)),
                     ("sharded_ms", Value::Num(sharded_ms)),
                     ("speedup", Value::Num(fold_speedup)),
+                ]),
+            ),
+            (
+                "async",
+                Value::obj(vec![
+                    ("devices", Value::Num(64.0)),
+                    ("rounds", Value::Num(2.0)),
+                    ("max_staleness", Value::Num(2.0)),
+                    ("staleness_alpha", Value::Num(0.5)),
+                    ("barrier_ms", Value::Num(barrier_ms)),
+                    ("async_ms", Value::Num(async_ms)),
+                    ("barrier_virtual_s", Value::Num(barrier_vt)),
+                    ("async_virtual_s", Value::Num(async_vt)),
                 ]),
             ),
         ]);

@@ -199,6 +199,9 @@ pub struct StreamingAggregator {
     acc: Vec<Vec<f64>>,
     wsum: Vec<Vec<f64>>,
     n_updates: usize,
+    /// Minimum acceptable model version for [`Self::push_versioned`]
+    /// (the async engine's staleness cutoff); 0 accepts everything.
+    watermark: usize,
 }
 
 impl StreamingAggregator {
@@ -226,7 +229,31 @@ impl StreamingAggregator {
             acc,
             wsum,
             n_updates: 0,
+            watermark: 0,
         }
+    }
+
+    /// Set the version watermark: subsequent [`Self::push_versioned`]
+    /// calls whose `version` is below `v` are rejected. The async
+    /// engine sets this to `current_version − max_staleness` each
+    /// commit window, so an update trained on a model older than the
+    /// staleness cutoff can never fold.
+    pub fn set_watermark(&mut self, v: usize) {
+        self.watermark = v;
+    }
+
+    /// Weighted fold gated by the version watermark: folds the update
+    /// (exactly like [`Self::push`]) and returns `true`, or — when
+    /// `version` is below the watermark — folds nothing and returns
+    /// `false`.
+    pub fn push_versioned(&mut self, trainable: &TensorMap,
+                          config: &LoraConfig, weight: f64,
+                          version: usize) -> bool {
+        if version < self.watermark {
+            return false;
+        }
+        self.push(trainable, config, weight);
+        true
     }
 
     /// Fold one device's update into the running sums (O(model size);
@@ -353,6 +380,8 @@ pub struct ShardedAggregator {
     rank_dim: usize,
     mode: ShardMode,
     n_updates: usize,
+    /// Minimum acceptable model version for [`Self::push_versioned`].
+    watermark: usize,
 }
 
 impl ShardedAggregator {
@@ -375,6 +404,7 @@ impl ShardedAggregator {
                     global, n_layers, rank_dim,
                 )),
                 n_updates: 0,
+                watermark: 0,
             };
         }
 
@@ -419,7 +449,27 @@ impl ShardedAggregator {
             rank_dim,
             mode: ShardMode::Workers { txs, handles },
             n_updates: 0,
+            watermark: 0,
         }
+    }
+
+    /// Set the version watermark (see
+    /// [`StreamingAggregator::set_watermark`]).
+    pub fn set_watermark(&mut self, v: usize) {
+        self.watermark = v;
+    }
+
+    /// Weighted fold gated by the version watermark: folds the update
+    /// and returns `Ok(true)`, or — when `version` is below the
+    /// watermark — folds nothing and returns `Ok(false)`.
+    pub fn push_versioned(&mut self, trainable: TensorMap,
+                          config: &LoraConfig, weight: f64,
+                          version: usize) -> Result<bool> {
+        if version < self.watermark {
+            return Ok(false);
+        }
+        self.push(trainable, config, weight)?;
+        Ok(true)
     }
 
     /// Fold one device's update. Takes the map by value: in sharded
@@ -778,6 +828,64 @@ mod tests {
             agg.finish(&mut sharded).unwrap();
             assert_eq!(streamed, sharded,
                        "{shards} shards must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn watermark_gates_streaming_folds() {
+        let ups = vec![
+            update(2.0, L, vec![R; L]),
+            update(6.0, L, vec![R; L]),
+        ];
+        // Reference: only the fresh update folds.
+        let mut want = filled(0.0);
+        let mut agg = StreamingAggregator::new(&want, L, R);
+        agg.push(&ups[1].trainable, &ups[1].config, 1.0);
+        agg.finish(&mut want);
+
+        let mut got = filled(0.0);
+        let mut agg = StreamingAggregator::new(&got, L, R);
+        agg.set_watermark(5);
+        // version 4 < watermark 5: rejected, nothing folds.
+        assert!(!agg.push_versioned(&ups[0].trainable, &ups[0].config,
+                                    1.0, 4));
+        assert_eq!(agg.n_updates(), 0);
+        // version == watermark: accepted.
+        assert!(agg.push_versioned(&ups[1].trainable, &ups[1].config,
+                                   1.0, 5));
+        assert_eq!(agg.n_updates(), 1);
+        agg.finish(&mut got);
+        assert_eq!(got, want, "rejected update must leave no trace");
+    }
+
+    #[test]
+    fn watermark_gates_sharded_folds() {
+        for shards in [1usize, 3] {
+            let ups = vec![
+                update(2.0, L, vec![R; L]),
+                update(6.0, L, vec![R; L]),
+            ];
+            let mut want = filled(0.0);
+            let mut agg = ShardedAggregator::new(&want, L, R, shards, 2);
+            agg.push(ups[1].trainable.clone(), &ups[1].config, 1.0)
+                .unwrap();
+            agg.finish(&mut want).unwrap();
+
+            let mut got = filled(0.0);
+            let mut agg = ShardedAggregator::new(&got, L, R, shards, 2);
+            agg.set_watermark(3);
+            assert!(!agg
+                .push_versioned(ups[0].trainable.clone(), &ups[0].config,
+                                1.0, 2)
+                .unwrap());
+            assert_eq!(agg.n_updates(), 0);
+            assert!(agg
+                .push_versioned(ups[1].trainable.clone(), &ups[1].config,
+                                1.0, 7)
+                .unwrap());
+            assert_eq!(agg.n_updates(), 1);
+            agg.finish(&mut got).unwrap();
+            assert_eq!(got, want, "{shards} shards: stale fold leaked");
         }
     }
 

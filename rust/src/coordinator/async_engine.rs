@@ -1,0 +1,656 @@
+//! # AsyncEngine — staleness-windowed, event-driven rounds
+//!
+//! The eq. 12 barrier (and its semi-sync `DeadlineDrop` relaxation)
+//! forces every surviving device to synchronize once per round: the
+//! round lasts `max_i t_i` and fast devices idle for eq. 13's waiting
+//! time. This engine removes the barrier. Each device runs on its own
+//! cadence under the [`VirtualClock`]: it pulls the current global
+//! model, trains for its true eq. 12 duration, and *submits its update
+//! whenever it finishes* — the coordinator folds it immediately with a
+//! staleness weight
+//!
+//! ```text
+//!     w(τ) = 1 / (1 + τ)^α        (τ = model versions elapsed
+//!                                  between pull and fold)
+//! ```
+//!
+//! applied on top of the eq. 17 fold weight, in the spirit of
+//! FedAsync/FedBuff-style semi-asynchronous aggregation.
+//!
+//! `w(τ)` is a *relative* weight inside the eq. 17 weighted mean, not
+//! an anchored server learning rate: when fresh and stale updates
+//! share a window (or a slot), stale ones count proportionally less;
+//! a slot reached by a single lone update still takes that update's
+//! value, exactly as eq. 17 gives a layer held by one device to that
+//! device. This is deliberate — FedAsync's `(1−η)·global + η·update`
+//! blending would change the S = 0 limit away from eq. 17 and break
+//! the bitwise degeneracy to the synchronous engine; the hard
+//! protection against very stale updates is the `max_staleness`
+//! cutoff itself, not the discount.
+//!
+//! ## Commit windows and the staleness cutoff
+//!
+//! Global model versions are committed in *windows* (one per
+//! `FedConfig::rounds` entry, so `RunRecord` keeps its shape). Window
+//! `h` dispatches the idle members of the sampled cohort against model
+//! version `h − 1`, then closes at the earliest virtual time that
+//! satisfies the staleness cutoff `S = max_staleness`:
+//!
+//! * every in-flight update dispatched at window `g ≤ h − S` has
+//!   landed (so no fold can ever exceed staleness `S` — the cutoff is
+//!   enforced by the commit rule, and double-checked by the
+//!   aggregator's version watermark), and
+//! * at least one update lands per window (progress guarantee).
+//!
+//! Updates completing before the close fold into version `h` with
+//! `τ = h − g`; the rest stay queued — a slow device's training simply
+//! spans several windows while the fleet keeps committing.
+//!
+//! `S = 0` forces every window to wait for all of its own dispatches:
+//! the event loop degenerates to the synchronous barrier, and a fixed
+//! seed reproduces [`super::engine::RoundEngine`]'s `RunRecord`
+//! *bitwise* (the property suite uses the sync engine as the oracle).
+//!
+//! ## Determinism contract
+//!
+//! Event order is total: completions are keyed by
+//! `(completion_time, device_id)` under `f64::total_cmp`
+//! ([`EventKey`]), so ties on the virtual clock break by device id,
+//! never by arrival on a wall-clock thread. All RNG draws (data,
+//! fleet observation, participation) happen on the coordinator thread
+//! in a fixed order, phase-④ outcomes are pure per-device functions
+//! collected by job index, and within a window the folds and the
+//! timing/loss reductions all run in ascending device order (the sync
+//! sink's order) — so a fixed seed yields a bit-identical
+//! [`RunRecord`] at every `threads × agg_shards × window` setting,
+//! and the S = 0 degeneracy holds for the aggregated model itself,
+//! not merely the mock-trained record.
+//!
+//! ## Memory
+//!
+//! An update that is virtually in flight must be physically buffered
+//! until its completion event fires: transient memory is
+//! O(model + in-flight updates), bounded by the fleet size (each
+//! device holds at most one in-flight update). Within a window the
+//! fold itself stays streaming (O(model) via the sharded aggregator).
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::data::Spec;
+use crate::device::profile::calib;
+use crate::device::Fleet;
+use crate::metrics::{RoundRecord, RunRecord};
+use crate::model::masks::LoraConfig;
+use crate::model::state::TensorMap;
+use crate::runtime::Masks;
+use crate::sim::clock::{timing_from_pairs, VirtualClock};
+use crate::util::rng::Rng;
+
+use super::aggregation::ShardedAggregator;
+use super::capacity::CapacityEstimator;
+use super::engine::{admitted_cohort, device_round, round_data, sanitize,
+                    ExecOpts, TrainJob};
+use super::participation::Participation;
+use super::server::{cosine_lr, FedConfig, ModelMeta};
+use super::strategy::{Strategy, StrategyCtx};
+use super::trainer::{LocalOutcome, Trainer};
+use super::transport::Transport;
+
+/// Staleness-discount weight `w(τ) = 1/(1+τ)^α`, clamped to 0 beyond
+/// the `max_staleness` cutoff. Exactly 1.0 at `τ = 0` (so a fresh fold
+/// is bit-identical to an unweighted one) and monotone non-increasing
+/// in `τ` for any `α ≥ 0` (negative `α` is treated as 0).
+pub fn staleness_weight(tau: usize, max_staleness: usize, alpha: f64)
+                        -> f64 {
+    if tau == 0 {
+        return 1.0;
+    }
+    if tau > max_staleness {
+        return 0.0;
+    }
+    (1.0 + tau as f64).powf(-alpha.max(0.0))
+}
+
+/// Deterministic event ordering: earliest virtual completion first,
+/// device id breaking ties. Total order via [`f64::total_cmp`], so the
+/// queue never depends on wall-clock scheduling.
+#[derive(Debug, Clone, Copy)]
+pub struct EventKey {
+    pub time: f64,
+    pub device_id: usize,
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == CmpOrdering::Equal
+    }
+}
+
+impl Eq for EventKey {}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.device_id.cmp(&other.device_id))
+    }
+}
+
+struct Entry<T> {
+    key: EventKey,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Min-queue of virtual-clock events ordered by [`EventKey`]. The pop
+/// sequence is a pure function of the key set: pushing the same events
+/// in any order yields the same pops (the order-invariance the async
+/// fold leans on; see the property suite).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<std::cmp::Reverse<Entry<T>>>,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, key: EventKey, item: T) {
+        self.heap.push(std::cmp::Reverse(Entry { key, item }));
+    }
+
+    /// Key of the earliest pending event.
+    pub fn peek_key(&self) -> Option<EventKey> {
+        self.heap.peek().map(|std::cmp::Reverse(e)| e.key)
+    }
+
+    /// Pop the earliest pending event.
+    pub fn pop(&mut self) -> Option<(EventKey, T)> {
+        self.heap.pop().map(|std::cmp::Reverse(e)| (e.key, e.item))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Unordered iteration over pending events (used to compute the
+    /// must-fold deadline; never for fold order).
+    pub fn iter(&self) -> impl Iterator<Item = (&EventKey, &T)> {
+        self.heap.iter().map(|std::cmp::Reverse(e)| (&e.key, &e.item))
+    }
+}
+
+/// One virtually in-flight update: everything the coordinator needs to
+/// fold it when its completion event fires.
+struct InFlight {
+    /// Commit window the device was dispatched in (it trained on model
+    /// version `gen − 1`).
+    gen: usize,
+    /// True eq. 12 duration [virtual s], fixed at dispatch.
+    duration: f64,
+    outcome: LocalOutcome,
+    config: LoraConfig,
+}
+
+/// The staleness-windowed round-loop engine. Owns nothing across runs.
+pub struct AsyncEngine<'a> {
+    cfg: &'a FedConfig,
+    meta: &'a ModelMeta,
+}
+
+impl<'a> AsyncEngine<'a> {
+    pub fn new(cfg: &'a FedConfig, meta: &'a ModelMeta) -> Self {
+        AsyncEngine { cfg, meta }
+    }
+
+    /// Run one full federated fine-tuning experiment asynchronously.
+    pub fn run(&self, fleet: &mut Fleet, strategy: &mut dyn Strategy,
+               trainer: &mut dyn Trainer, spec: &Spec,
+               mut global: TensorMap,
+               participation: &mut dyn Participation)
+               -> Result<RunRecord> {
+        let cfg = self.cfg;
+        let meta = self.meta;
+        let n = fleet.len();
+        let family = trainer.family();
+        let rank_dim = meta.rank_dim(family);
+        let unit_bytes = meta.unit_bytes(family);
+        let alpha = cfg.staleness_alpha;
+        let s_max = cfg.max_staleness;
+
+        // ---- data (one pipeline, shared with the sync engine) -------------
+        let batch = trainer.batch_size();
+        let (test, shards) = round_data(cfg, spec, n, batch)?;
+
+        // ---- state --------------------------------------------------------
+        let mut estimator = CapacityEstimator::paper(n);
+        let transport = Transport::new();
+        let mut clock = VirtualClock::new();
+        let mut record = RunRecord::new(&strategy.name(), &cfg.task);
+        let mut part_rng = Rng::new(cfg.seed).child("participation");
+        let mut last_losses = vec![0f64; n];
+        let mut loss_rounds = vec![0usize; n];
+        let mut last_round_time = 0f64;
+        let mut last_acc = 0f64;
+        let mut last_test_loss = 0f64;
+        // Async state: which devices are off training, the event queue
+        // of their completions, and the most recent plan's eval mask
+        // (a window that dispatches nothing still needs one).
+        let mut busy = vec![false; n];
+        let mut pending: EventQueue<InFlight> = EventQueue::new();
+        let mut eval_config: Option<LoraConfig> = None;
+
+        for h in 1..=cfg.rounds {
+            if h > 1 {
+                fleet.advance_round();
+            }
+            transport.begin_round(h);
+            let start = clock.elapsed;
+
+            // ①a cohort sampling among *idle* devices: a device still
+            // training cannot report status or accept an assignment.
+            // With S = 0 everyone is idle at a window start, so the
+            // draw and the filter match the sync engine exactly.
+            let sampled =
+                sanitize(participation.sample(h, n, &mut part_rng), n)
+                    .unwrap_or_else(|| vec![0]);
+            let cohort: Vec<usize> =
+                sampled.into_iter().filter(|&i| !busy[i]).collect();
+
+            let mut dropped = 0usize;
+            if !cohort.is_empty() {
+                // NOTE: phases ①b–④ below mirror `RoundEngine::run`
+                // line for line (the shareable pieces — data pipeline,
+                // admission, eq. 12 inputs — already live in
+                // `engine.rs` helpers). Edit both engines together:
+                // the S = 0 oracle property test fails on any drift.
+                // ①b status reports → capacity estimation (eq. 8–9).
+                for &i in &cohort {
+                    let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
+                    transport.recv_status(i);
+                    estimator.update(i, mu_hat, beta_hat);
+                }
+                let estimates: Vec<_> = cohort
+                    .iter()
+                    .map(|&i| estimator.get(i).expect("cohort reported"))
+                    .collect();
+                let n_batches: Vec<usize> = cohort
+                    .iter()
+                    .map(|&i| {
+                        shards[i].len().div_ceil(batch).min(cfg.max_batches)
+                    })
+                    .collect();
+
+                // ② LoRA configuration (§4.4) over the cohort.
+                let fwd_times: Vec<f64> = estimates
+                    .iter()
+                    .map(|c| calib::FWD_FRAC * c.mu * meta.n_layers as f64)
+                    .collect();
+                let ctx = StrategyCtx {
+                    round: h,
+                    n_layers: meta.n_layers,
+                    rank_dim,
+                    fwd_times: fwd_times.clone(),
+                    estimates: estimates.clone(),
+                    n_batches: n_batches.clone(),
+                    unit_rank_bytes: unit_bytes,
+                    compute_budgets: vec![f64::MAX; cohort.len()],
+                    comm_budgets: vec![usize::MAX; cohort.len()],
+                    last_losses: cohort
+                        .iter()
+                        .map(|&i| {
+                            if loss_rounds[i] + 1 == h {
+                                last_losses[i]
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect(),
+                    last_round_time,
+                    device_ids: cohort.clone(),
+                    staleness: cohort
+                        .iter()
+                        .map(|&i| {
+                            if loss_rounds[i] == 0 {
+                                usize::MAX
+                            } else {
+                                (h - 1).saturating_sub(loss_rounds[i])
+                            }
+                        })
+                        .collect(),
+                };
+                let plan = strategy.configure(&ctx);
+                debug_assert_eq!(plan.device_configs.len(), cohort.len());
+                eval_config = Some(plan.eval_config.clone());
+
+                // ①c deadline admission from PS-side estimates — same
+                // predictions and fallback as the sync engine.
+                let predicted: Vec<f64> = (0..cohort.len())
+                    .map(|j| {
+                        device_round(meta, unit_bytes, cohort[j],
+                                     estimates[j].mu, estimates[j].beta,
+                                     fwd_times[j],
+                                     &plan.device_configs[j],
+                                     n_batches[j])
+                            .completion_time()
+                    })
+                    .collect();
+                let admitted = admitted_cohort(participation, h, &cohort,
+                                               &predicted, n);
+                let admitted_pos: Vec<usize> = admitted
+                    .iter()
+                    .map(|i| cohort.binary_search(i).unwrap())
+                    .collect();
+                dropped = cohort.len() - admitted.len();
+
+                // ③ assignment + download accounting, ④ local training
+                // at dispatch (the outcome is a pure function of the
+                // model version pulled now; only its *fold* waits for
+                // the virtual completion event).
+                let lr = cosine_lr(cfg.lr0, h, cfg.rounds) as f32;
+                let mut outs: Vec<Option<LocalOutcome>> =
+                    (0..admitted_pos.len()).map(|_| None).collect();
+                {
+                    let jobs: Vec<TrainJob<'_>> = admitted_pos
+                        .iter()
+                        .map(|&j| {
+                            let i = cohort[j];
+                            let config = &plan.device_configs[j];
+                            transport.send_assignment(i, &global, config,
+                                                      meta.n_layers,
+                                                      rank_dim);
+                            TrainJob {
+                                device_id: i,
+                                init: &global,
+                                masks: Masks {
+                                    rank_mask: config
+                                        .rank_mask(meta.n_layers, rank_dim),
+                                    layer_mask: config
+                                        .layer_mask(meta.n_layers),
+                                },
+                                shard: &shards[i],
+                                lr,
+                                max_batches: cfg.max_batches,
+                            }
+                        })
+                        .collect();
+                    let opts = ExecOpts {
+                        threads: cfg.threads,
+                        window: cfg.window,
+                    };
+                    let outs_r = &mut outs;
+                    let mut sink =
+                        |k: usize, out: LocalOutcome| -> Result<()> {
+                            outs_r[k] = Some(out);
+                            Ok(())
+                        };
+                    trainer.train_cohort(&jobs, &opts, &mut sink)?;
+                }
+                // Schedule completion events at the true eq. 12 times.
+                for (k, &j) in admitted_pos.iter().enumerate() {
+                    let i = cohort[j];
+                    let d = &fleet.devices[i];
+                    let duration =
+                        device_round(meta, unit_bytes, i, d.true_mu(),
+                                     d.true_beta(unit_bytes),
+                                     d.compute.forward_time(meta.n_layers),
+                                     &plan.device_configs[j], n_batches[j])
+                            .completion_time();
+                    let outcome = outs[k]
+                        .take()
+                        .expect("trainer must deliver every outcome");
+                    pending.push(
+                        EventKey { time: start + duration, device_id: i },
+                        InFlight {
+                            gen: h,
+                            duration,
+                            outcome,
+                            config: plan.device_configs[j].clone(),
+                        },
+                    );
+                    busy[i] = true;
+                }
+            }
+
+            // Commit horizon: every update that would exceed the
+            // staleness cutoff S if it slipped past this window MUST
+            // fold now, and each window folds at least one update.
+            // With S = 0 the deadline is this window's own slowest
+            // dispatch — the synchronous barrier.
+            let must_deadline = pending
+                .iter()
+                .filter(|(_, f)| f.gen.saturating_add(s_max) <= h)
+                .map(|(k, _)| k.time)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let t_commit = if must_deadline > f64::NEG_INFINITY {
+                must_deadline
+            } else if let Some(k) = pending.peek_key() {
+                k.time
+            } else {
+                start
+            };
+
+            // ⑤ drain everything landing by the horizon in
+            // deterministic (time, device_id) event order — event
+            // order decides *window membership* — then fold within
+            // the window in ascending device order. That is exactly
+            // the order the sync engine's sink folds in, so at S = 0
+            // the aggregated model itself (not just the record) is
+            // bitwise sync-identical for any trainer; the updates
+            // were already buffered as in-flight events, so this
+            // costs no extra memory.
+            let mut drained: Vec<(EventKey, InFlight)> = Vec::new();
+            while pending
+                .peek_key()
+                .is_some_and(|k| k.time <= t_commit)
+            {
+                drained.push(pending.pop().unwrap());
+            }
+            drained.sort_by_key(|(k, _)| k.device_id);
+            // Async windows often fold a single update (the commit
+            // rule closes at the earliest completion when nothing is
+            // overdue); spawning shard worker threads for that would
+            // cost more than the fold. Shard count never affects the
+            // result bitwise (property-tested), so fold tiny windows
+            // inline.
+            let shard_cap = if cfg.window > 0 { cfg.window } else { 8 };
+            let eff_shards =
+                if drained.len() <= 1 { 1 } else { cfg.agg_shards };
+            let mut agg = ShardedAggregator::new(
+                &global, meta.n_layers, rank_dim, eff_shards, shard_cap,
+            );
+            agg.set_watermark(h.saturating_sub(s_max));
+            // (device, completion relative to this window, loss, depth)
+            let mut folded: Vec<(usize, f64, f64, usize)> = Vec::new();
+            for (k, inf) in drained {
+                let i = k.device_id;
+                let tau = h - inf.gen;
+                let w = staleness_weight(tau, s_max, alpha);
+                transport.recv_update(i, &inf.outcome.trainable,
+                                      &inf.config, meta.n_layers,
+                                      rank_dim);
+                last_losses[i] = inf.outcome.mean_loss;
+                loss_rounds[i] = h;
+                // Same-window folds keep their exact duration (the
+                // sync-oracle path); spillovers are measured against
+                // this window's start.
+                let rel = if inf.gen == h {
+                    inf.duration
+                } else {
+                    (k.time - start).max(0.0)
+                };
+                folded.push((i, rel, inf.outcome.mean_loss,
+                             inf.config.depth(meta.n_layers)));
+                let accepted = agg.push_versioned(inf.outcome.trainable,
+                                                  &inf.config, w,
+                                                  inf.gen)?;
+                debug_assert!(accepted,
+                              "commit rule violated the watermark");
+                busy[i] = false;
+            }
+            let tally = transport.round_tally();
+            agg.finish(&mut global)?;
+
+            // ⑥ timing + loss reductions — `folded` is already in
+            // ascending device order, so the arithmetic (and thus the
+            // record) is bit-stable and matches the sync engine when
+            // S = 0.
+            let timing = timing_from_pairs(
+                folded.iter().map(|&(id, rel, _, _)| (id, rel)).collect(),
+            );
+            clock.advance(&timing);
+            last_round_time = timing.round_time;
+            let mut loss_sum = 0f64;
+            for &(_, _, loss, _) in &folded {
+                loss_sum += loss;
+            }
+            let mean_depth = folded
+                .iter()
+                .map(|&(_, _, _, depth)| depth as f64)
+                .sum::<f64>()
+                / folded.len().max(1) as f64;
+
+            // Evaluation of the aggregated global model.
+            if h % cfg.eval_every == 0 || h == cfg.rounds {
+                if let Some(ec) = &eval_config {
+                    let eval_masks = Masks {
+                        rank_mask: ec.rank_mask(meta.n_layers, rank_dim),
+                        layer_mask: ec.layer_mask(meta.n_layers),
+                    };
+                    let (tl, ta) =
+                        trainer.evaluate(&global, &eval_masks, &test)?;
+                    last_acc = ta;
+                    last_test_loss = tl;
+                }
+            }
+
+            record.rounds.push(RoundRecord {
+                round: h,
+                sim_time: clock.elapsed,
+                round_time: timing.round_time,
+                avg_waiting: timing.avg_waiting,
+                up_bytes: tally.uplink,
+                down_bytes: tally.downlink,
+                train_loss: loss_sum / folded.len().max(1) as f64,
+                test_acc: last_acc,
+                test_loss: last_test_loss,
+                mean_depth,
+                participants: folded.len(),
+                dropped,
+            });
+            if cfg.verbose {
+                println!(
+                    "[{}/{}] {} async(α={}, S={}) t={:.0}s acc={:.3} \
+                     loss={:.3} folded={} in-flight={}",
+                    h,
+                    cfg.rounds,
+                    strategy.name(),
+                    alpha,
+                    s_max,
+                    clock.elapsed,
+                    last_acc,
+                    loss_sum / folded.len().max(1) as f64,
+                    folded.len(),
+                    pending.len(),
+                );
+            }
+        }
+        // Updates still in flight when the run ends are discarded —
+        // the experiment is over and there is no later version to fold
+        // them into.
+        Ok(record)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_weight_fresh_is_exactly_one() {
+        assert_eq!(staleness_weight(0, 0, 0.5).to_bits(),
+                   1.0f64.to_bits());
+        assert_eq!(staleness_weight(0, 10, 3.0).to_bits(),
+                   1.0f64.to_bits());
+    }
+
+    #[test]
+    fn staleness_weight_clamps_beyond_cutoff() {
+        assert_eq!(staleness_weight(1, 0, 0.5), 0.0);
+        assert_eq!(staleness_weight(3, 2, 0.5), 0.0);
+        assert!(staleness_weight(2, 2, 0.5) > 0.0);
+    }
+
+    #[test]
+    fn staleness_weight_matches_formula() {
+        let w = staleness_weight(3, 8, 2.0);
+        assert!((w - 1.0 / 16.0).abs() < 1e-12);
+        // α = 0: no discount inside the cutoff.
+        assert_eq!(staleness_weight(5, 8, 0.0), 1.0);
+        // Negative α is clamped to 0, never an amplifier.
+        assert_eq!(staleness_weight(5, 8, -2.0), 1.0);
+    }
+
+    #[test]
+    fn event_key_orders_by_time_then_id() {
+        let a = EventKey { time: 1.0, device_id: 9 };
+        let b = EventKey { time: 2.0, device_id: 0 };
+        let c = EventKey { time: 1.0, device_id: 3 };
+        assert!(a < b, "earlier time wins");
+        assert!(c < a, "tie broken by device id");
+        assert_eq!(a, EventKey { time: 1.0, device_id: 9 });
+    }
+
+    #[test]
+    fn event_queue_pops_in_key_order() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(EventKey { time: 2.0, device_id: 1 }, "late");
+        q.push(EventKey { time: 1.0, device_id: 7 }, "tie-b");
+        q.push(EventKey { time: 1.0, device_id: 2 }, "tie-a");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_key().unwrap().device_id, 2);
+        assert_eq!(q.pop().unwrap().1, "tie-a");
+        assert_eq!(q.pop().unwrap().1, "tie-b");
+        assert_eq!(q.pop().unwrap().1, "late");
+        assert!(q.pop().is_none());
+    }
+}

@@ -304,21 +304,8 @@ impl<'a> RoundEngine<'a> {
         let unit_bytes = meta.unit_bytes(family);
 
         // ---- data ---------------------------------------------------------
-        let mut data_rng = Rng::new(cfg.seed).child("data");
-        let task = spec.task(&cfg.task)?.clone();
-        let train =
-            grammar::generate(spec, &cfg.task, cfg.train_size, &mut data_rng)?;
-        let test_size = (cfg.test_size / 64).max(1) * 64;
-        let test =
-            grammar::generate(spec, &cfg.task, test_size, &mut data_rng)?;
-        let how = if cfg.alpha > 0.0 {
-            partition::Partition::Dirichlet { alpha: cfg.alpha }
-        } else {
-            partition::Partition::Iid
-        };
         let batch = trainer.batch_size();
-        let shards = partition::split(&train, n, how, task.n_classes,
-                                      batch, &mut data_rng);
+        let (test, shards) = round_data(cfg, spec, n, batch)?;
 
         // ---- state --------------------------------------------------------
         let mut estimator = CapacityEstimator::paper(n);
@@ -399,6 +386,19 @@ impl<'a> RoundEngine<'a> {
                     .collect(),
                 last_round_time,
                 device_ids: cohort.clone(),
+                staleness: cohort
+                    .iter()
+                    .map(|&i| {
+                        // Rounds since the device's loss was recorded:
+                        // 0 = fresh (immediately previous round),
+                        // usize::MAX = never trained.
+                        if loss_rounds[i] == 0 {
+                            usize::MAX
+                        } else {
+                            (h - 1).saturating_sub(loss_rounds[i])
+                        }
+                    })
+                    .collect(),
             };
             let plan = strategy.configure(&ctx);
             debug_assert_eq!(plan.device_configs.len(), cohort.len());
@@ -417,35 +417,8 @@ impl<'a> RoundEngine<'a> {
                         .completion_time()
                 })
                 .collect();
-            let admitted = {
-                let a = sanitize(
-                    participation.admit(h, &cohort, &predicted),
-                    n,
-                );
-                match a {
-                    Some(a)
-                        if a.iter()
-                            .all(|i| cohort.binary_search(i).is_ok()) =>
-                    {
-                        a
-                    }
-                    // A policy that admits nobody (or out-of-cohort
-                    // ids) still gets a well-formed round: keep the
-                    // single fastest-predicted device — honoring the
-                    // drop intent — rather than silently reverting to
-                    // full participation (eq. 12/13 need ≥ 1
-                    // participant).
-                    _ => {
-                        let j_min = predicted
-                            .iter()
-                            .enumerate()
-                            .min_by(|a, b| a.1.total_cmp(b.1))
-                            .map(|(j, _)| j)
-                            .unwrap_or(0);
-                        vec![cohort[j_min]]
-                    }
-                }
-            };
+            let admitted =
+                admitted_cohort(participation, h, &cohort, &predicted, n);
             // Cohort positions of the admitted devices.
             let admitted_pos: Vec<usize> = admitted
                 .iter()
@@ -598,11 +571,13 @@ impl<'a> RoundEngine<'a> {
 
 /// Eq. 12 inputs for one device. Shared by deadline admission (fed
 /// with PS-side *estimates*) and phase ⑥ timing (fed with TRUE device
-/// parameters) so the two can never drift apart.
+/// parameters) so the two can never drift apart. `pub(crate)` because
+/// the async engine builds the identical prediction/timing inputs.
 #[allow(clippy::too_many_arguments)]
-fn device_round(meta: &ModelMeta, unit_bytes: usize, device_id: usize,
-                mu: f64, beta: f64, fwd_time_per_batch: f64,
-                config: &LoraConfig, n_batches: usize) -> DeviceRound {
+pub(crate) fn device_round(meta: &ModelMeta, unit_bytes: usize,
+                           device_id: usize, mu: f64, beta: f64,
+                           fwd_time_per_batch: f64, config: &LoraConfig,
+                           n_batches: usize) -> DeviceRound {
     DeviceRound {
         device_id,
         fwd_time_per_batch,
@@ -616,8 +591,63 @@ fn device_round(meta: &ModelMeta, unit_bytes: usize, device_id: usize,
     }
 }
 
+/// Phase-⓪ data pipeline shared by both engines: generate the train
+/// and test sets and the per-device non-iid shards from the run
+/// seed's "data" RNG stream. Same seed ⇒ same shards regardless of
+/// the round discipline — the async engine's sync-degeneracy oracle
+/// depends on both engines consuming this stream identically, so it
+/// lives in exactly one place.
+pub(crate) fn round_data(cfg: &FedConfig, spec: &Spec, n: usize,
+                         batch: usize)
+                         -> Result<(Dataset, Vec<Dataset>)> {
+    let mut data_rng = Rng::new(cfg.seed).child("data");
+    let task = spec.task(&cfg.task)?.clone();
+    let train =
+        grammar::generate(spec, &cfg.task, cfg.train_size, &mut data_rng)?;
+    let test_size = (cfg.test_size / 64).max(1) * 64;
+    let test =
+        grammar::generate(spec, &cfg.task, test_size, &mut data_rng)?;
+    let how = if cfg.alpha > 0.0 {
+        partition::Partition::Dirichlet { alpha: cfg.alpha }
+    } else {
+        partition::Partition::Iid
+    };
+    let shards = partition::split(&train, n, how, task.n_classes, batch,
+                                  &mut data_rng);
+    Ok((test, shards))
+}
+
+/// ①c deadline admission with the well-formed-round fallback, shared
+/// by both engines. A policy that admits nobody (or out-of-cohort ids)
+/// still gets a well-formed round: keep the single fastest-predicted
+/// device — honoring the drop intent — rather than silently reverting
+/// to full participation (eq. 12/13 need ≥ 1 participant).
+pub(crate) fn admitted_cohort(participation: &mut dyn Participation,
+                              h: usize, cohort: &[usize],
+                              predicted: &[f64], n: usize)
+                              -> Vec<usize> {
+    let a = sanitize(participation.admit(h, cohort, predicted), n);
+    match a {
+        Some(a)
+            if a.iter().all(|i| cohort.binary_search(i).is_ok()) =>
+        {
+            a
+        }
+        _ => {
+            let j_min = predicted
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            vec![cohort[j_min]]
+        }
+    }
+}
+
 /// Sorted, deduped, in-range, non-empty — or None.
-fn sanitize(mut ids: Vec<usize>, n: usize) -> Option<Vec<usize>> {
+pub(crate) fn sanitize(mut ids: Vec<usize>, n: usize)
+                       -> Option<Vec<usize>> {
     ids.retain(|&i| i < n);
     ids.sort_unstable();
     ids.dedup();

@@ -15,9 +15,13 @@
 //! * [`participation`] — cohort policies (full / uniform sampling /
 //!   straggler-deadline drop);
 //! * [`engine`] — the parallel, streaming round loop;
+//! * [`async_engine`] — the staleness-windowed, event-driven round
+//!   loop (devices fold across round boundaries with staleness
+//!   weights);
 //! * [`server`] — run configuration + the public entry points.
 
 pub mod aggregation;
+pub mod async_engine;
 pub mod capacity;
 pub mod engine;
 pub mod lcd;
@@ -28,5 +32,6 @@ pub mod strategy;
 pub mod transport;
 pub mod trainer;
 
+pub use async_engine::AsyncEngine;
 pub use engine::RoundEngine;
 pub use server::{run_federated, run_federated_with, FedConfig, ModelMeta};

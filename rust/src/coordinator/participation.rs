@@ -123,15 +123,26 @@ impl Participation for DeadlineDrop {
     }
 }
 
-/// Build a policy by name (CLI entry point).
+/// Build a policy by name (CLI entry point). A non-positive (or NaN)
+/// `deadline_factor` is rejected loudly: `DeadlineDrop` with factor
+/// ≤ 0 would set every deadline to ≤ 0 and silently degrade to
+/// "min_keep fastest devices", which is never what the caller asked
+/// for.
 pub fn by_name(name: &str, sample_frac: f64, deadline_factor: f64)
-               -> Option<Box<dyn Participation>> {
-    Some(match name {
-        "full" => Box::new(Full),
-        "sample" => Box::new(UniformSample { fraction: sample_frac }),
-        "deadline" => Box::new(DeadlineDrop::new(deadline_factor)),
-        _ => return None,
-    })
+               -> Result<Box<dyn Participation>, String> {
+    match name {
+        "full" => Ok(Box::new(Full)),
+        "sample" => Ok(Box::new(UniformSample { fraction: sample_frac })),
+        "deadline" => {
+            if !(deadline_factor > 0.0) {
+                return Err(format!(
+                    "deadline factor must be > 0, got {deadline_factor}"
+                ));
+            }
+            Ok(Box::new(DeadlineDrop::new(deadline_factor)))
+        }
+        other => Err(format!("unknown participation policy {other:?}")),
+    }
 }
 
 #[cfg(test)]
@@ -188,8 +199,22 @@ mod tests {
     #[test]
     fn by_name_covers_policies() {
         for n in ["full", "sample", "deadline"] {
-            assert!(by_name(n, 0.3, 1.5).is_some(), "{n}");
+            assert!(by_name(n, 0.3, 1.5).is_ok(), "{n}");
         }
-        assert!(by_name("nope", 0.3, 1.5).is_none());
+        assert!(by_name("nope", 0.3, 1.5).is_err());
+    }
+
+    #[test]
+    fn by_name_rejects_nonpositive_deadline_factor() {
+        for bad in [0.0, -1.0, f64::NAN] {
+            let e = by_name("deadline", 0.3, bad)
+                .map(|_| ())
+                .expect_err("factor must be rejected");
+            assert!(e.contains("deadline factor"), "{e}");
+        }
+        // Other policies ignore the factor entirely — a bogus value
+        // must not poison them.
+        assert!(by_name("full", 0.3, 0.0).is_ok());
+        assert!(by_name("sample", 0.3, -2.0).is_ok());
     }
 }

@@ -23,6 +23,7 @@ use crate::metrics::RunRecord;
 use crate::model::state::TensorMap;
 use crate::model::Manifest;
 
+use super::async_engine::AsyncEngine;
 use super::engine::RoundEngine;
 use super::participation::{Full, Participation};
 use super::strategy::Strategy;
@@ -61,6 +62,20 @@ pub struct FedConfig {
     /// per-round transient memory is O(model + W) instead of
     /// cohort-bounded under skew. Bit-identical at every setting.
     pub window: usize,
+    /// Run the staleness-windowed async engine
+    /// (`coordinator/async_engine.rs`) instead of the eq. 12 barrier
+    /// loop: devices run on their own cadence and fold whenever they
+    /// finish, weighted by `1/(1+τ)^staleness_alpha`. With
+    /// `max_staleness = 0` the async engine degenerates bitwise to the
+    /// synchronous [`super::engine::RoundEngine`].
+    pub async_mode: bool,
+    /// Staleness-discount exponent α ≥ 0 for the async fold weight
+    /// `w(τ) = 1/(1+τ)^α` (0 = no discount).
+    pub staleness_alpha: f64,
+    /// Hard staleness cutoff S: a commit window never closes while an
+    /// update that would exceed S versions of staleness is still in
+    /// flight, so every fold has τ ≤ S. 0 = synchronous barrier.
+    pub max_staleness: usize,
     pub verbose: bool,
 }
 
@@ -80,6 +95,9 @@ impl Default for FedConfig {
             threads: 0,
             agg_shards: 1,
             window: 0,
+            async_mode: false,
+            staleness_alpha: 0.5,
+            max_staleness: 2,
             verbose: false,
         }
     }
@@ -163,8 +181,13 @@ pub fn run_federated_with(cfg: &FedConfig, fleet: &mut Fleet,
                           spec: &Spec, global: TensorMap,
                           participation: &mut dyn Participation)
                           -> Result<RunRecord> {
-    RoundEngine::new(cfg, meta)
-        .run(fleet, strategy, trainer, spec, global, participation)
+    if cfg.async_mode {
+        AsyncEngine::new(cfg, meta)
+            .run(fleet, strategy, trainer, spec, global, participation)
+    } else {
+        RoundEngine::new(cfg, meta)
+            .run(fleet, strategy, trainer, spec, global, participation)
+    }
 }
 
 #[cfg(test)]

@@ -47,6 +47,15 @@ pub struct StrategyCtx {
     /// [`crate::coordinator::participation::Participation`] policy
     /// hands strategies only the sampled cohort.
     pub device_ids: Vec<usize>,
+    /// Rounds elapsed since each device's loss in `last_losses` was
+    /// recorded: 0 = fresh (the immediately previous round, the only
+    /// case where `last_losses` is non-zero in the sync engine),
+    /// `usize::MAX` = the device has never folded an update. The async
+    /// engine surfaces intermediate values for devices whose training
+    /// spans commit windows, so search-based strategies (FedAdapter)
+    /// can discount stale feedback instead of folding it at face
+    /// value.
+    pub staleness: Vec<usize>,
 }
 
 impl StrategyCtx {
@@ -307,6 +316,19 @@ impl FedAdapter {
             if round + 1 != ctx.round {
                 continue;
             }
+            // A stale loss (the device's last fold is older than one
+            // round — possible under the async engine, where training
+            // spans commit windows) measured a global model that the
+            // candidate never saw; folding it would credit/blame the
+            // wrong configuration. Today both engines also surface a
+            // stale loss as 0 (caught below), so this gate is
+            // defense-in-depth: it states the freshness contract
+            // explicitly instead of leaning on the 0.0 sentinel, and
+            // keeps the feedback correct for any future engine that
+            // surfaces real stale losses alongside `staleness`.
+            if ctx.staleness.get(j).copied().unwrap_or(usize::MAX) != 0 {
+                continue;
+            }
             let loss_out = ctx.last_losses[j];
             // 0 is "no fresh loss": the device was deadline-dropped
             // last round (never trained under the candidate), or it
@@ -528,6 +550,7 @@ mod tests {
             last_losses: vec![0.0; n],
             last_round_time: 0.0,
             device_ids: (0..n).collect(),
+            staleness: vec![0; n],
         }
     }
 
@@ -663,6 +686,30 @@ mod tests {
         let before = s.scores.clone();
         let _ = s.configure(&c);
         assert_eq!(s.scores, before, "no phantom folds");
+    }
+
+    #[test]
+    fn fedadapter_discounts_stale_losses_via_ctx_staleness() {
+        // Contract test for the staleness gate itself (both current
+        // engines zero stale losses before they get here, so this
+        // hand-builds the state a future engine could surface): a
+        // device re-enters the cohort with a non-zero loss whose fold
+        // is 2 windows old. The staleness field must gate the
+        // feedback even though the loss value itself looks fresh.
+        let mut s = FedAdapter::paper(12, 32);
+        let mut c = ctx(&[0.01; 2]);
+        c.round = 4;
+        c.device_ids = vec![0, 1];
+        c.last_losses = vec![0.7, 0.6];
+        c.staleness = vec![2, 0];
+        s.assigned = BTreeMap::from([
+            (0, (0, 1.0, 3)),
+            (1, (1, 1.0, 3)),
+        ]);
+        let _ = s.configure(&c);
+        assert_eq!(s.scores[0], (0.0, 0), "stale device 0 must not fold");
+        assert_eq!(s.scores[1].1, 1, "fresh device 1 folds");
+        assert!((s.scores[1].0 - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //!          --window W (0 = unbounded; bounds per-round transient
 //!          memory to O(model + W)). Results are bit-identical at
 //!          every threads × agg-shards × window setting.
+//!          Async rounds: --async switches to the staleness-windowed
+//!          engine (devices fold whenever they finish, weighted by
+//!          1/(1+τ)^α); --staleness-alpha A (α ≥ 0) and
+//!          --max-staleness S tune it. --async --max-staleness 0
+//!          reproduces the synchronous engine bitwise.
 //!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
 //!   fleet  describe the simulated 80-device testbed (Table 1)
 //!   data   describe the synthetic datasets (Table 2)
@@ -36,7 +41,7 @@ fn main() {
 
 fn fed_config_from(args: &Args) -> Result<FedConfig> {
     let d = FedConfig::default();
-    Ok(FedConfig {
+    let cfg = FedConfig {
         task: args.get_or("task", &d.task),
         rounds: args.get_parse("rounds", d.rounds)?,
         eval_every: args.get_parse("eval-every", d.eval_every)?,
@@ -50,8 +55,19 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         threads: args.get_parse("threads", d.threads)?,
         agg_shards: args.get_parse("agg-shards", d.agg_shards)?,
         window: args.get_parse("window", d.window)?,
+        async_mode: args.flag("async"),
+        staleness_alpha: args
+            .get_parse("staleness-alpha", d.staleness_alpha)?,
+        max_staleness: args.get_parse("max-staleness", d.max_staleness)?,
         verbose: !args.flag("quiet"),
-    })
+    };
+    if !cfg.staleness_alpha.is_finite() || cfg.staleness_alpha < 0.0 {
+        return Err(anyhow!(
+            "--staleness-alpha must be a finite value ≥ 0, got {}",
+            cfg.staleness_alpha
+        ));
+    }
+    Ok(cfg)
 }
 
 fn participation_from(args: &Args)
@@ -60,8 +76,7 @@ fn participation_from(args: &Args)
                                &["full", "sample", "deadline"])?;
     let frac = args.get_parse("sample-frac", 0.3f64)?;
     let factor = args.get_parse("deadline-factor", 1.5f64)?;
-    participation::by_name(&name, frac, factor)
-        .ok_or_else(|| anyhow!("unknown participation {name:?}"))
+    participation::by_name(&name, frac, factor).map_err(|e| anyhow!(e))
 }
 
 fn run() -> Result<()> {

@@ -35,22 +35,44 @@ impl DeviceRound {
 /// Result of simulating one round over all participants.
 #[derive(Debug, Clone)]
 pub struct RoundTiming {
-    /// t^h = max_i t_i^h.
+    /// t^h = max_i t_i^h (0 for an empty round).
     pub round_time: f64,
-    /// W^h = (1/n) Σ (t^h − t_i^h)  (eq. 13).
+    /// W^h = (1/n) Σ (t^h − t_i^h)  (eq. 13; 0 for an empty round).
     pub avg_waiting: f64,
-    /// Slowest device id (the straggler).
+    /// Slowest device id (the straggler); `usize::MAX` when the round
+    /// had no participants.
     pub straggler: usize,
     pub per_device: Vec<(usize, f64)>,
 }
 
-/// Compute eq. (12)/(13) over the round's participants.
+/// Compute eq. (12)/(13) over the round's participants. A zero-device
+/// round (possible in the async engine when a commit window closes
+/// before any update lands) yields a zero-time, zero-waiting record
+/// rather than panicking.
 pub fn simulate_round(devices: &[DeviceRound]) -> RoundTiming {
-    assert!(!devices.is_empty(), "round with no participants");
-    let per_device: Vec<(usize, f64)> = devices
-        .iter()
-        .map(|d| (d.device_id, d.completion_time()))
-        .collect();
+    timing_from_pairs(
+        devices
+            .iter()
+            .map(|d| (d.device_id, d.completion_time()))
+            .collect(),
+    )
+}
+
+/// Eq. (12)/(13) over precomputed `(device_id, completion_time)`
+/// pairs. The async engine feeds this directly — stale folds carry a
+/// completion time relative to the *current* commit window, which no
+/// [`DeviceRound`] can express — and `simulate_round` delegates here so
+/// the two engines share one timing arithmetic (same pair order ⇒
+/// bit-identical result).
+pub fn timing_from_pairs(per_device: Vec<(usize, f64)>) -> RoundTiming {
+    if per_device.is_empty() {
+        return RoundTiming {
+            round_time: 0.0,
+            avg_waiting: 0.0,
+            straggler: usize::MAX,
+            per_device,
+        };
+    }
     let (straggler, round_time) = per_device
         .iter()
         .cloned()
@@ -67,8 +89,15 @@ pub fn simulate_round(devices: &[DeviceRound]) -> RoundTiming {
 /// (`coordinator/participation.rs`): a round's deadline is
 /// `factor × median_completion(predicted)` over the cohort's eq. 12
 /// predictions. Thin wrapper over [`crate::util::stats::percentile`]
-/// so the crate keeps a single quantile implementation.
+/// so the crate keeps a single quantile implementation. An empty slice
+/// yields 0 (no cohort ⇒ no deadline) instead of panicking — defensive
+/// hardening: both engines run admission only on non-empty cohorts
+/// today, but a policy calling this on an empty prediction set should
+/// degrade gracefully, not abort the run.
 pub fn median_completion(times: &[f64]) -> f64 {
+    if times.is_empty() {
+        return 0.0;
+    }
     crate::util::stats::percentile(times, 50.0)
 }
 
@@ -166,6 +195,57 @@ mod tests {
         assert_eq!(median_completion(&xs), 3.0);
         assert_eq!(median_completion(&[7.0]), 7.0);
         assert_eq!(median_completion(&[1.0, 2.0]), 1.5);
+    }
+
+    #[test]
+    fn median_completion_edge_slices() {
+        // Empty: no cohort ⇒ no deadline (0), not a panic.
+        assert_eq!(median_completion(&[]), 0.0);
+        // Single element is its own median.
+        assert_eq!(median_completion(&[7.0]), 7.0);
+        // Even length interpolates the two middle elements.
+        assert_eq!(median_completion(&[4.0, 1.0]), 2.5);
+        assert_eq!(median_completion(&[1.0, 2.0, 3.0, 10.0]), 2.5);
+    }
+
+    #[test]
+    fn simulate_round_zero_devices_is_zero_time() {
+        let t = simulate_round(&[]);
+        assert_eq!(t.round_time, 0.0);
+        assert_eq!(t.avg_waiting, 0.0);
+        assert_eq!(t.straggler, usize::MAX);
+        assert!(t.per_device.is_empty());
+        // Advancing the clock over an empty round is a no-op in time
+        // but still counts the round (mean_waiting denominators).
+        let mut c = VirtualClock::new();
+        c.advance(&t);
+        assert_eq!(c.elapsed, 0.0);
+        assert_eq!(c.rounds, 1);
+    }
+
+    #[test]
+    fn mean_waiting_before_any_advance_is_zero() {
+        let c = VirtualClock::new();
+        assert_eq!(c.rounds, 0);
+        assert_eq!(c.mean_waiting(), 0.0);
+    }
+
+    #[test]
+    fn timing_from_pairs_matches_simulate_round() {
+        let devices = vec![
+            dr(0, 0.005, 2, vec![1, 2]),
+            dr(3, 0.010, 2, vec![1, 2]),
+        ];
+        let a = simulate_round(&devices);
+        let b = timing_from_pairs(
+            devices
+                .iter()
+                .map(|d| (d.device_id, d.completion_time()))
+                .collect(),
+        );
+        assert_eq!(a.round_time.to_bits(), b.round_time.to_bits());
+        assert_eq!(a.avg_waiting.to_bits(), b.avg_waiting.to_bits());
+        assert_eq!(a.straggler, b.straggler);
     }
 
     #[test]

@@ -199,6 +199,30 @@ mod tests {
     }
 
     #[test]
+    fn async_knobs_parse_and_default() {
+        // The `run` surface for the staleness-windowed async engine.
+        let a = parse(
+            "run --async --staleness-alpha 0.75 --max-staleness 3",
+        );
+        assert!(a.flag("async"));
+        assert_eq!(a.get_parse("staleness-alpha", 0.5f64).unwrap(), 0.75);
+        assert_eq!(a.get_parse("max-staleness", 2usize).unwrap(), 3);
+        assert!(a.reject_unknown().is_ok());
+        // Omitted: sync engine, default α/S.
+        let b = parse("run");
+        assert!(!b.flag("async"));
+        assert_eq!(b.get_parse("staleness-alpha", 0.5f64).unwrap(), 0.5);
+        assert_eq!(b.get_parse("max-staleness", 2usize).unwrap(), 2);
+        // Malformed values fail loudly, mirroring --window.
+        let c = parse("run --staleness-alpha banana");
+        assert!(c.get_parse("staleness-alpha", 0.5f64).is_err());
+        let d = parse("run --max-staleness=-1");
+        assert!(d.get_parse("max-staleness", 2usize).is_err());
+        let e = parse("run --max-staleness 1.5");
+        assert!(e.get_parse("max-staleness", 2usize).is_err());
+    }
+
+    #[test]
     fn choice_validates_against_set() {
         let a = parse("run --participation sample");
         let choices = ["full", "sample", "deadline"];
