@@ -23,11 +23,14 @@ use legend::coordinator::aggregation::{aggregate, DeviceUpdate,
 use legend::coordinator::capacity::CapacityEstimator;
 use legend::coordinator::engine::effective_threads;
 use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
+use legend::coordinator::participation::{Full, Participation,
+                                         UniformCount};
 use legend::coordinator::strategy::{self};
 use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
-use legend::coordinator::{run_federated, FedConfig, ModelMeta};
+use legend::coordinator::{run_federated, run_federated_with, FedConfig,
+                          ModelMeta};
 use legend::data::{grammar, partition, Spec};
-use legend::device::{Fleet, FleetConfig};
+use legend::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
 use legend::model::state::{init_opt, init_trainable, TensorMap};
 use legend::model::TensorSpec;
@@ -76,6 +79,22 @@ fn fmt_ns(ns: u64) -> String {
     } else {
         format!("{ns} ns")
     }
+}
+
+/// Peak resident set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`; 0 where procfs is unavailable). A process-wide
+/// high-water mark: monotone over the run, so comparisons must order
+/// the small case before the large one.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
 }
 
 fn toy_spec() -> Spec {
@@ -292,7 +311,10 @@ fn main() {
     // ---- engine: sequential vs parallel phase ④ ----------------------------
     // Full-size global tensors so each mock device does real memory
     // work; same seed at every thread count ⇒ identical RunRecords,
-    // only the wall-clock changes. Emits BENCH_engine.json.
+    // only the wall-clock changes. Engine cases accumulate their
+    // sections here and BENCH_engine.json is written once at the end,
+    // so a filtered run (e.g. `-- engine_lazy` in CI) still emits it.
+    let mut engine_doc: Vec<(&str, Value)> = Vec::new();
     if want("engine") {
         let engine_round = |n_dev: usize, threads: usize| -> f64 {
             let mut s = strategy::by_name("legend", L, R, 32).unwrap();
@@ -446,36 +468,107 @@ fn main() {
             64
         );
 
-        let threads_auto = effective_threads(0);
-        let doc = Value::obj(vec![
-            ("bench", Value::Str("engine_seq_vs_par".into())),
+        engine_doc.push(("fleets", Value::Arr(rows)));
+        engine_doc.push((
+            "fold",
+            Value::obj(vec![
+                ("devices", Value::Num(256.0)),
+                ("shards", Value::Num(shards as f64)),
+                ("single_ms", Value::Num(single_ms)),
+                ("sharded_ms", Value::Num(sharded_ms)),
+                ("speedup", Value::Num(fold_speedup)),
+            ]),
+        ));
+        engine_doc.push((
+            "async",
+            Value::obj(vec![
+                ("devices", Value::Num(64.0)),
+                ("rounds", Value::Num(2.0)),
+                ("max_staleness", Value::Num(2.0)),
+                ("staleness_alpha", Value::Num(0.5)),
+                ("barrier_ms", Value::Num(barrier_ms)),
+                ("async_ms", Value::Num(async_ms)),
+                ("barrier_virtual_s", Value::Num(barrier_vt)),
+                ("async_virtual_s", Value::Num(async_vt)),
+            ]),
+        ));
+    }
+
+    // ---- engine: lazy million-device fleet + edge tier ---------------------
+    // Peak-RSS comparison: a full 80-device eager round vs a
+    // 1,000,000-device lazy fleet sampling a 1,000-device cohort
+    // through the edge-aggregation tier. VmHWM is a process-wide
+    // high-water mark (monotone), so the eager case runs first and the
+    // lazy case can only read equal or higher; the acceptance bound is
+    // lazy ≤ 10× eager.
+    if want("engine_lazy") {
+        let scale_run = |fleet: &mut dyn FleetView,
+                         participation: &mut dyn Participation,
+                         cohort: usize,
+                         edges: usize|
+         -> f64 {
+            let mut s = strategy::by_name("legend", L, R, 32).unwrap();
+            let mut trainer = MockTrainer::new("lora");
+            let cfg = FedConfig {
+                rounds: 2,
+                train_size: 64 * cohort,
+                test_size: 64,
+                window: 16,
+                edge_aggregators: edges,
+                ..Default::default()
+            };
+            let global = TensorMap::zeros(&real_specs());
+            let t0 = Instant::now();
+            let _ = run_federated_with(&cfg, fleet, s.as_mut(),
+                                       &mut trainer, &meta, &spec,
+                                       global, participation)
+                .unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let mut eager = Fleet::new(FleetConfig::sized(80));
+        let eager_ms = scale_run(&mut eager, &mut Full, 80, 1);
+        let eager_rss = peak_rss_kb();
+        drop(eager);
+        let mut lazy = LazyFleet::new(FleetConfig::sized(1_000_000));
+        let lazy_ms = scale_run(&mut lazy,
+                                &mut UniformCount { count: 1_000 },
+                                1_000, 4);
+        let lazy_rss = peak_rss_kb();
+        let ratio = lazy_rss as f64 / eager_rss.max(1) as f64;
+        println!(
+            "{:<40} {:>9.1} ms {:>9.1} ms {:>8} KiB {:>6.2}×",
+            "engine_lazy_1m_fleet_1k_cohort",
+            eager_ms,
+            lazy_ms,
+            lazy_rss,
+            ratio
+        );
+        engine_doc.push((
+            "lazy",
+            Value::obj(vec![
+                ("eager_devices", Value::Num(80.0)),
+                ("lazy_devices", Value::Num(1_000_000.0)),
+                ("cohort", Value::Num(1_000.0)),
+                ("rounds", Value::Num(2.0)),
+                ("edge_aggregators", Value::Num(4.0)),
+                ("eager_round_ms", Value::Num(eager_ms)),
+                ("lazy_round_ms", Value::Num(lazy_ms)),
+                ("eager_peak_rss_kb", Value::Num(eager_rss as f64)),
+                ("lazy_peak_rss_kb", Value::Num(lazy_rss as f64)),
+                ("rss_ratio", Value::Num(ratio)),
+            ]),
+        ));
+    }
+
+    if !engine_doc.is_empty() {
+        let mut fields = vec![
+            ("bench", Value::Str("engine".into())),
             ("trainer", Value::Str("mock".into())),
-            ("threads_auto", Value::Num(threads_auto as f64)),
-            ("fleets", Value::Arr(rows)),
-            (
-                "fold",
-                Value::obj(vec![
-                    ("devices", Value::Num(256.0)),
-                    ("shards", Value::Num(shards as f64)),
-                    ("single_ms", Value::Num(single_ms)),
-                    ("sharded_ms", Value::Num(sharded_ms)),
-                    ("speedup", Value::Num(fold_speedup)),
-                ]),
-            ),
-            (
-                "async",
-                Value::obj(vec![
-                    ("devices", Value::Num(64.0)),
-                    ("rounds", Value::Num(2.0)),
-                    ("max_staleness", Value::Num(2.0)),
-                    ("staleness_alpha", Value::Num(0.5)),
-                    ("barrier_ms", Value::Num(barrier_ms)),
-                    ("async_ms", Value::Num(async_ms)),
-                    ("barrier_virtual_s", Value::Num(barrier_vt)),
-                    ("async_virtual_s", Value::Num(async_vt)),
-                ]),
-            ),
-        ]);
+            ("threads_auto",
+             Value::Num(effective_threads(0) as f64)),
+        ];
+        fields.append(&mut engine_doc);
+        let doc = Value::obj(fields);
         // The bench's CWD is the crate dir (rust/); BENCH_*.json files
         // belong at the workspace root where CI picks them up.
         let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

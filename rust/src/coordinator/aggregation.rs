@@ -27,8 +27,18 @@
 //!   coordinator core, and sharding splits it ~evenly by element
 //!   count.
 //!
-//! All three share [`fold_tensor`], the per-tensor inner loop, so the
-//! eq. 17 arithmetic literally cannot drift between them.
+//! On top of these, [`EdgeAggregator`] arranges `E` sharded folds as an
+//! edge tier — each edge owns a contiguous slice of the cohort's update
+//! stream — with a root merge in ascending edge-index order.
+//!
+//! All paths share [`fold_tensor`], the per-tensor inner loop, so the
+//! eq. 17 arithmetic literally cannot drift between them. The running
+//! sums accumulate in **64.60 fixed point** (`i128`, scale 2⁶⁰): each
+//! contribution is quantized once, and from there on every fold is an
+//! integer add — exactly associative — so *any* partition of the update
+//! stream (shards by tensor, edges by device) merges back to the same
+//! bits as the flat fold. Quantization error is ~2⁻⁶⁰ relative, far
+//! below the f32 output precision.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -97,16 +107,31 @@ fn classify(spec: &TensorSpec, n_layers: usize, rank_dim: usize)
     }
 }
 
+/// Fixed-point scale of the fold accumulators: 2⁶⁰. Headroom: f32
+/// magnitudes (< 3.4e38 but in practice O(1)) times 10⁵-device cohorts
+/// stay far inside i128's ±1.7e38 range at this scale.
+const FP_SCALE: f64 = (1u64 << 60) as f64;
+
+/// Quantize one f64 contribution to 64.60 fixed point. `as i128`
+/// saturates and maps NaN → 0, both deterministically.
+#[inline]
+fn quantize(v: f64) -> i128 {
+    (v * FP_SCALE).round() as i128
+}
+
 /// Fold one device's tensor `x` (under `mask`, scaled by `w`) into the
 /// running per-element sums. The single source of eq. 17 arithmetic
-/// shared by the buffered, streaming, and sharded aggregators.
+/// shared by the buffered, streaming, sharded, and edge aggregators.
+/// Each contribution is quantized once; the accumulation itself is
+/// integer, so it is exactly associative across any stream partition.
 fn fold_tensor(pat: Pattern, n_layers: usize, x: &[f32], mask: &[f32],
-               w: f64, acc: &mut [f64], wsum: &mut [f64]) {
+               w: f64, acc: &mut [i128], wsum: &mut [i128]) {
     match pat {
         Pattern::Full => {
+            let qw = quantize(w);
             for (e, &v) in x.iter().enumerate() {
-                acc[e] += w * v as f64;
-                wsum[e] += w;
+                acc[e] += quantize(w * v as f64);
+                wsum[e] += qw;
             }
         }
         Pattern::Rows { r, inner } => {
@@ -116,10 +141,11 @@ fn fold_tensor(pat: Pattern, n_layers: usize, x: &[f32], mask: &[f32],
                     if m == 0.0 {
                         continue;
                     }
+                    let qm = quantize(m);
                     let off = (l * r + j) * inner;
                     for e in off..off + inner {
-                        acc[e] += m * x[e] as f64;
-                        wsum[e] += m;
+                        acc[e] += quantize(m * x[e] as f64);
+                        wsum[e] += qm;
                     }
                 }
             }
@@ -131,11 +157,12 @@ fn fold_tensor(pat: Pattern, n_layers: usize, x: &[f32], mask: &[f32],
                     if m == 0.0 {
                         continue;
                     }
+                    let qm = quantize(m);
                     let base = l * inner * r + j;
                     for i in 0..inner {
                         let e = base + i * r;
-                        acc[e] += m * x[e] as f64;
-                        wsum[e] += m;
+                        acc[e] += quantize(m * x[e] as f64);
+                        wsum[e] += qm;
                     }
                 }
             }
@@ -161,8 +188,8 @@ pub fn aggregate(global: &mut TensorMap, updates: &[DeviceUpdate],
         let (spec, g) = &mut global.entries[ti];
         let pat = classify(spec, n_layers, rank_dim);
         let n = g.len();
-        let mut acc = vec![0f64; n];
-        let mut wsum = vec![0f64; n];
+        let mut acc = vec![0i128; n];
+        let mut wsum = vec![0i128; n];
 
         for (u, mask) in updates.iter().zip(&slot_masks) {
             let x = u
@@ -175,9 +202,65 @@ pub fn aggregate(global: &mut TensorMap, updates: &[DeviceUpdate],
         }
 
         for e in 0..n {
-            if wsum[e] > 0.0 {
-                g[e] = (acc[e] / wsum[e]) as f32;
+            if wsum[e] > 0 {
+                g[e] = (acc[e] as f64 / wsum[e] as f64) as f32;
             } // else: keep previous global value (n_l = 0 this round)
+        }
+    }
+}
+
+/// The raw eq. 17 running sums of one fold, detached from the
+/// aggregator that produced them. Because the sums are fixed-point
+/// integers, [`FoldSums::absorb`] is exactly associative: partial folds
+/// over disjoint subsets of the update stream merge back to the same
+/// bits as the flat fold under any grouping — the property the edge
+/// tier's root merge rests on.
+#[derive(Debug, Clone)]
+pub struct FoldSums {
+    /// Per global tensor (in `TensorMap::entries` order): per-element
+    /// weighted value / weight sums at scale 2⁶⁰.
+    acc: Vec<Vec<i128>>,
+    wsum: Vec<Vec<i128>>,
+    n_updates: usize,
+}
+
+impl FoldSums {
+    pub fn n_updates(&self) -> usize {
+        self.n_updates
+    }
+
+    /// Merge another partial fold into this one (integer adds — order
+    /// and grouping cannot change the result).
+    pub fn absorb(&mut self, other: FoldSums) {
+        debug_assert_eq!(self.acc.len(), other.acc.len(),
+                         "fold layout drift");
+        for (a, o) in self.acc.iter_mut().zip(other.acc) {
+            for (x, y) in a.iter_mut().zip(o) {
+                *x += y;
+            }
+        }
+        for (a, o) in self.wsum.iter_mut().zip(other.wsum) {
+            for (x, y) in a.iter_mut().zip(o) {
+                *x += y;
+            }
+        }
+        self.n_updates += other.n_updates;
+    }
+
+    /// Write the layer-wise averages into `global`. Slots no device
+    /// held keep their previous global value; with zero updates this is
+    /// a no-op (matches [`aggregate`] on `&[]`).
+    pub fn write(&self, global: &mut TensorMap) {
+        if self.n_updates == 0 {
+            return;
+        }
+        for (ti, (_, g)) in global.entries.iter_mut().enumerate() {
+            let (acc, wsum) = (&self.acc[ti], &self.wsum[ti]);
+            for e in 0..g.len() {
+                if wsum[e] > 0 {
+                    g[e] = (acc[e] as f64 / wsum[e] as f64) as f32;
+                }
+            }
         }
     }
 }
@@ -196,8 +279,8 @@ pub struct StreamingAggregator {
     rank_dim: usize,
     /// Per global tensor: (name, pattern, element count).
     layout: Vec<(String, Pattern, usize)>,
-    acc: Vec<Vec<f64>>,
-    wsum: Vec<Vec<f64>>,
+    acc: Vec<Vec<i128>>,
+    wsum: Vec<Vec<i128>>,
     n_updates: usize,
     /// Minimum acceptable model version for [`Self::push_versioned`]
     /// (the async engine's staleness cutoff); 0 accepts everything.
@@ -219,9 +302,9 @@ impl StreamingAggregator {
                 )
             })
             .collect();
-        let acc = layout.iter().map(|&(_, _, n)| vec![0f64; n]).collect();
+        let acc = layout.iter().map(|&(_, _, n)| vec![0i128; n]).collect();
         let wsum =
-            layout.iter().map(|&(_, _, n)| vec![0f64; n]).collect();
+            layout.iter().map(|&(_, _, n)| vec![0i128; n]).collect();
         StreamingAggregator {
             n_layers,
             rank_dim,
@@ -281,18 +364,16 @@ impl StreamingAggregator {
     /// held this round keep their previous global value; with zero
     /// updates this is a no-op (matches [`aggregate`] on `&[]`).
     pub fn finish(self, global: &mut TensorMap) {
-        if self.n_updates == 0 {
-            return;
-        }
-        for (ti, (spec, g)) in global.entries.iter_mut().enumerate() {
-            debug_assert_eq!(spec.name, self.layout[ti].0,
-                             "global layout drift");
-            let (acc, wsum) = (&self.acc[ti], &self.wsum[ti]);
-            for e in 0..g.len() {
-                if wsum[e] > 0.0 {
-                    g[e] = (acc[e] / wsum[e]) as f32;
-                }
-            }
+        self.into_sums().write(global);
+    }
+
+    /// Detach the running sums (the streaming path's contribution to a
+    /// hierarchical merge).
+    pub fn into_sums(self) -> FoldSums {
+        FoldSums {
+            acc: self.acc,
+            wsum: self.wsum,
+            n_updates: self.n_updates,
         }
     }
 }
@@ -310,8 +391,8 @@ struct ShardState {
     n_layers: usize,
     /// (global tensor index, name, pattern, element count).
     tensors: Vec<(usize, String, Pattern, usize)>,
-    acc: Vec<Vec<f64>>,
-    wsum: Vec<Vec<f64>>,
+    acc: Vec<Vec<i128>>,
+    wsum: Vec<Vec<i128>>,
 }
 
 fn shard_worker(mut st: ShardState, rx: mpsc::Receiver<FoldMsg>)
@@ -378,6 +459,9 @@ enum ShardMode {
 pub struct ShardedAggregator {
     n_layers: usize,
     rank_dim: usize,
+    /// Global tensor count (for reassembling worker shards into dense
+    /// [`FoldSums`] at `into_sums`).
+    n_tensors: usize,
     mode: ShardMode,
     n_updates: usize,
     /// Minimum acceptable model version for [`Self::push_versioned`].
@@ -400,6 +484,7 @@ impl ShardedAggregator {
             return ShardedAggregator {
                 n_layers,
                 rank_dim,
+                n_tensors: global.entries.len(),
                 mode: ShardMode::Inline(StreamingAggregator::new(
                     global, n_layers, rank_dim,
                 )),
@@ -432,11 +517,11 @@ impl ShardedAggregator {
                 n_layers,
                 acc: tensors
                     .iter()
-                    .map(|&(_, _, _, n)| vec![0f64; n])
+                    .map(|&(_, _, _, n)| vec![0i128; n])
                     .collect(),
                 wsum: tensors
                     .iter()
-                    .map(|&(_, _, _, n)| vec![0f64; n])
+                    .map(|&(_, _, _, n)| vec![0i128; n])
                     .collect(),
                 tensors,
             };
@@ -447,6 +532,7 @@ impl ShardedAggregator {
         ShardedAggregator {
             n_layers,
             rank_dim,
+            n_tensors: global.entries.len(),
             mode: ShardMode::Workers { txs, handles },
             n_updates: 0,
             watermark: 0,
@@ -503,11 +589,15 @@ impl ShardedAggregator {
     /// Merge the shards into `global` in shard-index order. With zero
     /// updates this is a no-op (matches [`StreamingAggregator`]).
     pub fn finish(self, global: &mut TensorMap) -> Result<()> {
+        self.into_sums()?.write(global);
+        Ok(())
+    }
+
+    /// Join the workers (if any) and reassemble their disjoint tensor
+    /// subsets into dense [`FoldSums`] in global tensor order.
+    pub fn into_sums(self) -> Result<FoldSums> {
         match self.mode {
-            ShardMode::Inline(agg) => {
-                agg.finish(global);
-                Ok(())
-            }
+            ShardMode::Inline(agg) => Ok(agg.into_sums()),
             ShardMode::Workers { txs, handles } => {
                 drop(txs); // close the channels: workers drain and exit
                 let mut states = Vec::with_capacity(handles.len());
@@ -516,27 +606,123 @@ impl ShardedAggregator {
                         anyhow!("aggregation shard panicked")
                     })?);
                 }
-                if self.n_updates == 0 {
-                    return Ok(());
-                }
-                for st in states {
-                    for (k, (ti, name, _, _)) in
-                        st.tensors.iter().enumerate()
-                    {
-                        let (spec, g) = &mut global.entries[*ti];
-                        debug_assert_eq!(&spec.name, name,
-                                         "global layout drift");
-                        let (acc, wsum) = (&st.acc[k], &st.wsum[k]);
-                        for e in 0..g.len() {
-                            if wsum[e] > 0.0 {
-                                g[e] = (acc[e] / wsum[e]) as f32;
-                            }
-                        }
+                let mut acc: Vec<Vec<i128>> = vec![Vec::new(); self.n_tensors];
+                let mut wsum: Vec<Vec<i128>> = vec![Vec::new(); self.n_tensors];
+                for mut st in states {
+                    for (k, &(ti, ..)) in st.tensors.iter().enumerate() {
+                        acc[ti] = std::mem::take(&mut st.acc[k]);
+                        wsum[ti] = std::mem::take(&mut st.wsum[k]);
                     }
                 }
-                Ok(())
+                Ok(FoldSums { acc, wsum, n_updates: self.n_updates })
             }
         }
+    }
+}
+
+/// Hierarchical eq. 17 fold — the edge-aggregation tier. The expected
+/// update stream (`n_expected` pushes) is partitioned into `n_edges`
+/// contiguous, deterministic slices; each edge folds its slice with its
+/// own [`ShardedAggregator`] (so edge folds and their shard workers run
+/// concurrently), and [`Self::finish`] merges the edge partials into
+/// the root in ascending edge-index order. Fixed-point accumulation
+/// makes the merged result bit-identical to the flat fold at every edge
+/// count.
+pub struct EdgeAggregator {
+    edges: Vec<ShardedAggregator>,
+    /// Slice bounds: accepted push `k` routes to the edge `e` with
+    /// `bounds[e] <= k < bounds[e+1]` (len = edges + 1).
+    bounds: Vec<usize>,
+    n_pushed: usize,
+    n_updates: usize,
+    /// Minimum acceptable model version for [`Self::push_versioned`].
+    /// Gated here — a rejected update must not consume a slice slot.
+    watermark: usize,
+}
+
+impl EdgeAggregator {
+    /// `n_edges` is clamped to `[1, n_expected]` (an edge with no slice
+    /// would idle); `shards`/`queue_cap` configure each edge's inner
+    /// sharded fold exactly as in [`ShardedAggregator::new`].
+    pub fn new(global: &TensorMap, n_layers: usize, rank_dim: usize,
+               n_edges: usize, shards: usize, queue_cap: usize,
+               n_expected: usize) -> Self {
+        let e = n_edges.max(1).min(n_expected.max(1));
+        let edges: Vec<ShardedAggregator> = (0..e)
+            .map(|_| {
+                ShardedAggregator::new(global, n_layers, rank_dim, shards,
+                                       queue_cap)
+            })
+            .collect();
+        let bounds: Vec<usize> =
+            (0..=e).map(|k| n_expected * k / e).collect();
+        EdgeAggregator {
+            edges,
+            bounds,
+            n_pushed: 0,
+            n_updates: 0,
+            watermark: 0,
+        }
+    }
+
+    /// Set the version watermark (see
+    /// [`StreamingAggregator::set_watermark`]).
+    pub fn set_watermark(&mut self, v: usize) {
+        self.watermark = v;
+    }
+
+    /// Edge owning the next accepted push. Pushes beyond `n_expected`
+    /// (possible only if the caller under-estimated) land on the last
+    /// edge.
+    fn route(&self) -> usize {
+        let k = self.n_pushed;
+        let e = self.bounds[1..].partition_point(|&b| b <= k);
+        e.min(self.edges.len() - 1)
+    }
+
+    /// Fold one device's update into its slice's edge.
+    pub fn push(&mut self, trainable: TensorMap, config: &LoraConfig,
+                weight: f64) -> Result<()> {
+        let e = self.route();
+        self.edges[e].push(trainable, config, weight)?;
+        self.n_pushed += 1;
+        self.n_updates += 1;
+        Ok(())
+    }
+
+    /// Weighted fold gated by the version watermark: folds the update
+    /// and returns `Ok(true)`, or — when `version` is below the
+    /// watermark — folds nothing (and advances no slice slot) and
+    /// returns `Ok(false)`.
+    pub fn push_versioned(&mut self, trainable: TensorMap,
+                          config: &LoraConfig, weight: f64,
+                          version: usize) -> Result<bool> {
+        if version < self.watermark {
+            return Ok(false);
+        }
+        self.push(trainable, config, weight)?;
+        Ok(true)
+    }
+
+    /// Number of updates folded so far.
+    pub fn n_updates(&self) -> usize {
+        self.n_updates
+    }
+
+    /// Root merge: absorb the edge partials in ascending edge-index
+    /// order, then write the averages into `global`. With zero updates
+    /// this is a no-op.
+    pub fn finish(self, global: &mut TensorMap) -> Result<()> {
+        let mut it = self.edges.into_iter();
+        let mut root = match it.next() {
+            Some(edge) => edge.into_sums()?,
+            None => return Ok(()),
+        };
+        for edge in it {
+            root.absorb(edge.into_sums()?);
+        }
+        root.write(global);
+        Ok(())
     }
 }
 
@@ -897,6 +1083,141 @@ mod tests {
                 .finish(&mut g)
                 .unwrap();
             assert!(g.get("aq").unwrap().iter().all(|&x| x == 5.0));
+        }
+    }
+
+    fn mixed_updates() -> Vec<DeviceUpdate> {
+        vec![
+            update(2.0, L, vec![3; L]),
+            update(6.0, 1, vec![1; L]),
+            update(-1.5, 2, vec![2; L]),
+            update(0.25, 3, vec![3; L]),
+            update(4.0, L, vec![2; L]),
+        ]
+    }
+
+    #[test]
+    fn edge_tier_matches_flat_fold_bitwise() {
+        let ups = mixed_updates();
+        let mut flat = filled(9.0);
+        let mut agg = StreamingAggregator::new(&flat, L, R);
+        for u in &ups {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        agg.finish(&mut flat);
+
+        for edges in [1usize, 2, 3, 4, 8] {
+            for shards in [1usize, 2] {
+                let mut tiered = filled(9.0);
+                let mut agg = EdgeAggregator::new(&tiered, L, R, edges,
+                                                  shards, 4, ups.len());
+                for u in &ups {
+                    agg.push(u.trainable.clone(), &u.config, u.weight)
+                        .unwrap();
+                }
+                assert_eq!(agg.n_updates(), ups.len());
+                agg.finish(&mut tiered).unwrap();
+                assert_eq!(flat, tiered,
+                           "{edges} edges × {shards} shards must be \
+                            bit-identical to the flat fold");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_tier_watermark_gates_before_routing() {
+        // A stale (rejected) update must not consume a slice slot: the
+        // accepted stream routes exactly as if the stale push never
+        // happened, so the result still matches the flat fold of the
+        // accepted updates only.
+        let ups = mixed_updates();
+        let mut want = filled(0.0);
+        let mut agg = StreamingAggregator::new(&want, L, R);
+        for u in &ups[1..] {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        agg.finish(&mut want);
+
+        let mut got = filled(0.0);
+        let mut agg =
+            EdgeAggregator::new(&got, L, R, 2, 1, 4, ups.len() - 1);
+        agg.set_watermark(5);
+        assert!(!agg
+            .push_versioned(ups[0].trainable.clone(), &ups[0].config,
+                            ups[0].weight, 4)
+            .unwrap());
+        assert_eq!(agg.n_updates(), 0);
+        for u in &ups[1..] {
+            assert!(agg
+                .push_versioned(u.trainable.clone(), &u.config, u.weight, 5)
+                .unwrap());
+        }
+        agg.finish(&mut got).unwrap();
+        assert_eq!(got, want, "stale push must leave routing untouched");
+    }
+
+    #[test]
+    fn edge_tier_empty_is_noop() {
+        for edges in [1usize, 4] {
+            let mut g = filled(5.0);
+            EdgeAggregator::new(&g, L, R, edges, 2, 2, 0)
+                .finish(&mut g)
+                .unwrap();
+            assert!(g.get("aq").unwrap().iter().all(|&x| x == 5.0));
+        }
+    }
+
+    #[test]
+    fn edge_tier_survives_more_pushes_than_expected() {
+        // Under-estimated n_expected: the overflow lands on the last
+        // edge and the result still matches the flat fold bitwise.
+        let ups = mixed_updates();
+        let mut flat = filled(0.0);
+        let mut agg = StreamingAggregator::new(&flat, L, R);
+        for u in &ups {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        agg.finish(&mut flat);
+
+        let mut tiered = filled(0.0);
+        let mut agg = EdgeAggregator::new(&tiered, L, R, 2, 1, 4, 2);
+        for u in &ups {
+            agg.push(u.trainable.clone(), &u.config, u.weight).unwrap();
+        }
+        agg.finish(&mut tiered).unwrap();
+        assert_eq!(flat, tiered);
+    }
+
+    #[test]
+    fn fold_sums_absorb_is_exact_across_any_split() {
+        // Quantized integer sums: splitting the stream at any point and
+        // absorbing the partials reproduces the unsplit sums exactly.
+        let ups = mixed_updates();
+        let g = filled(0.0);
+        let whole = {
+            let mut a = StreamingAggregator::new(&g, L, R);
+            for u in &ups {
+                a.push(&u.trainable, &u.config, u.weight);
+            }
+            let mut out = filled(0.0);
+            a.finish(&mut out);
+            out
+        };
+        for split in 0..=ups.len() {
+            let mut left = StreamingAggregator::new(&g, L, R);
+            let mut right = StreamingAggregator::new(&g, L, R);
+            for u in &ups[..split] {
+                left.push(&u.trainable, &u.config, u.weight);
+            }
+            for u in &ups[split..] {
+                right.push(&u.trainable, &u.config, u.weight);
+            }
+            let mut sums = left.into_sums();
+            sums.absorb(right.into_sums());
+            assert_eq!(sums.n_updates(), ups.len());
+            let mut out = filled(0.0);
+            sums.write(&mut out);
+            assert_eq!(out, whole, "split at {split} diverged");
         }
     }
 }

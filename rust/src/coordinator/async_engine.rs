@@ -75,13 +75,13 @@
 //! fold itself stays streaming (O(model) via the sharded aggregator).
 
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::data::Spec;
+use crate::data::{Dataset, Spec};
 use crate::device::profile::calib;
-use crate::device::Fleet;
+use crate::device::FleetView;
 use crate::metrics::{RoundRecord, RunRecord};
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
@@ -89,10 +89,10 @@ use crate::runtime::Masks;
 use crate::sim::clock::{timing_from_pairs, VirtualClock};
 use crate::util::rng::Rng;
 
-use super::aggregation::ShardedAggregator;
+use super::aggregation::EdgeAggregator;
 use super::capacity::CapacityEstimator;
-use super::engine::{admitted_cohort, device_round, round_data, sanitize,
-                    ExecOpts, TrainJob};
+use super::engine::{admitted_cohort, device_round, device_shard,
+                    sanitize, test_data, ExecOpts, TrainJob};
 use super::participation::Participation;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
 use super::strategy::{Strategy, StrategyCtx};
@@ -242,7 +242,8 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Run one full federated fine-tuning experiment asynchronously.
-    pub fn run(&self, fleet: &mut Fleet, strategy: &mut dyn Strategy,
+    pub fn run(&self, fleet: &mut dyn FleetView,
+               strategy: &mut dyn Strategy,
                trainer: &mut dyn Trainer, spec: &Spec,
                mut global: TensorMap,
                participation: &mut dyn Participation)
@@ -250,6 +251,9 @@ impl<'a> AsyncEngine<'a> {
         let cfg = self.cfg;
         let meta = self.meta;
         let n = fleet.len();
+        participation
+            .validate(n)
+            .map_err(|e| anyhow!("participation: {e}"))?;
         let family = trainer.family();
         let rank_dim = meta.rank_dim(family);
         let unit_bytes = meta.unit_bytes(family);
@@ -257,8 +261,11 @@ impl<'a> AsyncEngine<'a> {
         let s_max = cfg.max_staleness;
 
         // ---- data (one pipeline, shared with the sync engine) -------------
+        // Test set up front; training shards derived per cohort member
+        // per window (pure functions of `(seed, device_id)`), so data
+        // memory is O(cohort), never O(fleet).
         let batch = trainer.batch_size();
-        let (test, shards) = round_data(cfg, spec, n, batch)?;
+        let test = test_data(cfg, spec)?;
 
         // ---- state --------------------------------------------------------
         let mut estimator = CapacityEstimator::paper(n);
@@ -266,15 +273,18 @@ impl<'a> AsyncEngine<'a> {
         let mut clock = VirtualClock::new();
         let mut record = RunRecord::new(&strategy.name(), &cfg.task);
         let mut part_rng = Rng::new(cfg.seed).child("participation");
-        let mut last_losses = vec![0f64; n];
-        let mut loss_rounds = vec![0usize; n];
+        // Sparse (round recorded, loss) per device ever trained — same
+        // semantics as the sync engine's log, O(devices seen).
+        let mut loss_log: BTreeMap<usize, (usize, f64)> = BTreeMap::new();
         let mut last_round_time = 0f64;
         let mut last_acc = 0f64;
         let mut last_test_loss = 0f64;
-        // Async state: which devices are off training, the event queue
-        // of their completions, and the most recent plan's eval mask
-        // (a window that dispatches nothing still needs one).
-        let mut busy = vec![false; n];
+        // Async state: which devices are off training (sparse — at
+        // most one in-flight update each, so O(in-flight) not
+        // O(fleet)), the event queue of their completions, and the
+        // most recent plan's eval mask (a window that dispatches
+        // nothing still needs one).
+        let mut busy: BTreeSet<usize> = BTreeSet::new();
         let mut pending: EventQueue<InFlight> = EventQueue::new();
         let mut eval_config: Option<LoraConfig> = None;
 
@@ -292,16 +302,26 @@ impl<'a> AsyncEngine<'a> {
             let sampled =
                 sanitize(participation.sample(h, n, &mut part_rng), n)
                     .unwrap_or_else(|| vec![0]);
-            let cohort: Vec<usize> =
-                sampled.into_iter().filter(|&i| !busy[i]).collect();
+            let cohort: Vec<usize> = sampled
+                .into_iter()
+                .filter(|i| !busy.contains(i))
+                .collect();
 
             let mut dropped = 0usize;
             if !cohort.is_empty() {
-                // NOTE: phases ①b–④ below mirror `RoundEngine::run`
+                // NOTE: phases ⓪–④ below mirror `RoundEngine::run`
                 // line for line (the shareable pieces — data pipeline,
                 // admission, eq. 12 inputs — already live in
                 // `engine.rs` helpers). Edit both engines together:
                 // the S = 0 oracle property test fails on any drift.
+                // ⓪ materialize exactly this window's cohort shards.
+                let shards: BTreeMap<usize, Dataset> = cohort
+                    .iter()
+                    .map(|&i| {
+                        Ok((i, device_shard(cfg, spec, i, n, batch)?))
+                    })
+                    .collect::<Result<_>>()?;
+
                 // ①b status reports → capacity estimation (eq. 8–9).
                 for &i in &cohort {
                     let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
@@ -315,7 +335,10 @@ impl<'a> AsyncEngine<'a> {
                 let n_batches: Vec<usize> = cohort
                     .iter()
                     .map(|&i| {
-                        shards[i].len().div_ceil(batch).min(cfg.max_batches)
+                        shards[&i]
+                            .len()
+                            .div_ceil(batch)
+                            .min(cfg.max_batches)
                     })
                     .collect();
 
@@ -336,24 +359,20 @@ impl<'a> AsyncEngine<'a> {
                     comm_budgets: vec![usize::MAX; cohort.len()],
                     last_losses: cohort
                         .iter()
-                        .map(|&i| {
-                            if loss_rounds[i] + 1 == h {
-                                last_losses[i]
-                            } else {
-                                0.0
-                            }
+                        .map(|&i| match loss_log.get(&i) {
+                            Some(&(r, loss)) if r + 1 == h => loss,
+                            _ => 0.0,
                         })
                         .collect(),
                     last_round_time,
                     device_ids: cohort.clone(),
                     staleness: cohort
                         .iter()
-                        .map(|&i| {
-                            if loss_rounds[i] == 0 {
-                                usize::MAX
-                            } else {
-                                (h - 1).saturating_sub(loss_rounds[i])
+                        .map(|&i| match loss_log.get(&i) {
+                            Some(&(r, _)) => {
+                                (h - 1).saturating_sub(r)
                             }
+                            None => usize::MAX,
                         })
                         .collect(),
                 };
@@ -406,7 +425,7 @@ impl<'a> AsyncEngine<'a> {
                                     layer_mask: config
                                         .layer_mask(meta.n_layers),
                                 },
-                                shard: &shards[i],
+                                shard: &shards[&i],
                                 lr,
                                 max_batches: cfg.max_batches,
                             }
@@ -427,11 +446,11 @@ impl<'a> AsyncEngine<'a> {
                 // Schedule completion events at the true eq. 12 times.
                 for (k, &j) in admitted_pos.iter().enumerate() {
                     let i = cohort[j];
-                    let d = &fleet.devices[i];
                     let duration =
-                        device_round(meta, unit_bytes, i, d.true_mu(),
-                                     d.true_beta(unit_bytes),
-                                     d.compute.forward_time(meta.n_layers),
+                        device_round(meta, unit_bytes, i,
+                                     fleet.true_mu(i),
+                                     fleet.true_beta(i, unit_bytes),
+                                     fleet.forward_time(i, meta.n_layers),
                                      &plan.device_configs[j], n_batches[j])
                             .completion_time();
                     let outcome = outs[k]
@@ -446,7 +465,7 @@ impl<'a> AsyncEngine<'a> {
                             config: plan.device_configs[j].clone(),
                         },
                     );
-                    busy[i] = true;
+                    busy.insert(i);
                 }
             }
 
@@ -494,8 +513,9 @@ impl<'a> AsyncEngine<'a> {
             let shard_cap = if cfg.window > 0 { cfg.window } else { 8 };
             let eff_shards =
                 if drained.len() <= 1 { 1 } else { cfg.agg_shards };
-            let mut agg = ShardedAggregator::new(
-                &global, meta.n_layers, rank_dim, eff_shards, shard_cap,
+            let mut agg = EdgeAggregator::new(
+                &global, meta.n_layers, rank_dim, cfg.edge_aggregators,
+                eff_shards, shard_cap, drained.len(),
             );
             agg.set_watermark(h.saturating_sub(s_max));
             // (device, completion relative to this window, loss, depth)
@@ -507,8 +527,7 @@ impl<'a> AsyncEngine<'a> {
                 transport.recv_update(i, &inf.outcome.trainable,
                                       &inf.config, meta.n_layers,
                                       rank_dim);
-                last_losses[i] = inf.outcome.mean_loss;
-                loss_rounds[i] = h;
+                loss_log.insert(i, (h, inf.outcome.mean_loss));
                 // Same-window folds keep their exact duration (the
                 // sync-oracle path); spillovers are measured against
                 // this window's start.
@@ -524,7 +543,7 @@ impl<'a> AsyncEngine<'a> {
                                                   inf.gen)?;
                 debug_assert!(accepted,
                               "commit rule violated the watermark");
-                busy[i] = false;
+                busy.remove(&i);
             }
             let tally = transport.round_tally();
             agg.finish(&mut global)?;

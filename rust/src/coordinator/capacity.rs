@@ -5,20 +5,27 @@
 //!   μ_i^h = ρ·μ_i^{h-1} + (1-ρ)·μ̂_i^h,
 //!   β_i^h = ρ·β_i^{h-1} + (1-ρ)·β̂_i^h,   ρ = 0.8 by default.
 //! The first observation seeds the state directly (no bias toward 0).
+//!
+//! State is keyed sparsely by device id: only devices that have ever
+//! reported occupy memory, so the estimator stays O(devices seen) —
+//! O(cohort · rounds at worst) — rather than O(fleet), which matters
+//! once the fleet is lazily a million devices wide.
+
+use std::collections::BTreeMap;
 
 /// One device's EMA state.
 #[derive(Debug, Clone, Copy, Default)]
 struct Ema {
     mu: f64,
     beta: f64,
-    seeded: bool,
 }
 
-/// PS-side estimator over the whole fleet.
+/// PS-side estimator over the fleet.
 #[derive(Debug, Clone)]
 pub struct CapacityEstimator {
     rho: f64,
-    state: Vec<Ema>,
+    n_devices: usize,
+    state: BTreeMap<usize, Ema>,
 }
 
 /// A device's estimated capacities for the current round.
@@ -34,38 +41,44 @@ impl CapacityEstimator {
     /// `rho` = 0.8 in the paper's experiments.
     pub fn new(n_devices: usize, rho: f64) -> Self {
         assert!((0.0..=1.0).contains(&rho), "rho must be in [0,1]");
-        CapacityEstimator { rho, state: vec![Ema::default(); n_devices] }
+        CapacityEstimator { rho, n_devices, state: BTreeMap::new() }
     }
 
     pub fn paper(n_devices: usize) -> Self {
         Self::new(n_devices, 0.8)
     }
 
-    /// Fold in a round's status report (μ̂, β̂) from device `i`.
+    /// Fold in a round's status report (μ̂, β̂) from device `i`. The
+    /// first report from a device seeds its state directly.
     pub fn update(&mut self, i: usize, mu_hat: f64, beta_hat: f64) {
-        let e = &mut self.state[i];
-        if !e.seeded {
-            e.mu = mu_hat;
-            e.beta = beta_hat;
-            e.seeded = true;
-        } else {
-            e.mu = self.rho * e.mu + (1.0 - self.rho) * mu_hat;
-            e.beta = self.rho * e.beta + (1.0 - self.rho) * beta_hat;
+        debug_assert!(i < self.n_devices, "device {i} out of range");
+        match self.state.entry(i) {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(Ema { mu: mu_hat, beta: beta_hat });
+            }
+            std::collections::btree_map::Entry::Occupied(mut o) => {
+                let e = o.get_mut();
+                e.mu = self.rho * e.mu + (1.0 - self.rho) * mu_hat;
+                e.beta = self.rho * e.beta + (1.0 - self.rho) * beta_hat;
+            }
         }
     }
 
     /// Current estimate for device `i` (None before first report).
     pub fn get(&self, i: usize) -> Option<Capacity> {
-        let e = self.state[i];
-        e.seeded.then_some(Capacity { mu: e.mu, beta: e.beta })
+        self.state
+            .get(&i)
+            .map(|e| Capacity { mu: e.mu, beta: e.beta })
     }
 
+    /// Fleet size the estimator serves (not the number of seeded
+    /// entries — state is sparse).
     pub fn len(&self) -> usize {
-        self.state.len()
+        self.n_devices
     }
 
     pub fn is_empty(&self) -> bool {
-        self.state.is_empty()
+        self.n_devices == 0
     }
 }
 
@@ -114,6 +127,17 @@ mod tests {
         let c = est.get(0).unwrap();
         assert!((c.mu - 0.042).abs() < 1e-9);
         assert!((c.beta - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn state_is_sparse_in_devices_seen() {
+        // A huge fleet costs nothing until devices actually report.
+        let mut est = CapacityEstimator::paper(1_000_000);
+        assert_eq!(est.len(), 1_000_000);
+        est.update(999_999, 0.01, 0.1);
+        assert!(est.get(999_999).is_some());
+        assert!(est.get(0).is_none());
+        assert_eq!(est.state.len(), 1);
     }
 
     #[test]

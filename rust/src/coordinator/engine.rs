@@ -55,11 +55,11 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::data::{grammar, partition, Dataset, Spec};
+use crate::data::{grammar, Dataset, Spec};
 use crate::device::profile::calib;
-use crate::device::Fleet;
+use crate::device::FleetView;
 use crate::metrics::{RoundRecord, RunRecord};
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
@@ -67,7 +67,7 @@ use crate::runtime::Masks;
 use crate::sim::clock::{simulate_round, DeviceRound, VirtualClock};
 use crate::util::rng::Rng;
 
-use super::aggregation::ShardedAggregator;
+use super::aggregation::EdgeAggregator;
 use super::capacity::CapacityEstimator;
 use super::participation::Participation;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
@@ -291,7 +291,8 @@ impl<'a> RoundEngine<'a> {
     }
 
     /// Run one full federated fine-tuning experiment.
-    pub fn run(&self, fleet: &mut Fleet, strategy: &mut dyn Strategy,
+    pub fn run(&self, fleet: &mut dyn FleetView,
+               strategy: &mut dyn Strategy,
                trainer: &mut dyn Trainer, spec: &Spec,
                mut global: TensorMap,
                participation: &mut dyn Participation)
@@ -299,13 +300,20 @@ impl<'a> RoundEngine<'a> {
         let cfg = self.cfg;
         let meta = self.meta;
         let n = fleet.len();
+        participation
+            .validate(n)
+            .map_err(|e| anyhow!("participation: {e}"))?;
         let family = trainer.family();
         let rank_dim = meta.rank_dim(family);
         let unit_bytes = meta.unit_bytes(family);
 
         // ---- data ---------------------------------------------------------
+        // Only the shared test set is materialized up front; training
+        // shards are derived per cohort member per round (a pure
+        // function of `(seed, device_id)`), so data memory is
+        // O(cohort), never O(fleet).
         let batch = trainer.batch_size();
-        let (test, shards) = round_data(cfg, spec, n, batch)?;
+        let test = test_data(cfg, spec)?;
 
         // ---- state --------------------------------------------------------
         let mut estimator = CapacityEstimator::paper(n);
@@ -313,12 +321,12 @@ impl<'a> RoundEngine<'a> {
         let mut clock = VirtualClock::new();
         let mut record = RunRecord::new(&strategy.name(), &cfg.task);
         let mut part_rng = Rng::new(cfg.seed).child("participation");
-        let mut last_losses = vec![0f64; n];
-        // Round each device's loss was recorded (0 = never): a device
+        // (round recorded, loss) per device that has ever trained —
+        // sparse, so state is O(devices seen), not O(fleet). A device
         // re-entering a sampled cohort after sitting out must not have
         // a many-rounds-old loss surfaced to strategies as "last
-        // round" — stale entries read as 0 (round-1 semantics).
-        let mut loss_rounds = vec![0usize; n];
+        // round": only an entry from round h−1 reads as fresh.
+        let mut loss_log: BTreeMap<usize, (usize, f64)> = BTreeMap::new();
         let mut last_round_time = 0f64;
         let mut last_acc = 0f64;
         let mut last_test_loss = 0f64;
@@ -337,6 +345,16 @@ impl<'a> RoundEngine<'a> {
                 sanitize(participation.sample(h, n, &mut part_rng), n)
                     .unwrap_or_else(|| vec![0]);
 
+            // ⓪ materialize exactly the cohort's shards for this
+            // round — each a pure function of `(seed, device_id)`, so
+            // non-cohort devices cost nothing.
+            let shards: BTreeMap<usize, Dataset> = cohort
+                .iter()
+                .map(|&i| {
+                    Ok((i, device_shard(cfg, spec, i, n, batch)?))
+                })
+                .collect::<Result<_>>()?;
+
             // ①b status reports → capacity estimation (eq. 8–9).
             // Only sampled devices report: a skipped device costs
             // zero bytes this round, STATUS_BYTES included.
@@ -352,7 +370,7 @@ impl<'a> RoundEngine<'a> {
             let n_batches: Vec<usize> = cohort
                 .iter()
                 .map(|&i| {
-                    shards[i].len().div_ceil(batch).min(cfg.max_batches)
+                    shards[&i].len().div_ceil(batch).min(cfg.max_batches)
                 })
                 .collect();
 
@@ -377,10 +395,9 @@ impl<'a> RoundEngine<'a> {
                         // Only a loss recorded in the immediately
                         // previous round is "last round"; anything
                         // older surfaces as 0 (round-1 semantics).
-                        if loss_rounds[i] + 1 == h {
-                            last_losses[i]
-                        } else {
-                            0.0
+                        match loss_log.get(&i) {
+                            Some(&(r, loss)) if r + 1 == h => loss,
+                            _ => 0.0,
                         }
                     })
                     .collect(),
@@ -392,10 +409,9 @@ impl<'a> RoundEngine<'a> {
                         // Rounds since the device's loss was recorded:
                         // 0 = fresh (immediately previous round),
                         // usize::MAX = never trained.
-                        if loss_rounds[i] == 0 {
-                            usize::MAX
-                        } else {
-                            (h - 1).saturating_sub(loss_rounds[i])
+                        match loss_log.get(&i) {
+                            Some(&(r, _)) => (h - 1).saturating_sub(r),
+                            None => usize::MAX,
                         }
                     })
                     .collect(),
@@ -444,7 +460,7 @@ impl<'a> RoundEngine<'a> {
                                 .rank_mask(meta.n_layers, rank_dim),
                             layer_mask: config.layer_mask(meta.n_layers),
                         },
-                        shard: &shards[i],
+                        shard: &shards[&i],
                         lr,
                         max_batches: cfg.max_batches,
                     }
@@ -454,35 +470,33 @@ impl<'a> RoundEngine<'a> {
             // Shard fold queues inherit the window: with W set, at
             // most W updates sit in a lagging shard's queue before
             // push() back-pressures, keeping transient memory
-            // O(model + W) end to end.
+            // O(model + W) end to end. The edge tier slices the
+            // admitted cohort across `edge_aggregators` concurrent
+            // folds; fixed-point accumulation keeps the root merge
+            // bit-identical to the flat fold at every edge count.
             let shard_cap = if cfg.window > 0 { cfg.window } else { 8 };
-            let mut agg = ShardedAggregator::new(
-                &global, meta.n_layers, rank_dim, cfg.agg_shards,
-                shard_cap,
+            let mut agg = EdgeAggregator::new(
+                &global, meta.n_layers, rank_dim, cfg.edge_aggregators,
+                cfg.agg_shards, shard_cap, admitted.len(),
             );
             let mut loss_sum = 0f64;
             {
                 // Outcomes arrive in device-index order (the reorder
                 // buffer lives in train_parallel), so accounting and
                 // eq. 17 folds are bit-stable at every threads ×
-                // shards × window setting.
+                // shards × window × edge setting.
                 let transport = &transport;
                 let plan = &plan;
                 let (cohort_r, admitted_pos_r) = (&cohort, &admitted_pos);
-                let (agg_r, losses_r, loss_rounds_r, loss_sum_r) = (
-                    &mut agg,
-                    &mut last_losses,
-                    &mut loss_rounds,
-                    &mut loss_sum,
-                );
+                let (agg_r, loss_log_r, loss_sum_r) =
+                    (&mut agg, &mut loss_log, &mut loss_sum);
                 let mut sink = |k: usize, out: LocalOutcome| {
                     let j = admitted_pos_r[k];
                     let i = cohort_r[j];
                     let config = &plan.device_configs[j];
                     transport.recv_update(i, &out.trainable, config,
                                           meta.n_layers, rank_dim);
-                    losses_r[i] = out.mean_loss;
-                    loss_rounds_r[i] = h;
+                    loss_log_r.insert(i, (h, out.mean_loss));
                     *loss_sum_r += out.mean_loss;
                     agg_r.push(out.trainable, config, 1.0)
                 };
@@ -502,10 +516,9 @@ impl<'a> RoundEngine<'a> {
                 .iter()
                 .map(|&j| {
                     let i = cohort[j];
-                    let d = &fleet.devices[i];
-                    device_round(meta, unit_bytes, i, d.true_mu(),
-                                 d.true_beta(unit_bytes),
-                                 d.compute.forward_time(meta.n_layers),
+                    device_round(meta, unit_bytes, i, fleet.true_mu(i),
+                                 fleet.true_beta(i, unit_bytes),
+                                 fleet.forward_time(i, meta.n_layers),
                                  &plan.device_configs[j], n_batches[j])
                 })
                 .collect();
@@ -591,30 +604,54 @@ pub(crate) fn device_round(meta: &ModelMeta, unit_bytes: usize,
     }
 }
 
-/// Phase-⓪ data pipeline shared by both engines: generate the train
-/// and test sets and the per-device non-iid shards from the run
-/// seed's "data" RNG stream. Same seed ⇒ same shards regardless of
-/// the round discipline — the async engine's sync-degeneracy oracle
-/// depends on both engines consuming this stream identically, so it
+/// Phase-⓪ shared test set, generated from a dedicated child of the
+/// run seed's "data" stream. Both engines consume it identically —
+/// the async engine's sync-degeneracy oracle depends on that, so it
 /// lives in exactly one place.
-pub(crate) fn round_data(cfg: &FedConfig, spec: &Spec, n: usize,
-                         batch: usize)
-                         -> Result<(Dataset, Vec<Dataset>)> {
-    let mut data_rng = Rng::new(cfg.seed).child("data");
-    let task = spec.task(&cfg.task)?.clone();
-    let train =
-        grammar::generate(spec, &cfg.task, cfg.train_size, &mut data_rng)?;
+pub(crate) fn test_data(cfg: &FedConfig, spec: &Spec)
+                        -> Result<Dataset> {
+    let mut rng = Rng::new(cfg.seed).child("data").child("test");
     let test_size = (cfg.test_size / 64).max(1) * 64;
-    let test =
-        grammar::generate(spec, &cfg.task, test_size, &mut data_rng)?;
-    let how = if cfg.alpha > 0.0 {
-        partition::Partition::Dirichlet { alpha: cfg.alpha }
+    Ok(grammar::generate(spec, &cfg.task, test_size, &mut rng)?)
+}
+
+/// Device `i`'s non-iid training shard, derived on demand from a
+/// counter-based cell of the "data" stream — a pure function of
+/// `(seed, device_id)`. A round materializes exactly its cohort's
+/// shards; the other `n − |cohort|` devices (of possibly millions)
+/// cost nothing, and the result never depends on which devices were
+/// sampled before.
+///
+/// Non-iid skew follows the same model as `partition::split`: with
+/// `alpha > 0` the device draws a Dirichlet(α) class mixture and
+/// samples each example's label from it (`grammar::sample_labeled`
+/// realizes the label in tokens); `alpha = 0` is the iid split. The
+/// shard holds the device's largest-remainder share of
+/// `cfg.train_size`, floored at one batch so a local epoch can always
+/// run.
+pub(crate) fn device_shard(cfg: &FedConfig, spec: &Spec, i: usize,
+                           n: usize, batch: usize) -> Result<Dataset> {
+    let n = n.max(1);
+    let task = spec.task(&cfg.task)?.clone();
+    let mut rng =
+        Rng::new(cfg.seed).child("data").cell("shard", i as u64, 0);
+    let size = (cfg.train_size / n
+        + usize::from(i < cfg.train_size % n))
+        .max(batch.max(1));
+    let examples = if cfg.alpha > 0.0 {
+        let mixture = rng.dirichlet(&vec![cfg.alpha; task.n_classes]);
+        (0..size)
+            .map(|_| {
+                let label = rng.weighted(&mixture);
+                grammar::sample_labeled(spec, &task, label, &mut rng)
+            })
+            .collect()
     } else {
-        partition::Partition::Iid
+        (0..size)
+            .map(|_| grammar::sample_example(spec, &task, &mut rng))
+            .collect()
     };
-    let shards = partition::split(&train, n, how, task.n_classes, batch,
-                                  &mut data_rng);
-    Ok((test, shards))
+    Ok(Dataset { examples })
 }
 
 /// ①c deadline admission with the well-formed-round fallback, shared

@@ -19,12 +19,22 @@
 //! stream of the run seed), so cohorts are reproducible and
 //! independent of thread count.
 
+use std::collections::BTreeSet;
+
 use crate::sim::clock::median_completion;
 use crate::util::rng::Rng;
 
 /// Cohort-selection policy hook.
 pub trait Participation {
     fn name(&self) -> String;
+
+    /// Check the policy against the fleet it is about to run on. The
+    /// engines call this once at run start, so a misconfiguration (e.g.
+    /// a fixed cohort size larger than the fleet) fails loudly before
+    /// round 1 instead of panicking or silently truncating downstream.
+    fn validate(&self, _n_devices: usize) -> Result<(), String> {
+        Ok(())
+    }
 
     /// Pick the devices that take part this round (any order; the
     /// engine sorts/dedups). Must be non-empty: an empty or fully
@@ -78,6 +88,53 @@ impl Participation for UniformSample {
     }
 }
 
+/// Uniform sampling of an *absolute* cohort size — the cross-device
+/// configuration ("1,000 of 1,000,000 per round"), where a fraction
+/// would be unwieldy. Samples without materializing the id range, so
+/// it stays O(count) however large the fleet is.
+pub struct UniformCount {
+    pub count: usize,
+}
+
+impl Participation for UniformCount {
+    fn name(&self) -> String {
+        format!("count({})", self.count)
+    }
+
+    fn validate(&self, n_devices: usize) -> Result<(), String> {
+        if self.count == 0 {
+            return Err("cohort size must be ≥ 1".into());
+        }
+        if self.count > n_devices {
+            return Err(format!(
+                "cohort size {} exceeds fleet size {n_devices}",
+                self.count
+            ));
+        }
+        Ok(())
+    }
+
+    fn sample(&mut self, _round: usize, n_devices: usize,
+              rng: &mut Rng) -> Vec<usize> {
+        let k = self.count.clamp(1, n_devices.max(1));
+        if k * 2 >= n_devices {
+            // Dense regime: rejection would thrash; shuffle instead.
+            let mut ids: Vec<usize> = (0..n_devices).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(k);
+            ids.sort_unstable();
+            return ids;
+        }
+        // Sparse regime (k ≪ n): rejection-sample distinct ids without
+        // ever allocating the fleet-sized range.
+        let mut picked = BTreeSet::new();
+        while picked.len() < k {
+            picked.insert(rng.range(0, n_devices));
+        }
+        picked.into_iter().collect()
+    }
+}
+
 /// Straggler-deadline drop (semi-synchronous rounds): admit devices
 /// whose predicted eq. 12 completion time is within
 /// `factor × median(cohort)`; always keep the `min_keep` fastest so a
@@ -128,11 +185,13 @@ impl Participation for DeadlineDrop {
 /// ≤ 0 would set every deadline to ≤ 0 and silently degrade to
 /// "min_keep fastest devices", which is never what the caller asked
 /// for.
-pub fn by_name(name: &str, sample_frac: f64, deadline_factor: f64)
+pub fn by_name(name: &str, sample_frac: f64, sample_count: usize,
+               deadline_factor: f64)
                -> Result<Box<dyn Participation>, String> {
     match name {
         "full" => Ok(Box::new(Full)),
         "sample" => Ok(Box::new(UniformSample { fraction: sample_frac })),
+        "count" => Ok(Box::new(UniformCount { count: sample_count })),
         "deadline" => {
             if !(deadline_factor > 0.0) {
                 return Err(format!(
@@ -197,24 +256,56 @@ mod tests {
     }
 
     #[test]
+    fn uniform_count_samples_exact_distinct_cohort() {
+        let mut p = UniformCount { count: 50 };
+        let mut rng = Rng::new(11);
+        // Sparse regime: 50 of 100_000 without touching the range.
+        let a = p.sample(1, 100_000, &mut rng);
+        assert_eq!(a.len(), 50);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert!(a.iter().all(|&i| i < 100_000));
+        // Deterministic given the stream position.
+        let mut rng2 = Rng::new(11);
+        assert_eq!(p.sample(1, 100_000, &mut rng2), a);
+        // Dense regime falls back to the shuffle and stays exact.
+        let b = p.sample(2, 60, &mut rng);
+        assert_eq!(b.len(), 50);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn oversized_cohort_is_rejected_not_truncated() {
+        // Regression: a cohort larger than the fleet must surface as a
+        // proper Err from validate, not a panic or silent truncation.
+        let p = UniformCount { count: 1_001 };
+        let err = p.validate(1_000).expect_err("must reject");
+        assert!(err.contains("exceeds fleet size"), "{err}");
+        assert!(p.validate(1_001).is_ok());
+        assert!(p.validate(2_000).is_ok());
+        assert!(UniformCount { count: 0 }.validate(10).is_err());
+        // The default hook accepts anything.
+        assert!(Full.validate(0).is_ok());
+    }
+
+    #[test]
     fn by_name_covers_policies() {
-        for n in ["full", "sample", "deadline"] {
-            assert!(by_name(n, 0.3, 1.5).is_ok(), "{n}");
+        for n in ["full", "sample", "count", "deadline"] {
+            assert!(by_name(n, 0.3, 10, 1.5).is_ok(), "{n}");
         }
-        assert!(by_name("nope", 0.3, 1.5).is_err());
+        assert!(by_name("nope", 0.3, 10, 1.5).is_err());
     }
 
     #[test]
     fn by_name_rejects_nonpositive_deadline_factor() {
         for bad in [0.0, -1.0, f64::NAN] {
-            let e = by_name("deadline", 0.3, bad)
+            let e = by_name("deadline", 0.3, 10, bad)
                 .map(|_| ())
                 .expect_err("factor must be rejected");
             assert!(e.contains("deadline factor"), "{e}");
         }
         // Other policies ignore the factor entirely — a bogus value
         // must not poison them.
-        assert!(by_name("full", 0.3, 0.0).is_ok());
-        assert!(by_name("sample", 0.3, -2.0).is_ok());
+        assert!(by_name("full", 0.3, 10, 0.0).is_ok());
+        assert!(by_name("sample", 0.3, 10, -2.0).is_ok());
     }
 }

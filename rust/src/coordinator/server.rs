@@ -18,7 +18,7 @@
 use anyhow::Result;
 
 use crate::data::Spec;
-use crate::device::Fleet;
+use crate::device::FleetView;
 use crate::metrics::RunRecord;
 use crate::model::state::TensorMap;
 use crate::model::Manifest;
@@ -76,6 +76,18 @@ pub struct FedConfig {
     /// update that would exceed S versions of staleness is still in
     /// flight, so every fold has τ ≤ S. 0 = synchronous barrier.
     pub max_staleness: usize,
+    /// Edge-aggregation tier fan-in E: the admitted update stream is
+    /// partitioned into E contiguous slices, each folded by its own
+    /// sharded aggregator, with the root merging the edge partials in
+    /// ascending edge-index order (1 = flat fold). Bit-identical at
+    /// every setting — see `coordinator/aggregation.rs`.
+    pub edge_aggregators: usize,
+    /// Derive devices on demand (`LazyFleet`) instead of materializing
+    /// the population: memory stays O(cohort) however large the fleet.
+    /// Only consulted by entry points that build the fleet themselves
+    /// (`exp::run_strategy_with`, `legend run --lazy`); bit-identical
+    /// to the eager fleet for the same seed.
+    pub lazy_fleet: bool,
     pub verbose: bool,
 }
 
@@ -98,6 +110,8 @@ impl Default for FedConfig {
             async_mode: false,
             staleness_alpha: 0.5,
             max_staleness: 2,
+            edge_aggregators: 1,
+            lazy_fleet: false,
             verbose: false,
         }
     }
@@ -162,8 +176,11 @@ pub fn cosine_lr(lr0: f64, round: usize, total: usize) -> f64 {
 }
 
 /// Run one full federated fine-tuning experiment with full
-/// participation (the paper's setting).
-pub fn run_federated(cfg: &FedConfig, fleet: &mut Fleet,
+/// participation (the paper's setting). Takes any [`FleetView`] — the
+/// eager [`crate::device::Fleet`] or the O(cohort)
+/// [`crate::device::LazyFleet`] — and produces bit-identical records
+/// for either under the same seed.
+pub fn run_federated(cfg: &FedConfig, fleet: &mut dyn FleetView,
                      strategy: &mut dyn Strategy,
                      trainer: &mut dyn Trainer, meta: &ModelMeta,
                      spec: &Spec, global: TensorMap)
@@ -175,7 +192,7 @@ pub fn run_federated(cfg: &FedConfig, fleet: &mut Fleet,
 /// Same, with an explicit [`Participation`] policy (client sampling,
 /// straggler deadlines, …).
 #[allow(clippy::too_many_arguments)]
-pub fn run_federated_with(cfg: &FedConfig, fleet: &mut Fleet,
+pub fn run_federated_with(cfg: &FedConfig, fleet: &mut dyn FleetView,
                           strategy: &mut dyn Strategy,
                           trainer: &mut dyn Trainer, meta: &ModelMeta,
                           spec: &Spec, global: TensorMap,
@@ -196,7 +213,7 @@ mod tests {
     use crate::coordinator::participation::{DeadlineDrop, UniformSample};
     use crate::coordinator::strategy::{FedLora, Legend};
     use crate::coordinator::trainer::MockTrainer;
-    use crate::device::FleetConfig;
+    use crate::device::{Fleet, FleetConfig};
     use crate::model::TensorSpec;
 
     fn toy_spec() -> Spec {

@@ -101,6 +101,58 @@ pub fn sample_example(spec: &Spec, task: &TaskSpec,
     Example { tokens: toks, label: label as i32 }
 }
 
+/// One example with a *prescribed* label (before label noise) —
+/// the sampler behind per-device Dirichlet mixtures, where the label
+/// is drawn from the device's class distribution first and the tokens
+/// must then realize it.
+pub fn sample_labeled(spec: &Spec, task: &TaskSpec, label: usize,
+                      rng: &mut Rng) -> Example {
+    let mut label = label.min(task.n_classes.saturating_sub(1));
+    let mut toks = match &task.kind {
+        Kind::Single => sample_single(spec, task, label, rng),
+        Kind::Pair => sample_pair(spec, task, label, rng),
+        Kind::Arith { digits, ops, n_terms } => {
+            // Free digits for all terms but the last; the last digit is
+            // chosen so the sum lands in the requested class.
+            let plus = ops[0] as i32;
+            let mut toks = vec![spec.cls];
+            let mut sum = 0usize;
+            for i in 0..n_terms.saturating_sub(1) {
+                if i > 0 {
+                    toks.push(plus);
+                }
+                let d = rng.range(0, 10);
+                sum += d;
+                toks.push(digits[0] as i32 + d as i32);
+            }
+            let candidates: Vec<usize> = (0..10)
+                .filter(|d| (sum + d) % task.n_classes == label)
+                .collect();
+            let d = if candidates.is_empty() {
+                // Unreachable for n_classes ≤ 10; keep the draw valid.
+                rng.range(0, 10)
+            } else {
+                *rng.choice(&candidates)
+            };
+            label = (sum + d) % task.n_classes;
+            if *n_terms > 1 {
+                toks.push(plus);
+            }
+            toks.push(digits[0] as i32 + d as i32);
+            toks.push(spec.sep);
+            toks
+        }
+    };
+    if rng.bernoulli(task.label_noise) {
+        label = rng.range(0, task.n_classes);
+    }
+    toks.truncate(spec.seq_len);
+    while toks.len() < spec.seq_len {
+        toks.push(spec.pad);
+    }
+    Example { tokens: toks, label: label as i32 }
+}
+
 /// Generate a labeled dataset of `n` examples for `task_name`.
 pub fn generate(spec: &Spec, task_name: &str, n: usize,
                 rng: &mut Rng) -> Result<Dataset, super::DataError> {
@@ -184,6 +236,50 @@ mod tests {
                 .map(|&t| t - d0)
                 .sum();
             assert_eq!(ex.label, sum % task.n_classes as i32);
+        }
+    }
+
+    #[test]
+    fn sample_labeled_realizes_requested_label() {
+        let spec = test_spec();
+        let mut rng = Rng::new(5);
+        for name in ["sst2", "gsm"] {
+            let task = spec.task(name).unwrap().clone();
+            for want in 0..task.n_classes {
+                for _ in 0..50 {
+                    let ex = sample_labeled(&spec, &task, want, &mut rng);
+                    // label_noise is 0 in the test spec, so the label
+                    // must come out exactly as requested.
+                    assert_eq!(ex.label, want as i32, "task {name}");
+                    assert_eq!(ex.tokens.len(), spec.seq_len);
+                    assert_eq!(ex.tokens[0], spec.cls);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_labeled_arith_sum_is_consistent() {
+        // The forced last digit must keep the arith invariant: label
+        // still equals the digit sum mod n_classes.
+        let spec = test_spec();
+        let task = spec.task("gsm").unwrap().clone();
+        let d0 = match &task.kind {
+            Kind::Arith { digits, .. } => digits[0] as i32,
+            _ => unreachable!(),
+        };
+        let mut rng = Rng::new(6);
+        for want in 0..task.n_classes {
+            for _ in 0..100 {
+                let ex = sample_labeled(&spec, &task, want, &mut rng);
+                let sum: i32 = ex
+                    .tokens
+                    .iter()
+                    .filter(|&&t| t >= d0 && t < d0 + 10)
+                    .map(|&t| t - d0)
+                    .sum();
+                assert_eq!(ex.label, sum % task.n_classes as i32);
+            }
         }
     }
 

@@ -1,4 +1,4 @@
-//! The 80-device heterogeneous fleet (§6.1).
+//! The heterogeneous fleet (§6.1), eager and lazy.
 //!
 //! Composition follows the paper: 30 Jetson TX2 + 40 Jetson NX + 10
 //! Jetson AGX, shuffled into four WiFi groups of 20. DVFS modes are
@@ -6,10 +6,26 @@
 //! resources varying over time; WiFi fading advances every round.
 //! Devices also report *measured* μ̂/β̂ with observation noise so the
 //! PS-side capacity estimator (eq. 8–9) has real work to do.
+//!
+//! Every stochastic per-device quantity is a pure function of
+//! `(seed, device_id, round)` evaluated through counter-based RNG
+//! cells ([`Rng::cell`]) in [`FleetCore`]. Two views share that
+//! derivation:
+//!
+//! * [`Fleet`] — eager: materializes all `Device`s (the paper's
+//!   80-device testbed; cheap at small n, O(fleet) memory).
+//! * [`LazyFleet`] — derives a device only when the cohort touches it;
+//!   `advance_round` is O(1) and memory stays O(cohort) at any
+//!   population size (the million-device configuration).
+//!
+//! Both are bit-identical under [`FleetView`]: same `(seed, round)` ⇒
+//! same profiles, fading state, and μ̂/β̂ observations.
 
-use super::network::NetworkModel;
+use std::collections::BTreeMap;
+
+use super::network::{self, NetworkModel};
 use super::profile::{ComputeProfile, DeviceClass};
-use crate::util::rng::Rng;
+use crate::util::rng::{IndexPerm, Rng};
 
 /// Fleet construction parameters.
 #[derive(Debug, Clone)]
@@ -42,12 +58,34 @@ impl FleetConfig {
         FleetConfig { n_tx2: 4, n_nx: 4, n_agx: 2, ..Self::paper() }
     }
 
-    /// Arbitrary size, class mix proportional to the paper's.
+    /// Arbitrary size, class mix proportional to the paper's 30/40/10
+    /// (largest-remainder apportionment, so counts track n·w/80 to
+    /// within one device at every size and always sum to n).
     pub fn sized(n: usize) -> Self {
-        let n_tx2 = (n * 30) / 80;
-        let n_agx = ((n * 10) / 80).max(1);
-        let n_nx = n - n_tx2 - n_agx;
-        FleetConfig { n_tx2, n_nx, n_agx, ..Self::paper() }
+        let weights = [30usize, 40, 10]; // Tx2, Nx, Agx out of 80
+        let mut counts = [0usize; 3];
+        let mut order: Vec<(usize, usize)> = Vec::with_capacity(3);
+        for (c, &w) in weights.iter().enumerate() {
+            counts[c] = n * w / 80;
+            order.push((n * w % 80, c));
+        }
+        // Hand the ≤ 2 leftover seats to the largest remainders
+        // (ties broken by class order, so the result is deterministic).
+        order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut left = n - counts.iter().sum::<usize>();
+        for &(_, c) in &order {
+            if left == 0 {
+                break;
+            }
+            counts[c] += 1;
+            left -= 1;
+        }
+        FleetConfig {
+            n_tx2: counts[0],
+            n_nx: counts[1],
+            n_agx: counts[2],
+            ..Self::paper()
+        }
     }
 
     pub fn total(&self) -> usize {
@@ -85,74 +123,164 @@ impl Device {
     }
 }
 
-/// The simulated population.
+/// Uniform interface the engines run against: the eager [`Fleet`] and
+/// the on-demand [`LazyFleet`] answer every query bit-identically for
+/// the same `(seed, round)` — the determinism contract that lets the
+/// property suite pin one against the other.
+pub trait FleetView {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Advance to the next round: WiFi fading every round, DVFS mode
+    /// resample every `mode_reshuffle_rounds`.
+    fn advance_round(&mut self);
+
+    /// Noisy status report (μ̂, β̂) for device `i` this round.
+    fn observe(&mut self, i: usize, unit_rank_bytes: usize) -> (f64, f64);
+
+    /// True μ [s/layer/batch] of device `i` this round.
+    fn true_mu(&self, i: usize) -> f64;
+
+    /// True β [s per unit-rank LoRA layer] of device `i` this round.
+    fn true_beta(&self, i: usize, unit_rank_bytes: usize) -> f64;
+
+    /// Forward time per batch [s] of device `i` this round.
+    fn forward_time(&self, i: usize, n_layers: usize) -> f64;
+}
+
+/// The pure derivation shared by both fleet views: every per-device
+/// quantity is computed from counter-based cells of a root stream, so
+/// device `i`'s round-`t` state never depends on any other device or
+/// on how many queries came before it.
+///
+/// Stream layout (all cells of `Rng::new(seed).child("fleet")`):
+///
+/// * `child("perm")`     — keys of the class-layout permutation
+/// * `cell("mode", i, epoch)` — DVFS mode draw, `epoch = t / reshuffle`
+/// * `cell("fade", i, t)`     — AR(1) innovation ε of round `t`
+/// * `cell("obs",  i, t≪32|k)` — noise of the k-th observation in `t`
+#[derive(Debug, Clone)]
+struct FleetCore {
+    config: FleetConfig,
+    n: usize,
+    root: Rng,
+    perm: IndexPerm,
+    /// Per-device count of `observe` calls within the current round —
+    /// repeated same-round observations must draw fresh noise, so the
+    /// call index is part of the cell address. Cleared every round;
+    /// holds only devices actually observed, so it stays O(cohort).
+    obs_calls: BTreeMap<usize, u64>,
+}
+
+impl FleetCore {
+    fn new(config: FleetConfig) -> FleetCore {
+        let root = Rng::new(config.seed).child("fleet");
+        let n = config.total();
+        let perm = IndexPerm::new(n, &mut root.child("perm"));
+        FleetCore { config, n, root, perm, obs_calls: BTreeMap::new() }
+    }
+
+    /// Class of device `i`: the permutation shuffles the sorted layout
+    /// (Tx2 block, then Nx, then Agx) so class counts stay exact.
+    fn class_of(&self, i: usize) -> DeviceClass {
+        let pos = self.perm.apply(i);
+        if pos < self.config.n_tx2 {
+            DeviceClass::Tx2
+        } else if pos < self.config.n_tx2 + self.config.n_nx {
+            DeviceClass::Nx
+        } else {
+            DeviceClass::Agx
+        }
+    }
+
+    /// Equal-size WiFi groups: 4 groups of n/4 (paper: 4 × 20).
+    fn group_of(&self, i: usize) -> usize {
+        ((i * 4) / self.n.max(1)).min(3)
+    }
+
+    /// DVFS mode of device `i` at `round` — constant within a
+    /// reshuffle epoch, redrawn when the epoch changes.
+    fn mode_of(&self, i: usize, round: usize) -> usize {
+        let rr = self.config.mode_reshuffle_rounds;
+        let epoch = if rr > 0 { round / rr } else { 0 };
+        let n_modes = self.class_of(i).n_modes();
+        self.root.cell("mode", i as u64, epoch as u64).range(0, n_modes)
+    }
+
+    /// Unit-normal AR(1) innovation of device `i` at round `t`.
+    fn fade_eps(&self, i: usize, t: usize) -> f64 {
+        self.root.cell("fade", i as u64, t as u64).normal()
+    }
+
+    /// Log-bandwidth deviation of device `i` at `round`, by running
+    /// the AR(1) recursion from its stationary start — O(round) per
+    /// query but pure, which is what keeps `advance_round` O(1).
+    fn deviation_of(&self, i: usize, round: usize) -> f64 {
+        let mut x = network::ar1_init(self.fade_eps(i, 0));
+        for t in 1..=round {
+            x = network::ar1_step(x, self.fade_eps(i, t));
+        }
+        x
+    }
+
+    fn device_at(&self, i: usize, round: usize) -> Device {
+        Device {
+            id: i,
+            compute: ComputeProfile::new(self.class_of(i), self.mode_of(i, round)),
+            net: NetworkModel::from_deviation(
+                self.group_of(i),
+                self.deviation_of(i, round),
+            ),
+        }
+    }
+
+    /// Unit-normal (ε_μ, ε_β) for the next observation of device `i`
+    /// this round.
+    fn observe_noise(&mut self, i: usize, round: usize) -> (f64, f64) {
+        let k = self.obs_calls.entry(i).or_insert(0);
+        let stream = ((round as u64) << 32) | (*k & 0xFFFF_FFFF);
+        *k += 1;
+        let mut r = self.root.cell("obs", i as u64, stream);
+        (r.normal(), r.normal())
+    }
+
+    fn measured(d: &Device, unit_rank_bytes: usize, noise: f64,
+                eps: (f64, f64)) -> (f64, f64) {
+        (
+            d.true_mu() * (1.0 + noise * eps.0).max(0.1),
+            d.true_beta(unit_rank_bytes) * (1.0 + noise * eps.1).max(0.1),
+        )
+    }
+
+    fn clear_round(&mut self) {
+        self.obs_calls.clear();
+    }
+}
+
+/// The eagerly materialized population.
 #[derive(Debug, Clone)]
 pub struct Fleet {
     pub devices: Vec<Device>,
     pub config: FleetConfig,
-    rng: Rng,
+    core: FleetCore,
+    /// Incrementally stepped AR(1) log-bandwidth deviations — the same
+    /// recursion [`FleetCore::deviation_of`] replays from scratch, so
+    /// the eager and lazy fading states agree bit for bit.
+    deviations: Vec<f64>,
     round: usize,
 }
 
 impl Fleet {
     pub fn new(config: FleetConfig) -> Fleet {
-        let mut rng = Rng::new(config.seed).child("fleet");
-        let mut classes = Vec::with_capacity(config.total());
-        classes.extend(std::iter::repeat(DeviceClass::Tx2).take(config.n_tx2));
-        classes.extend(std::iter::repeat(DeviceClass::Nx).take(config.n_nx));
-        classes.extend(std::iter::repeat(DeviceClass::Agx).take(config.n_agx));
-        // Randomly shuffle devices into WiFi groups (§6.1).
-        rng.shuffle(&mut classes);
-        let n = classes.len();
-        let devices = classes
-            .into_iter()
-            .enumerate()
-            .map(|(id, class)| {
-                let mode = rng.range(0, class.n_modes());
-                // Equal-size groups: 4 groups of n/4 (paper: 4 × 20).
-                let group = (id * 4) / n.max(1);
-                Device {
-                    id,
-                    compute: ComputeProfile::new(class, mode),
-                    net: NetworkModel::new(group.min(3), &mut rng),
-                }
-            })
-            .collect();
-        Fleet { devices, config, rng, round: 0 }
-    }
-
-    pub fn len(&self) -> usize {
-        self.devices.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.devices.is_empty()
-    }
-
-    /// Advance to the next round: WiFi fading every round, DVFS mode
-    /// resample every `mode_reshuffle_rounds`.
-    pub fn advance_round(&mut self) {
-        self.round += 1;
-        let reshuffle = self.config.mode_reshuffle_rounds > 0
-            && self.round % self.config.mode_reshuffle_rounds == 0;
-        for d in &mut self.devices {
-            d.net.step(&mut self.rng);
-            if reshuffle {
-                let m = d.compute.class.n_modes();
-                d.compute.mode = self.rng.range(0, m);
-            }
-        }
-    }
-
-    /// Noisy status report (μ̂, β̂) for device `i` this round.
-    pub fn observe(&mut self, i: usize, unit_rank_bytes: usize)
-                   -> (f64, f64) {
-        let noise = self.config.obs_noise;
-        let d = &self.devices[i];
-        let mu = d.true_mu() * (1.0 + noise * self.rng.normal()).max(0.1);
-        let beta = d.true_beta(unit_rank_bytes)
-            * (1.0 + noise * self.rng.normal()).max(0.1);
-        (mu, beta)
+        let core = FleetCore::new(config.clone());
+        let n = core.n;
+        let deviations: Vec<f64> =
+            (0..n).map(|i| network::ar1_init(core.fade_eps(i, 0))).collect();
+        let devices = (0..n).map(|i| core.device_at(i, 0)).collect();
+        Fleet { devices, config, core, deviations, round: 0 }
     }
 
     /// Table 1-style description (used by `legend fleet --describe`).
@@ -190,6 +318,106 @@ impl Fleet {
             mx / mn
         ));
         out
+    }
+}
+
+impl FleetView for Fleet {
+    fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn advance_round(&mut self) {
+        self.round += 1;
+        self.core.clear_round();
+        for (i, d) in self.devices.iter_mut().enumerate() {
+            self.deviations[i] = network::ar1_step(
+                self.deviations[i],
+                self.core.fade_eps(i, self.round),
+            );
+            d.net = NetworkModel::from_deviation(
+                self.core.group_of(i),
+                self.deviations[i],
+            );
+            d.compute.mode = self.core.mode_of(i, self.round);
+        }
+    }
+
+    fn observe(&mut self, i: usize, unit_rank_bytes: usize) -> (f64, f64) {
+        let eps = self.core.observe_noise(i, self.round);
+        FleetCore::measured(
+            &self.devices[i],
+            unit_rank_bytes,
+            self.config.obs_noise,
+            eps,
+        )
+    }
+
+    fn true_mu(&self, i: usize) -> f64 {
+        self.devices[i].true_mu()
+    }
+
+    fn true_beta(&self, i: usize, unit_rank_bytes: usize) -> f64 {
+        self.devices[i].true_beta(unit_rank_bytes)
+    }
+
+    fn forward_time(&self, i: usize, n_layers: usize) -> f64 {
+        self.devices[i].compute.forward_time(n_layers)
+    }
+}
+
+/// The on-demand population: no per-device storage at all. Each query
+/// derives the requested device's state closed-form from
+/// `(seed, device_id, round)`, so a million-device fleet costs the
+/// same as an empty one until the cohort touches it.
+#[derive(Debug, Clone)]
+pub struct LazyFleet {
+    pub config: FleetConfig,
+    core: FleetCore,
+    round: usize,
+}
+
+impl LazyFleet {
+    pub fn new(config: FleetConfig) -> LazyFleet {
+        let core = FleetCore::new(config.clone());
+        LazyFleet { config, core, round: 0 }
+    }
+
+    /// Materialize device `i` at the current round (for inspection —
+    /// the engines only go through [`FleetView`]).
+    pub fn device_at(&self, i: usize) -> Device {
+        self.core.device_at(i, self.round)
+    }
+}
+
+impl FleetView for LazyFleet {
+    fn len(&self) -> usize {
+        self.core.n
+    }
+
+    fn advance_round(&mut self) {
+        self.round += 1;
+        self.core.clear_round();
+    }
+
+    fn observe(&mut self, i: usize, unit_rank_bytes: usize) -> (f64, f64) {
+        let d = self.core.device_at(i, self.round);
+        let eps = self.core.observe_noise(i, self.round);
+        FleetCore::measured(&d, unit_rank_bytes, self.config.obs_noise, eps)
+    }
+
+    fn true_mu(&self, i: usize) -> f64 {
+        self.core.device_at(i, self.round).true_mu()
+    }
+
+    fn true_beta(&self, i: usize, unit_rank_bytes: usize) -> f64 {
+        self.core.device_at(i, self.round).true_beta(unit_rank_bytes)
+    }
+
+    fn forward_time(&self, i: usize, n_layers: usize) -> f64 {
+        self.core
+            .device_at(i, self.round)
+            .compute
+            .forward_time(n_layers)
     }
 }
 
@@ -259,9 +487,87 @@ mod tests {
     }
 
     #[test]
+    fn repeated_observations_draw_fresh_noise() {
+        let mut f = Fleet::new(FleetConfig::pretest());
+        let a = f.observe(0, 1024);
+        let b = f.observe(0, 1024);
+        assert_ne!(a, b, "same-round observations must not repeat");
+        // But the call sequence is reproducible from the seed.
+        let mut g = Fleet::new(FleetConfig::pretest());
+        assert_eq!(a, g.observe(0, 1024));
+        assert_eq!(b, g.observe(0, 1024));
+    }
+
+    #[test]
     fn sized_fleet_has_requested_total() {
         for n in [10, 16, 40, 80] {
             assert_eq!(Fleet::new(FleetConfig::sized(n)).len(), n);
         }
+    }
+
+    #[test]
+    fn sized_fleet_tracks_paper_proportions() {
+        // Largest-remainder apportionment: every class count is within
+        // one device of the exact n·w/80 share, and totals are exact —
+        // including sizes not divisible by 80.
+        for n in 1..=300usize {
+            let c = FleetConfig::sized(n);
+            assert_eq!(c.total(), n, "total mismatch at n={n}");
+            for (count, w) in
+                [(c.n_tx2, 30.0), (c.n_nx, 40.0), (c.n_agx, 10.0)]
+            {
+                let exact = n as f64 * w / 80.0;
+                assert!(
+                    (count as f64 - exact).abs() < 1.0,
+                    "n={n}: count {count} vs exact share {exact}"
+                );
+            }
+        }
+        // Spot-check the paper-adjacent sizes.
+        let c = FleetConfig::sized(80);
+        assert_eq!((c.n_tx2, c.n_nx, c.n_agx), (30, 40, 10));
+        let c = FleetConfig::sized(100);
+        assert_eq!((c.n_tx2, c.n_nx, c.n_agx), (38, 50, 12));
+        let c = FleetConfig::sized(10);
+        assert_eq!((c.n_tx2, c.n_nx, c.n_agx), (4, 5, 1));
+    }
+
+    #[test]
+    fn lazy_fleet_matches_eager_bitwise() {
+        let cfg = FleetConfig::pretest();
+        let mut eager = Fleet::new(cfg.clone());
+        let mut lazy = LazyFleet::new(cfg);
+        for round in 0..25 {
+            for i in 0..eager.len() {
+                let d = lazy.device_at(i);
+                assert_eq!(d.compute.class, eager.devices[i].compute.class);
+                assert_eq!(d.compute.mode, eager.devices[i].compute.mode,
+                           "mode drift at round {round} device {i}");
+                assert_eq!(d.net.bandwidth_mbps().to_bits(),
+                           eager.devices[i].net.bandwidth_mbps().to_bits(),
+                           "fading drift at round {round} device {i}");
+                assert_eq!(eager.observe(i, 1024), lazy.observe(i, 1024));
+            }
+            eager.advance_round();
+            lazy.advance_round();
+        }
+    }
+
+    #[test]
+    fn lazy_advance_round_is_population_independent() {
+        // advance_round must not touch per-device state: a fleet of a
+        // million devices advances as cheaply as one of ten, and the
+        // answer for a probed device is unchanged by fleet size probes
+        // of other devices.
+        let mut big = LazyFleet::new(FleetConfig {
+            seed: 7,
+            ..FleetConfig::sized(1_000_000)
+        });
+        for _ in 0..5 {
+            big.advance_round();
+        }
+        let a = big.device_at(123_456).net.bandwidth_mbps();
+        let b = big.device_at(123_456).net.bandwidth_mbps();
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 }

@@ -13,6 +13,6 @@ pub mod fleet;
 pub mod network;
 pub mod profile;
 
-pub use fleet::{Device, Fleet, FleetConfig};
+pub use fleet::{Device, Fleet, FleetConfig, FleetView, LazyFleet};
 pub use network::NetworkModel;
 pub use profile::{ComputeProfile, DeviceClass};

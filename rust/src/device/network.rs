@@ -30,6 +30,22 @@ pub fn mean_bandwidth_mbps(distance_m: f64) -> f64 {
     bw.clamp(BW_MIN_MBPS, BW_MAX_MBPS)
 }
 
+/// Stationary std-dev of the AR(1) log-bandwidth deviation.
+pub fn stat_sigma() -> f64 {
+    AR_SIGMA / (1.0 - AR_RHO * AR_RHO).sqrt()
+}
+
+/// Round-0 deviation from its unit-normal innovation (stationary start).
+pub fn ar1_init(eps0: f64) -> f64 {
+    stat_sigma() * eps0
+}
+
+/// One AR(1) round of the deviation: x_t from x_{t-1} and the round's
+/// unit-normal innovation.
+pub fn ar1_step(x: f64, eps: f64) -> f64 {
+    AR_RHO * x + AR_SIGMA * eps
+}
+
 /// Per-device AR(1) fading state.
 #[derive(Debug, Clone)]
 pub struct NetworkModel {
@@ -48,6 +64,17 @@ impl NetworkModel {
             AR_SIGMA / (1.0 - AR_RHO * AR_RHO).sqrt();
         let log_bw = log_mean + stationary_sigma * rng.normal();
         NetworkModel { group, log_mean, log_bw }
+    }
+
+    /// Build the fading state from a known log-bandwidth deviation `x`
+    /// around the group mean. Where `new`/`step` mutate draw by draw,
+    /// this is pure in `(group, x)` — the entry point for the fleet's
+    /// counter-based closed-form derivation, with `x` produced by
+    /// [`ar1_init`]/[`ar1_step`] over a per-device innovation stream.
+    pub fn from_deviation(group: usize, x: f64) -> Self {
+        assert!(group < GROUP_DISTANCES_M.len());
+        let log_mean = mean_bandwidth_mbps(GROUP_DISTANCES_M[group]).ln();
+        NetworkModel { group, log_mean, log_bw: log_mean + x }
     }
 
     /// Advance one round of fading; returns the new bandwidth [Mb/s].
@@ -120,6 +147,32 @@ mod tests {
         }
         let rho = num / den;
         assert!(rho > 0.4, "lag-1 autocorr {rho} too low for AR(1)");
+    }
+
+    #[test]
+    fn deviation_form_tracks_absolute_recursion() {
+        // x_t = ρ·x_{t-1} + σ·ε reproduces (up to float reassociation)
+        // the absolute-form step() driven by the same innovations.
+        let mut rng = Rng::new(21);
+        let mut abs = NetworkModel::new(2, &mut rng);
+        // Replay the init draw to recover ε_0 for the deviation form.
+        let mut replay = Rng::new(21);
+        let eps0 = replay.normal();
+        let mut x = ar1_init(eps0);
+        for _ in 0..50 {
+            let eps = replay.normal();
+            abs.step(&mut rng);
+            x = ar1_step(x, eps);
+            let dev = NetworkModel::from_deviation(2, x);
+            assert!(
+                (dev.bandwidth_mbps() - abs.bandwidth_mbps()).abs() < 1e-9,
+                "deviation form drifted from absolute form"
+            );
+        }
+        // Zero deviation sits exactly on the group mean.
+        let at_mean = NetworkModel::from_deviation(1, 0.0);
+        let want = mean_bandwidth_mbps(GROUP_DISTANCES_M[1]);
+        assert!((at_mean.bandwidth_mbps() - want).abs() < 1e-12);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::coordinator::strategy::{self, Strategy};
 use crate::coordinator::trainer::PjrtTrainer;
 use crate::coordinator::{run_federated_with, FedConfig, ModelMeta};
 use crate::data::Spec;
-use crate::device::{Fleet, FleetConfig};
+use crate::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use crate::metrics::RunRecord;
 use crate::model::state::{init_trainable, TensorMap};
 use crate::runtime::Runtime;
@@ -66,13 +66,17 @@ impl ExpEnv {
             "adapter" => "adapter",
             _ => "lora",
         };
-        let mut fleet = Fleet::new(FleetConfig {
-            seed: cfg.seed,
-            ..fleet_cfg.clone()
-        });
+        // Lazy fleets derive devices on demand — bit-identical to the
+        // eager build (property-tested), but O(cohort) memory.
+        let fc = FleetConfig { seed: cfg.seed, ..fleet_cfg.clone() };
+        let mut fleet: Box<dyn FleetView> = if cfg.lazy_fleet {
+            Box::new(LazyFleet::new(fc))
+        } else {
+            Box::new(Fleet::new(fc))
+        };
         let mut trainer = PjrtTrainer::new(&self.rt, family, cfg.seed);
         let global = self.fresh_global(family, cfg.seed);
-        run_federated_with(cfg, &mut fleet, strategy, &mut trainer,
+        run_federated_with(cfg, fleet.as_mut(), strategy, &mut trainer,
                            &self.meta, &self.spec, global, participation)
     }
 

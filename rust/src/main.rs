@@ -2,13 +2,18 @@
 //!
 //! Subcommands:
 //!   run    one federated run:   legend run --method legend --task sst2
-//!          participation: --participation full|sample|deadline
-//!          (--sample-frac F, --deadline-factor F), phase-④ worker
-//!          threads: --threads N (0 = auto), aggregation fold shards:
-//!          --agg-shards S (0 = auto, 1 = inline), in-flight window:
-//!          --window W (0 = unbounded; bounds per-round transient
-//!          memory to O(model + W)). Results are bit-identical at
-//!          every threads × agg-shards × window setting.
+//!          participation: --participation full|sample|count|deadline
+//!          (--sample-frac F, --sample-count K, --deadline-factor F),
+//!          phase-④ worker threads: --threads N (0 = auto),
+//!          aggregation fold shards: --agg-shards S (0 = auto,
+//!          1 = inline), in-flight window: --window W (0 = unbounded;
+//!          bounds per-round transient memory to O(model + W)),
+//!          edge-aggregation tier: --edge-aggregators E (cohort folds
+//!          across E concurrent edge folds, merged at the root),
+//!          lazy fleet: --lazy derives devices on demand so a
+//!          million-device fleet costs O(cohort) memory. Results are
+//!          bit-identical at every threads × agg-shards × window ×
+//!          edge-aggregators setting, lazy or eager.
 //!          Async rounds: --async switches to the staleness-windowed
 //!          engine (devices fold whenever they finish, weighted by
 //!          1/(1+τ)^α); --staleness-alpha A (α ≥ 0) and
@@ -55,6 +60,9 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         threads: args.get_parse("threads", d.threads)?,
         agg_shards: args.get_parse("agg-shards", d.agg_shards)?,
         window: args.get_parse("window", d.window)?,
+        edge_aggregators: args
+            .get_parse("edge-aggregators", d.edge_aggregators)?,
+        lazy_fleet: args.flag("lazy"),
         async_mode: args.flag("async"),
         staleness_alpha: args
             .get_parse("staleness-alpha", d.staleness_alpha)?,
@@ -73,10 +81,12 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
 fn participation_from(args: &Args)
                       -> Result<Box<dyn participation::Participation>> {
     let name = args.get_choice("participation", "full",
-                               &["full", "sample", "deadline"])?;
+                               &["full", "sample", "count", "deadline"])?;
     let frac = args.get_parse("sample-frac", 0.3f64)?;
+    let count = args.get_parse("sample-count", 10usize)?;
     let factor = args.get_parse("deadline-factor", 1.5f64)?;
-    participation::by_name(&name, frac, factor).map_err(|e| anyhow!(e))
+    participation::by_name(&name, frac, count, factor)
+        .map_err(|e| anyhow!(e))
 }
 
 fn run() -> Result<()> {

@@ -223,6 +223,34 @@ mod tests {
     }
 
     #[test]
+    fn scale_knobs_parse_and_default() {
+        // The `run` surface for the lazy fleet + edge-aggregation tier.
+        let a = parse(
+            "run --edge-aggregators 4 --participation count \
+             --sample-count 1000 --lazy",
+        );
+        assert_eq!(a.get_parse("edge-aggregators", 1usize).unwrap(), 4);
+        assert_eq!(a.get_parse("sample-count", 10usize).unwrap(), 1000);
+        assert_eq!(
+            a.get_choice("participation", "full",
+                         &["full", "sample", "count", "deadline"])
+                .unwrap(),
+            "count"
+        );
+        assert!(a.flag("lazy"));
+        assert!(a.reject_unknown().is_ok());
+        // Omitted: flat fold, eager fleet.
+        let b = parse("run");
+        assert_eq!(b.get_parse("edge-aggregators", 1usize).unwrap(), 1);
+        assert!(!b.flag("lazy"));
+        // Malformed values fail loudly.
+        let c = parse("run --edge-aggregators=-2");
+        assert!(c.get_parse("edge-aggregators", 1usize).is_err());
+        let d = parse("run --sample-count 1.5");
+        assert!(d.get_parse("sample-count", 10usize).is_err());
+    }
+
+    #[test]
     fn choice_validates_against_set() {
         let a = parse("run --participation sample");
         let choices = ["full", "sample", "deadline"];

@@ -21,6 +21,14 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Mix two words into one well-distributed word (golden-ratio multiply
+/// + splitmix64 finalizer) — the combiner behind counter-based cell
+/// streams.
+fn mix64(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
+    splitmix64(&mut s)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
@@ -166,6 +174,77 @@ impl Rng {
         }
         weights.len() - 1
     }
+
+    /// Counter-based cell stream: an independent child stream addressed
+    /// by `(tag, id, k)` instead of by draw order. Unlike [`Rng::child`]
+    /// chains, a cell is O(1) to open no matter how many other cells
+    /// exist — the foundation of the lazy fleet, where device `id`'s
+    /// round-`k` state must be derivable without touching any other
+    /// device. Pure in `(self seed, tag, id, k)`.
+    pub fn cell(&self, tag: &str, id: u64, k: u64) -> Rng {
+        let mut h: u64 = 0xcbf29ce484222325; // FNV-1a, as in `child`
+        for b in tag.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Rng::new(mix64(mix64(self.s[0] ^ h.rotate_left(17), id), k))
+    }
+}
+
+/// Deterministic pseudorandom permutation of `0..n` with O(1) queries —
+/// a 4-round Feistel network over the smallest even-bit-width domain
+/// `≥ n`, cycle-walking out-of-range values back into `0..n`. Lets the
+/// lazy fleet assign exact per-class device counts (a shuffled class
+/// layout) without materializing an n-element shuffle.
+#[derive(Debug, Clone)]
+pub struct IndexPerm {
+    n: u64,
+    half_bits: u32,
+    mask: u64,
+    keys: [u64; 4],
+}
+
+impl IndexPerm {
+    pub fn new(n: usize, rng: &mut Rng) -> IndexPerm {
+        let n = n as u64;
+        let mut half_bits = 1u32;
+        while (1u64 << (2 * half_bits)) < n {
+            half_bits += 1;
+        }
+        IndexPerm {
+            n: n.max(1),
+            half_bits,
+            mask: (1u64 << half_bits) - 1,
+            keys: [
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+            ],
+        }
+    }
+
+    fn feistel(&self, x: u64) -> u64 {
+        let (mut l, mut r) = (x >> self.half_bits, x & self.mask);
+        for key in self.keys {
+            let mut s = r ^ key;
+            let f = splitmix64(&mut s) & self.mask;
+            (l, r) = (r, l ^ f);
+        }
+        (l << self.half_bits) | r
+    }
+
+    /// Image of `i` under the permutation (i < n ⇒ result < n).
+    pub fn apply(&self, i: usize) -> usize {
+        debug_assert!((i as u64) < self.n);
+        let mut x = i as u64;
+        loop {
+            x = self.feistel(x);
+            if x < self.n {
+                return x as usize;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +329,47 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cell_streams_are_independent_and_reproducible() {
+        let root = Rng::new(42).child("fleet");
+        let draws = |r: &mut Rng| (0..4).map(|_| r.next_u64()).collect::<Vec<_>>();
+        let base = draws(&mut root.cell("fade", 7, 3));
+        // Same address → same stream; any coordinate change → different.
+        assert_eq!(base, draws(&mut root.cell("fade", 7, 3)));
+        assert_ne!(base, draws(&mut root.cell("fade", 7, 4)));
+        assert_ne!(base, draws(&mut root.cell("fade", 8, 3)));
+        assert_ne!(base, draws(&mut root.cell("mode", 7, 3)));
+        // Opening a cell does not disturb the parent (pure by &self).
+        assert_eq!(base, draws(&mut root.cell("fade", 7, 3)));
+    }
+
+    #[test]
+    fn index_perm_is_a_bijection() {
+        for n in [1usize, 5, 80, 256, 1000] {
+            let mut rng = Rng::new(9).child("perm");
+            let perm = IndexPerm::new(n, &mut rng);
+            let mut seen = vec![false; n];
+            for i in 0..n {
+                let j = perm.apply(i);
+                assert!(j < n, "perm({i}) = {j} out of range for n={n}");
+                assert!(!seen[j], "perm not injective at n={n}");
+                seen[j] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn index_perm_deterministic_and_seed_sensitive() {
+        let build = |seed: u64| {
+            let mut rng = Rng::new(seed).child("perm");
+            IndexPerm::new(80, &mut rng)
+        };
+        let (a, b, c) = (build(1), build(1), build(2));
+        let image = |p: &IndexPerm| (0..80).map(|i| p.apply(i)).collect::<Vec<_>>();
+        assert_eq!(image(&a), image(&b));
+        assert_ne!(image(&a), image(&c));
     }
 
     #[test]

@@ -2,13 +2,14 @@
 //! 80-device fleet with the mock trainer (fast, no artifacts), plus a
 //! real-PJRT mini federated run when artifacts are present.
 
-use legend::coordinator::participation::{DeadlineDrop, UniformSample};
+use legend::coordinator::participation::{DeadlineDrop, UniformCount,
+                                         UniformSample};
 use legend::coordinator::strategy::{self, Strategy};
 use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
 use legend::coordinator::{run_federated, run_federated_with, FedConfig,
                           ModelMeta};
 use legend::data::Spec;
-use legend::device::{Fleet, FleetConfig};
+use legend::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use legend::metrics::RunRecord;
 use legend::model::state::TensorMap;
 use legend::model::TensorSpec;
@@ -256,8 +257,9 @@ fn async_max_staleness_zero_matches_sync_on_the_paper_fleet() {
 
 #[test]
 fn failure_injection_empty_shard_is_rebalanced() {
-    // A fleet larger than the dataset forces the partitioner's
-    // min-shard rebalancing; the run must still complete.
+    // A fleet larger than the dataset forces the per-device shard
+    // derivation's one-batch floor (no device ever sees an empty
+    // shard); the run must still complete.
     let meta = ModelMeta::synthetic(12, 16, 32);
     let mut s = strategy::by_name("legend", 12, 16, 32).unwrap();
     let mut fleet = Fleet::new(FleetConfig::sized(16));
@@ -272,6 +274,74 @@ fn failure_injection_empty_shard_is_rebalanced() {
                             &meta, &toy_spec(), toy_global(&meta, 16))
         .unwrap();
     assert_eq!(rec.rounds.len(), 3);
+}
+
+#[test]
+fn lazy_fleet_with_edge_tier_matches_flat_eager_on_a_large_fleet() {
+    // Scale smoke at integration size: a 4 096-device lazy fleet with
+    // a 64-device sampled cohort and a 4-edge aggregation tier must
+    // reproduce — bitwise — the eager flat-fold run at the same seed.
+    let meta = ModelMeta::synthetic(12, 16, 32);
+    let run = |lazy: bool, edges: usize, threads: usize| -> RunRecord {
+        let mut s = strategy::by_name("legend", 12, 16, 32).unwrap();
+        let mut trainer = MockTrainer::new("lora");
+        let cfg = FedConfig {
+            rounds: 3,
+            train_size: 4096,
+            test_size: 64,
+            threads,
+            agg_shards: if threads > 1 { 2 } else { 1 },
+            edge_aggregators: edges,
+            ..Default::default()
+        };
+        let fc = FleetConfig { seed: cfg.seed,
+                               ..FleetConfig::sized(4096) };
+        let mut fleet: Box<dyn FleetView> = if lazy {
+            Box::new(LazyFleet::new(fc))
+        } else {
+            Box::new(Fleet::new(fc))
+        };
+        run_federated_with(
+            &cfg, fleet.as_mut(), s.as_mut(), &mut trainer, &meta,
+            &toy_spec(), toy_global(&meta, 16),
+            &mut UniformCount { count: 64 },
+        )
+        .unwrap()
+    };
+    let flat = run(false, 1, 1);
+    assert_eq!(flat.rounds.len(), 3);
+    assert!(flat.rounds.iter().all(|r| r.participants == 64));
+    for (lazy, edges, threads) in
+        [(true, 1, 1), (false, 4, 4), (true, 4, 4), (true, 8, 2)]
+    {
+        let rec = run(lazy, edges, threads);
+        assert_eq!(flat.to_json().to_string(),
+                   rec.to_json().to_string(),
+                   "lazy={lazy} edges={edges} threads={threads}");
+        assert_eq!(flat.to_csv_rows(), rec.to_csv_rows());
+    }
+}
+
+#[test]
+fn oversized_cohort_is_rejected() {
+    // `UniformCount` with count > n must surface an Err from the
+    // engine, not silently clamp or panic.
+    let meta = ModelMeta::synthetic(12, 16, 32);
+    let mut s = strategy::by_name("legend", 12, 16, 32).unwrap();
+    let mut fleet = Fleet::new(FleetConfig::sized(16));
+    let mut trainer = MockTrainer::new("lora");
+    let cfg = FedConfig {
+        rounds: 1,
+        train_size: 128,
+        test_size: 64,
+        ..Default::default()
+    };
+    let err = run_federated_with(
+        &cfg, &mut fleet, s.as_mut(), &mut trainer, &meta, &toy_spec(),
+        toy_global(&meta, 16),
+        &mut UniformCount { count: 17 },
+    );
+    assert!(err.is_err(), "cohort of 17 from a 16-device fleet");
 }
 
 // ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ use legend::coordinator::trainer::{DeviceTrainer, LocalOutcome,
                                    MockTrainer};
 use legend::coordinator::{run_federated, FedConfig, ModelMeta};
 use legend::data::Spec;
-use legend::device::{Fleet, FleetConfig};
+use legend::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use legend::data::{partition, Dataset, Example};
 use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
 use legend::model::state::TensorMap;
@@ -523,8 +523,12 @@ fn engine_run_cfg(method: &str, cfg: &FedConfig)
                   -> legend::metrics::RunRecord {
     let meta = ModelMeta::synthetic(L, R, 32);
     let mut s = fedstrategy::by_name(method, L, R, 32).unwrap();
-    let mut fleet =
-        Fleet::new(FleetConfig { seed: cfg.seed, ..FleetConfig::pretest() });
+    let fc = FleetConfig { seed: cfg.seed, ..FleetConfig::pretest() };
+    let mut fleet: Box<dyn FleetView> = if cfg.lazy_fleet {
+        Box::new(LazyFleet::new(fc))
+    } else {
+        Box::new(Fleet::new(fc))
+    };
     let mut trainer = MockTrainer::new(s.family());
     let global = TensorMap::zeros(&[
         TensorSpec {
@@ -533,9 +537,33 @@ fn engine_run_cfg(method: &str, cfg: &FedConfig)
         },
         TensorSpec { name: "head_w".into(), shape: vec![4, 2] },
     ]);
-    run_federated(cfg, &mut fleet, s.as_mut(), &mut trainer, &meta,
+    run_federated(cfg, fleet.as_mut(), s.as_mut(), &mut trainer, &meta,
                   &engine_spec(), global)
     .unwrap()
+}
+
+/// Like [`engine_run`]/[`engine_run_async`], but with the scale knobs
+/// (`edge_aggregators`, `lazy_fleet`) exposed.
+fn engine_run_scaled(method: &str, seed: u64, threads: usize,
+                     agg_shards: usize, window: usize, edges: usize,
+                     lazy: bool, async_mode: bool)
+                     -> legend::metrics::RunRecord {
+    let cfg = FedConfig {
+        rounds: 3,
+        train_size: 256,
+        test_size: 64,
+        seed,
+        threads,
+        agg_shards,
+        window,
+        edge_aggregators: edges,
+        lazy_fleet: lazy,
+        async_mode,
+        staleness_alpha: 0.5,
+        max_staleness: if async_mode { 2 } else { 0 },
+        ..Default::default()
+    };
+    engine_run_cfg(method, &cfg)
 }
 
 fn engine_run(method: &str, seed: u64, threads: usize,
@@ -600,6 +628,122 @@ fn prop_engine_output_invariant_under_threads_shards_window() {
             "{method} seed {seed}: CSV differs at threads={threads} \
              shards={shards} window={window}"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lazy_fleet_matches_eager_fleet_bitwise() {
+    // A LazyFleet derives every per-device quantity on demand from
+    // (seed, device_id) counter streams; the eager Fleet materializes
+    // the same streams up front. Both must agree BITWISE — profiles
+    // (μ, β via the DVFS mode), AR(1) fading across rounds, forward
+    // times, and the noisy capacity observations — on the 80- and
+    // 256-device paper-proportioned configs, probed in the same
+    // interleaved order a round loop would use.
+    check("lazy-fleet-bitwise", 8, |rng, case| {
+        let n = [80usize, 256][case % 2];
+        let seed = rng.next_u64() % 1_000_003;
+        let fc = FleetConfig { seed, ..FleetConfig::sized(n) };
+        let mut eager = Fleet::new(fc.clone());
+        let mut lazy = LazyFleet::new(fc);
+        prop_assert!(eager.len() == n && lazy.len() == n, "len");
+        let unit = 4 * 128 * 4;
+        for round in 0..5usize {
+            if round > 0 {
+                eager.advance_round();
+                lazy.advance_round();
+            }
+            // Probe a scattered cohort, not just a prefix: the lazy
+            // derivation must not depend on visiting devices in order.
+            for &i in &[0, 1, n / 3, n / 2, n - 2, n - 1] {
+                prop_assert!(
+                    eager.true_mu(i).to_bits() == lazy.true_mu(i).to_bits(),
+                    "μ diverged at device {i} round {round} seed {seed}"
+                );
+                prop_assert!(
+                    eager.true_beta(i, unit).to_bits()
+                        == lazy.true_beta(i, unit).to_bits(),
+                    "β diverged at device {i} round {round} seed {seed}"
+                );
+                prop_assert!(
+                    eager.forward_time(i, L).to_bits()
+                        == lazy.forward_time(i, L).to_bits(),
+                    "fwd diverged at device {i} round {round} seed {seed}"
+                );
+                let (mu_a, beta_a) = eager.observe(i, unit);
+                let (mu_b, beta_b) = lazy.observe(i, unit);
+                prop_assert!(
+                    mu_a.to_bits() == mu_b.to_bits()
+                        && beta_a.to_bits() == beta_b.to_bits(),
+                    "μ̂/β̂ diverged at device {i} round {round} seed {seed}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lazy_fleet_run_record_matches_eager_bitwise() {
+    // End-to-end: a federated run over a LazyFleet reproduces the
+    // eager fleet's RunRecord BITWISE at the same seed — sync and
+    // async, under concurrency (threads/shards/window) and with the
+    // edge tier on — so `--lazy` is purely a memory optimization.
+    let methods = ["legend", "fedlora", "fedadapter"];
+    check("lazy-fleet-run-invariance", 6, |rng, case| {
+        let method = methods[case % methods.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        for async_mode in [false, true] {
+            let eager = engine_run_scaled(method, seed, 1, 1, 0, 1,
+                                          false, async_mode);
+            let lazy = engine_run_scaled(method, seed, 4, 2, 2, 4,
+                                         true, async_mode);
+            prop_assert!(
+                eager.to_json().to_string() == lazy.to_json().to_string(),
+                "{method} seed {seed} async={async_mode}: lazy JSON \
+                 diverged from eager"
+            );
+            prop_assert!(
+                eager.to_csv_rows() == lazy.to_csv_rows(),
+                "{method} seed {seed} async={async_mode}: lazy CSV \
+                 diverged from eager"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_aggregators_reproduce_flat_fold_bitwise() {
+    // The hierarchical edge tier partitions the cohort into E
+    // deterministic slices, folds each on its own edge aggregator and
+    // merges the edges ascending at the root. Because the fold runs in
+    // fixed point, every E ∈ {2,4,8} must reproduce the flat (E = 1)
+    // RunRecord BITWISE — sync and async.
+    let methods = ["legend", "hetlora", "fedadapter"];
+    check("edge-tier-invariance", 6, |rng, case| {
+        let method = methods[case % methods.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        for async_mode in [false, true] {
+            let flat = engine_run_scaled(method, seed, 1, 1, 0, 1,
+                                         false, async_mode);
+            let want = flat.to_json().to_string();
+            for edges in [2usize, 4, 8] {
+                let got = engine_run_scaled(method, seed, 4, 2, 2,
+                                            edges, false, async_mode);
+                prop_assert!(
+                    got.to_json().to_string() == want,
+                    "{method} seed {seed} async={async_mode}: edge \
+                     tier E={edges} diverged from the flat fold"
+                );
+                prop_assert!(
+                    got.to_csv_rows() == flat.to_csv_rows(),
+                    "{method} seed {seed} async={async_mode}: edge \
+                     tier E={edges} CSV diverged"
+                );
+            }
+        }
         Ok(())
     });
 }

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_engine.json against the committed baseline.
+
+The engine bench (rust/benches/bench_main.rs) writes BENCH_engine.json
+at the workspace root; BENCH_baseline.json is the committed reference.
+This helper compares the two so a PR's bench run can be sanity-checked
+without eyeballing raw JSON:
+
+    python3 scripts/bench_diff.py BENCH_engine.json
+    python3 scripts/bench_diff.py --strict --tolerance 0.5 BENCH_engine.json
+    python3 scripts/bench_diff.py --update BENCH_engine.json
+
+Semantics:
+  * Numeric leaves are compared pairwise by JSON path. Wall-clock
+    numbers are noisy across runners, so a regression is only flagged
+    when the new value exceeds baseline * (1 + tolerance).
+  * `rss_ratio` is special-cased as a hard bound: the lazy-fleet
+    acceptance criterion is peak RSS within 10x of the eager-80 run,
+    independent of runner speed.
+  * A null (or absent) baseline leaf is skipped with a note — the
+    committed baseline starts life unmeasured and is filled in from a
+    CI artifact with --update, which trims the measurement doc onto
+    the baseline schema (keys the baseline doesn't know are dropped).
+  * Exit code is non-zero only under --strict; the default mode is
+    informational so local runs on slow machines don't fail.
+
+Stdlib only — the container has no third-party Python packages.
+"""
+
+import argparse
+import json
+import sys
+
+RSS_RATIO_BOUND = 10.0  # acceptance: lazy peak RSS <= 10x eager-80
+
+
+def leaves(node, path=""):
+    """Yield (json_path, value) for every scalar leaf."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from leaves(node[k], f"{path}.{k}" if path else k)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from leaves(v, f"{path}[{i}]")
+    else:
+        yield path, node
+
+
+def compare(baseline, current, tolerance):
+    """Return (regressions, improvements, skipped) leaf lists."""
+    base = dict(leaves(baseline))
+    regressions, improvements, skipped = [], [], []
+    for path, cur in leaves(current):
+        if path.endswith(".note") or path == "note":
+            continue
+        ref = base.get(path)
+        if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+            continue
+        if path.endswith("rss_ratio"):
+            if cur > RSS_RATIO_BOUND:
+                regressions.append((path, RSS_RATIO_BOUND, cur))
+            else:
+                improvements.append((path, RSS_RATIO_BOUND, cur))
+            continue
+        if ref is None or not isinstance(ref, (int, float)):
+            skipped.append(path)
+            continue
+        # Counts/config echoes (devices, rounds, ...) must match exactly;
+        # only *_ms / *_s / *_kb measurements get the noise tolerance.
+        noisy = any(path.endswith(s)
+                    for s in ("_ms", "_s", "_kb", "speedup"))
+        if noisy:
+            if cur > ref * (1.0 + tolerance):
+                regressions.append((path, ref, cur))
+            elif cur < ref:
+                improvements.append((path, ref, cur))
+        elif cur != ref:
+            regressions.append((path, ref, cur))
+    return regressions, improvements, skipped
+
+
+def trim_onto(schema, measured):
+    """Copy measured values onto the baseline schema, keeping only the
+    keys the schema already declares (the 'trimmed' baseline)."""
+    if isinstance(schema, dict):
+        out = {}
+        for k, v in schema.items():
+            if k == "note":
+                out[k] = v
+            elif isinstance(measured, dict) and k in measured:
+                out[k] = trim_onto(v, measured[k])
+            else:
+                out[k] = v
+        return out
+    if isinstance(schema, list) and isinstance(measured, list):
+        return [trim_onto(s, m) for s, m in zip(schema, measured)]
+    return measured if measured is not None else schema
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("engine_json", nargs="?",
+                    default="BENCH_engine.json",
+                    help="fresh bench output (default: BENCH_engine.json)")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed relative slowdown for timings "
+                         "(default 0.5 = 50%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any regression")
+    ap.add_argument("--update", action="store_true",
+                    help="trim the measurement onto the baseline "
+                         "schema and rewrite it")
+    args = ap.parse_args()
+
+    try:
+        with open(args.engine_json) as f:
+            current = json.load(f)
+    except OSError as e:
+        print(f"cannot read {args.engine_json}: {e}")
+        return 1
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except OSError as e:
+        print(f"no baseline ({e}); nothing to diff against")
+        return 0
+
+    if args.update:
+        updated = trim_onto(baseline, current)
+        with open(args.baseline, "w") as f:
+            json.dump(updated, f, indent=2)
+            f.write("\n")
+        print(f"updated {args.baseline} from {args.engine_json}")
+        return 0
+
+    regressions, improvements, skipped = compare(
+        baseline, current, args.tolerance)
+    for path, ref, cur in improvements:
+        print(f"  ok        {path}: {ref} -> {cur}")
+    for path in skipped:
+        print(f"  skipped   {path}: baseline unmeasured")
+    for path, ref, cur in regressions:
+        print(f"  REGRESSED {path}: {ref} -> {cur}")
+    print(f"{len(regressions)} regression(s), "
+          f"{len(improvements)} ok, {len(skipped)} unmeasured")
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
