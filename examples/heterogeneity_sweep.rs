@@ -10,6 +10,11 @@
 //!
 //! Run:  cargo run --release --example heterogeneity_sweep
 
+// Wall-clock here only reports how long the sweep itself took; it
+// never feeds simulation state, so the determinism contract's
+// wall-clock ban does not apply.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use legend::coordinator::engine::effective_threads;

@@ -15,6 +15,11 @@
 //!  * artifact-backed (skipped when artifacts/ absent): PJRT train
 //!    step (L1+L2 hot path), eval batch, one real federated round.
 
+// Measuring wall-clock time is this harness's entire job; timings are
+// reported, never folded into simulation state, so the determinism
+// contract's wall-clock ban does not apply here.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use legend::coordinator::aggregation::{aggregate, DeviceUpdate,

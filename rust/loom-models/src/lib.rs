@@ -1,0 +1,380 @@
+//! Loom models of the legend crate's two handoff protocols.
+//!
+//! The determinism contract says results must be bit-identical at
+//! every `threads × agg-shards × window` setting; the runtime oracle
+//! harness checks that on the schedules the OS happens to produce.
+//! These models re-state the two protocols that *create* those
+//! schedules in miniature and let loom enumerate every interleaving:
+//!
+//! 1. [`window_model`] — `engine::train_parallel`'s in-flight window:
+//!    an atomic claim cursor, a `Mutex<usize>` fold cursor with a
+//!    `Condvar` parking workers that run ahead of the window, a
+//!    reorder buffer delivering outcomes in job-index order, and the
+//!    abort flag set *under the cursor lock* so a parked worker can
+//!    never miss the wake-up. Checked properties: outcomes reach the
+//!    sink in job-index order with the buffer never exceeding the
+//!    window, and an aborted round terminates (no lost-wakeup
+//!    deadlock).
+//! 2. [`shard_model`] — `aggregation::ShardedAggregator`'s fan-out:
+//!    each update is broadcast to every shard over a bounded queue
+//!    (back-pressure instead of unbounded growth), each shard folds
+//!    its disjoint element subset in arrival order, and `finish`
+//!    merges shards in shard-index order. Checked properties: every
+//!    shard sees the full stream in push order, the close/join
+//!    handshake terminates, and the shard-order merge equals the
+//!    flat sequential fold.
+//!
+//! The models use integer "quantized" contributions — like the Q60
+//! fold, addition here is exactly associative, so equality checks are
+//! bit-exact by construction and the thing under test is purely the
+//! synchronization protocol.
+//!
+//! Kept deliberately tiny (≤ 3 threads, ≤ 3 messages): loom explores
+//! the full interleaving space, which grows combinatorially.
+
+#[cfg(loom)]
+use loom::{
+    sync::{
+        atomic::{AtomicBool, AtomicUsize, Ordering},
+        Arc, Condvar, Mutex,
+    },
+    thread,
+};
+#[cfg(not(loom))]
+use std::{
+    sync::{
+        atomic::{AtomicBool, AtomicUsize, Ordering},
+        Arc, Condvar, Mutex,
+    },
+    thread,
+};
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// Run `f` under loom's exhaustive scheduler when built with
+/// `--cfg loom`, or once on std sync otherwise.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    #[cfg(loom)]
+    loom::model(f);
+    #[cfg(not(loom))]
+    f();
+}
+
+// ---------------------------------------------------------------------------
+// Model 1: train_parallel's in-flight window
+// ---------------------------------------------------------------------------
+
+const N_JOBS: usize = 3;
+const WINDOW: usize = 1;
+const WORKERS: usize = 2;
+
+/// Unbounded result channel (stands in for `mpsc::channel`): a deque
+/// plus a live-sender count so the receiver can observe closure.
+struct ResultChan {
+    state: Mutex<(VecDeque<(usize, Result<u64, ()>)>, usize)>,
+    ready: Condvar,
+}
+
+impl ResultChan {
+    fn new(senders: usize) -> Self {
+        ResultChan {
+            state: Mutex::new((VecDeque::new(), senders)),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn send(&self, msg: (usize, Result<u64, ()>)) {
+        self.state.lock().unwrap().0.push_back(msg);
+        self.ready.notify_all();
+    }
+
+    fn sender_done(&self) {
+        self.state.lock().unwrap().1 -= 1;
+        self.ready.notify_all();
+    }
+
+    fn recv(&self) -> Option<(usize, Result<u64, ()>)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.0.pop_front() {
+                return Some(m);
+            }
+            if st.1 == 0 {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+}
+
+struct WindowShared {
+    next: AtomicUsize,
+    abort: AtomicBool,
+    cursor: Mutex<usize>,
+    unblock: Condvar,
+    results: ResultChan,
+}
+
+/// One worker of `train_parallel`: claim a job off the atomic cursor,
+/// park while it is more than `WINDOW` ahead of the fold cursor, "run"
+/// it (a pure function of the index; `fail_at` injects the error
+/// path), and send the outcome.
+fn window_worker(sh: &WindowShared, fail_at: Option<usize>) {
+    loop {
+        if sh.abort.load(Ordering::Relaxed) {
+            break;
+        }
+        let i = sh.next.fetch_add(1, Ordering::Relaxed);
+        if i >= N_JOBS {
+            break;
+        }
+        {
+            let mut c = sh.cursor.lock().unwrap();
+            while i >= (*c).saturating_add(WINDOW) {
+                if sh.abort.load(Ordering::Relaxed) {
+                    sh.results.sender_done();
+                    return;
+                }
+                c = sh.unblock.wait(c).unwrap();
+            }
+        }
+        let out = if fail_at == Some(i) {
+            Err(())
+        } else {
+            Ok((i as u64 + 1) * 10)
+        };
+        if out.is_err() {
+            sh.abort.store(true, Ordering::Relaxed);
+        }
+        sh.results.send((i, out));
+    }
+    sh.results.sender_done();
+}
+
+/// The receiver half: drain the channel, re-serialize through the
+/// reorder buffer, advance the fold cursor under the mutex, signal
+/// parked workers. Returns (delivered-in-order, max buffer depth,
+/// first failed index).
+fn window_receiver(
+    sh: &WindowShared,
+) -> (Vec<(usize, u64)>, usize, Option<usize>) {
+    let mut pending: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut delivered = Vec::new();
+    let mut next_k = 0usize;
+    let mut max_pending = 0usize;
+    let mut failed: Option<usize> = None;
+    while let Some((i, res)) = sh.results.recv() {
+        match res {
+            Ok(out) if failed.is_none() => {
+                pending.insert(i, out);
+                max_pending = max_pending.max(pending.len());
+                while let Some(out) = pending.remove(&next_k) {
+                    delivered.push((next_k, out));
+                    next_k += 1;
+                    *sh.cursor.lock().unwrap() = next_k;
+                    sh.unblock.notify_all();
+                }
+            }
+            Ok(_) => {}
+            Err(()) => {
+                if failed.map_or(true, |j| i < j) {
+                    failed = Some(i);
+                }
+                // Set abort under the cursor lock so a worker that
+                // read `abort == false` just before parking cannot
+                // sleep through the wake-up.
+                let _c = sh.cursor.lock().unwrap();
+                sh.abort.store(true, Ordering::Relaxed);
+                sh.unblock.notify_all();
+            }
+        }
+    }
+    (delivered, max_pending, failed)
+}
+
+/// Run the full protocol once; return the receiver's observations.
+pub fn window_model(
+    fail_at: Option<usize>,
+) -> (Vec<(usize, u64)>, usize, Option<usize>) {
+    let sh = Arc::new(WindowShared {
+        next: AtomicUsize::new(0),
+        abort: AtomicBool::new(false),
+        cursor: Mutex::new(0),
+        unblock: Condvar::new(),
+        results: ResultChan::new(WORKERS),
+    });
+    let handles: Vec<_> = (0..WORKERS)
+        .map(|_| {
+            let sh = Arc::clone(&sh);
+            thread::spawn(move || window_worker(&sh, fail_at))
+        })
+        .collect();
+    let got = window_receiver(&sh);
+    for h in handles {
+        h.join().unwrap();
+    }
+    got
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: ShardedAggregator's bounded fan-out + shard-order merge
+// ---------------------------------------------------------------------------
+
+const N_SHARDS: usize = 2;
+const QUEUE_CAP: usize = 1;
+
+/// Bounded SPSC queue (stands in for `mpsc::sync_channel(cap)`):
+/// `send` back-pressures when full, `close` wakes the drain loop.
+struct BoundedChan {
+    state: Mutex<(VecDeque<(i64, i64)>, bool)>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl BoundedChan {
+    fn new() -> Self {
+        BoundedChan {
+            state: Mutex::new((VecDeque::new(), false)),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    fn send(&self, msg: (i64, i64)) {
+        let mut st = self.state.lock().unwrap();
+        while st.0.len() >= QUEUE_CAP {
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.0.push_back(msg);
+        self.not_empty.notify_all();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.not_empty.notify_all();
+    }
+
+    fn recv(&self) -> Option<(i64, i64)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.0.pop_front() {
+                self.not_full.notify_all();
+                return Some(m);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+}
+
+/// Run the sharded fold over `updates`: each update is a pair of
+/// already-quantized contributions, shard `s` owns component `s` (the
+/// disjoint element subsets of the real layout). Returns the merged
+/// per-shard sums (merge in shard-index order) and each shard's
+/// observed stream.
+pub fn shard_model(
+    updates: &[(i64, i64)],
+) -> (Vec<i64>, Vec<Vec<(i64, i64)>>) {
+    let chans: Vec<Arc<BoundedChan>> = (0..N_SHARDS)
+        .map(|_| Arc::new(BoundedChan::new()))
+        .collect();
+    let handles: Vec<_> = (0..N_SHARDS)
+        .map(|s| {
+            let rx = Arc::clone(&chans[s]);
+            thread::spawn(move || {
+                let mut acc = 0i64;
+                let mut seen = Vec::new();
+                while let Some(msg) = rx.recv() {
+                    acc += if s == 0 { msg.0 } else { msg.1 };
+                    seen.push(msg);
+                }
+                (acc, seen)
+            })
+        })
+        .collect();
+    // `push`: broadcast every update to every shard, in order.
+    for &u in updates {
+        for tx in &chans {
+            tx.send(u);
+        }
+    }
+    // `finish`: close the queues, then merge in shard-index order.
+    for tx in &chans {
+        tx.close();
+    }
+    let mut merged = Vec::new();
+    let mut streams = Vec::new();
+    for h in handles {
+        let (acc, seen) = h.join().unwrap();
+        merged.push(acc);
+        streams.push(seen);
+    }
+    (merged, streams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Happy path: every interleaving delivers outcomes to the sink
+    /// in job-index order, with the reorder buffer bounded by the
+    /// window.
+    #[test]
+    fn loom_window_parking_delivers_in_order() {
+        model(|| {
+            let (delivered, max_pending, failed) = window_model(None);
+            assert_eq!(failed, None);
+            assert_eq!(delivered, vec![(0, 10), (1, 20), (2, 30)]);
+            assert!(
+                max_pending <= WINDOW,
+                "reorder buffer exceeded window: {max_pending}"
+            );
+        });
+    }
+
+    /// Error path: a failing job aborts the round without deadlock —
+    /// in particular, a worker parked on the window condvar is always
+    /// woken (abort is set under the cursor lock). Loom fails this
+    /// test on any interleaving that deadlocks or loses a wakeup.
+    #[test]
+    fn loom_window_parking_abort_terminates() {
+        model(|| {
+            let (delivered, _, failed) = window_model(Some(0));
+            assert_eq!(failed, Some(0));
+            assert!(
+                delivered.is_empty(),
+                "nothing may reach the sink after job 0 failed"
+            );
+        });
+    }
+
+    /// Every interleaving of the bounded fan-out preserves per-shard
+    /// stream order and merges (in shard-index order) to exactly the
+    /// flat sequential fold — the protocol half of the bit-identity
+    /// argument; associativity is the integer fold's half.
+    #[test]
+    fn loom_shard_queue_merge_matches_flat_fold() {
+        model(|| {
+            let ups = [(1, 10), (2, 20), (3, 30)];
+            let (merged, streams) = shard_model(&ups);
+            // Flat fold, same order, no sharding.
+            let flat = vec![
+                ups.iter().map(|u| u.0).sum::<i64>(),
+                ups.iter().map(|u| u.1).sum::<i64>(),
+            ];
+            assert_eq!(merged, flat);
+            for (s, seen) in streams.iter().enumerate() {
+                assert_eq!(
+                    seen.as_slice(),
+                    &ups[..],
+                    "shard {s} saw a reordered stream"
+                );
+            }
+        });
+    }
+}

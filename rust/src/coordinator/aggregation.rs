@@ -1220,4 +1220,72 @@ mod tests {
             assert_eq!(out, whole, "split at {split} diverged");
         }
     }
+
+    #[test]
+    fn quantize_maps_nan_to_zero_and_saturates_infinities() {
+        assert_eq!(quantize(f64::NAN), 0);
+        assert_eq!(quantize(-f64::NAN), 0);
+        assert_eq!(quantize(f64::INFINITY), i128::MAX);
+        assert_eq!(quantize(f64::NEG_INFINITY), i128::MIN);
+    }
+
+    #[test]
+    fn quantize_saturates_exactly_at_the_q60_boundary() {
+        // i128::MAX as f64 rounds up to 2^127, so the first input the
+        // cast clamps is 2^127 / 2^60 = 2^67.
+        let edge = (1u128 << 67) as f64;
+        assert_eq!(quantize(edge), i128::MAX);
+        assert_eq!(quantize(edge * 4.0), i128::MAX);
+        assert_eq!(quantize(-edge), i128::MIN);
+        assert_eq!(quantize(-edge * 4.0), i128::MIN);
+        // One binade below the boundary is exact, not clamped.
+        assert_eq!(quantize((1u128 << 66) as f64), 1i128 << 126);
+    }
+
+    #[test]
+    fn quantize_rounds_half_away_from_zero() {
+        assert_eq!(quantize(0.5 / FP_SCALE), 1);
+        assert_eq!(quantize(-0.5 / FP_SCALE), -1);
+        assert_eq!(quantize(0.49 / FP_SCALE), 0);
+        assert_eq!(quantize(1.0), 1i128 << 60);
+    }
+
+    #[test]
+    fn quantize_is_sign_symmetric_in_range() {
+        for v in [0.0, 1e-12, 0.5, 1.5, 12345.678, 1e18,
+                  (1u128 << 66) as f64] {
+            assert_eq!(quantize(-v), -quantize(v), "v = {v}");
+        }
+        // Only at full saturation does the two's-complement
+        // asymmetry show: MIN = −MAX − 1.
+        assert_eq!(quantize(f64::NEG_INFINITY), -i128::MAX - 1);
+    }
+
+    #[test]
+    fn nan_contributions_fold_deterministically_to_zero() {
+        // A NaN element quantizes to 0, so it acts as "no signal"
+        // instead of poisoning the fold, and the result is identical
+        // wherever the NaN update sits in the stream.
+        let g = filled(0.0);
+        let mut bad = update(1.0, L, vec![R; L]);
+        for (_, v) in &mut bad.trainable.entries {
+            v[0] = f32::NAN;
+        }
+        let good = update(3.0, L, vec![R; L]);
+        let fold = |ups: &[&DeviceUpdate]| {
+            let mut a = StreamingAggregator::new(&g, L, R);
+            for u in ups {
+                a.push(&u.trainable, &u.config, u.weight);
+            }
+            let mut out = filled(0.0);
+            a.finish(&mut out);
+            out
+        };
+        let ab = fold(&[&bad, &good]);
+        let ba = fold(&[&good, &bad]);
+        assert_eq!(ab, ba);
+        for (_, v) in &ab.entries {
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
 }

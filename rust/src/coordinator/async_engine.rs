@@ -559,6 +559,7 @@ impl<'a> AsyncEngine<'a> {
             last_round_time = timing.round_time;
             let mut loss_sum = 0f64;
             for &(_, _, loss, _) in &folded {
+                // detlint-allow: float-accum `folded` is already in ascending device order
                 loss_sum += loss;
             }
             let mean_depth = folded

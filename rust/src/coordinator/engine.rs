@@ -497,6 +497,7 @@ impl<'a> RoundEngine<'a> {
                     transport.recv_update(i, &out.trainable, config,
                                           meta.n_layers, rank_dim);
                     loss_log_r.insert(i, (h, out.mean_loss));
+                    // detlint-allow: float-accum coordinator-thread fold in job-index order
                     *loss_sum_r += out.mean_loss;
                     agg_r.push(out.trainable, config, 1.0)
                 };

@@ -339,6 +339,7 @@ impl FedAdapter {
             }
             let drop = loss_in - loss_out;
             if drop.is_finite() {
+                // detlint-allow: float-accum feedback folds on one thread in cohort order
                 self.scores[c].0 += drop;
                 self.scores[c].1 += 1;
             }

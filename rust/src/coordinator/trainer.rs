@@ -112,14 +112,19 @@ impl DeviceTrainer for PjrtDevice<'_> {
         let shuffled = job.shard.shuffled(&mut self.state.rng);
         let batches = shuffled.batches(self.rt.manifest.dim.batch_size);
         let n = batches.len().min(job.max_batches.max(1));
-        let (mut loss_sum, mut correct, mut seen) = (0f64, 0f64, 0usize);
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut seen = 0usize;
         for (toks, labels) in batches.iter().take(n) {
+            // detlint-allow: float-accum per-device step counter advances in batch order
             self.state.step += 1.0;
             let stats = self.rt.train_step(
                 self.family, &mut session, &job.masks, toks, labels,
                 job.lr, self.state.step,
             )?;
+            // detlint-allow: float-accum one device's batches fold in fixed shard order
             loss_sum += stats.loss as f64;
+            // detlint-allow: float-accum one device's batches fold in fixed shard order
             correct += stats.correct as f64;
             seen += labels.len();
         }
@@ -228,10 +233,12 @@ impl DeviceTrainer for MockDevice {
         for _ in 0..n {
             for (_, v) in &mut out.entries {
                 for x in v.iter_mut() {
+                    // detlint-allow: float-accum fixed nudge applied in tensor-entry order
                     *x += 1e-3;
                 }
             }
         }
+        // detlint-allow: float-accum per-device progress scalar, single-owner handle
         self.progress += active * n as f64 * 0.01;
         Ok(LocalOutcome {
             trainable: out,

@@ -140,9 +140,11 @@ mod tests {
         let mut num = 0.0;
         let mut den = 0.0;
         for i in 0..n {
+            // detlint-allow: float-accum statistical test, seeded sequential loop
             num += (xs[i] - mean) * (xs[i + 1] - mean);
         }
         for x in &xs {
+            // detlint-allow: float-accum statistical test, seeded sequential loop
             den += (x - mean) * (x - mean);
         }
         let rho = num / den;
@@ -191,7 +193,9 @@ mod tests {
         let mut far = NetworkModel::new(3, &mut rng);
         let (mut a, mut b) = (0.0, 0.0);
         for _ in 0..300 {
+            // detlint-allow: float-accum statistical test, seeded sequential loop
             a += near.step(&mut rng);
+            // detlint-allow: float-accum statistical test, seeded sequential loop
             b += far.step(&mut rng);
         }
         assert!(a > b, "near {a} should beat far {b}");

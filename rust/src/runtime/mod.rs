@@ -18,7 +18,7 @@
 pub mod literal;
 pub mod session;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -53,7 +53,10 @@ pub struct Runtime {
     base_lits: Vec<xla::Literal>,
     /// Host copy of the base (for tests / inspection).
     base_host: Vec<Vec<f32>>,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Keyed by artifact name. Ordered map: any future iteration
+    /// (cache eviction, stats dumps) must be deterministically
+    /// ordered, per the detlint unordered-collection rule.
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
@@ -77,7 +80,7 @@ impl Runtime {
             manifest,
             base_lits,
             base_host,
-            executables: HashMap::new(),
+            executables: BTreeMap::new(),
         };
         for family in ["lora", "adapter"] {
             let fam = rt.manifest.family(family).clone();
@@ -208,8 +211,10 @@ impl Runtime {
                 .chain([&tok_lit, &lab_lit])
                 .collect();
             let outs = self.run_tupled(&fam.eval.artifact, &args)?;
+            // detlint-allow: float-accum eval batches reduce in fixed batch order on one thread
             loss_sum +=
                 outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
+            // detlint-allow: float-accum eval batches reduce in fixed batch order on one thread
             correct_sum +=
                 outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
         }

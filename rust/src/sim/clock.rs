@@ -115,7 +115,9 @@ impl VirtualClock {
     }
 
     pub fn advance(&mut self, timing: &RoundTiming) {
+        // detlint-allow: float-accum one advance per round on the coordinator thread
         self.elapsed += timing.round_time;
+        // detlint-allow: float-accum one advance per round on the coordinator thread
         self.waiting_sum += timing.avg_waiting;
         self.rounds += 1;
     }

@@ -17,10 +17,16 @@ Semantics:
   * `rss_ratio` is special-cased as a hard bound: the lazy-fleet
     acceptance criterion is peak RSS within 10x of the eager-80 run,
     independent of runner speed.
-  * A null (or absent) baseline leaf is skipped with a note — the
-    committed baseline starts life unmeasured and is filled in from a
-    CI artifact with --update, which trims the measurement doc onto
-    the baseline schema (keys the baseline doesn't know are dropped).
+  * A null baseline leaf means the committed baseline is unmeasured at
+    that path. It is reported with a clear message and, under --strict,
+    fails with a DISTINCT exit code (2) so CI can tell "baseline was
+    never populated" apart from "the code got slower" (exit 1). Fill
+    baselines in from a CI artifact with --update, which trims the
+    measurement doc onto the baseline schema (keys the baseline
+    doesn't know are dropped).
+  * A numeric baseline leaf that the current measurement no longer
+    reports is a regression (the bench silently stopped measuring
+    something the baseline tracks).
   * Exit code is non-zero only under --strict; the default mode is
     informational so local runs on slow machines don't fail.
 
@@ -32,6 +38,10 @@ import json
 import sys
 
 RSS_RATIO_BOUND = 10.0  # acceptance: lazy peak RSS <= 10x eager-80
+
+EXIT_OK = 0
+EXIT_REGRESSION = 1  # a measured value regressed (or went missing)
+EXIT_UNMEASURED = 2  # baseline has null leaves; populate with --update
 
 
 def leaves(node, path=""):
@@ -47,12 +57,14 @@ def leaves(node, path=""):
 
 
 def compare(baseline, current, tolerance):
-    """Return (regressions, improvements, skipped) leaf lists."""
+    """Return (regressions, improvements, unmeasured, missing)."""
     base = dict(leaves(baseline))
-    regressions, improvements, skipped = [], [], []
+    cur_paths = set()
+    regressions, improvements, unmeasured = [], [], []
     for path, cur in leaves(current):
         if path.endswith(".note") or path == "note":
             continue
+        cur_paths.add(path)
         ref = base.get(path)
         if not isinstance(cur, (int, float)) or isinstance(cur, bool):
             continue
@@ -63,7 +75,7 @@ def compare(baseline, current, tolerance):
                 improvements.append((path, RSS_RATIO_BOUND, cur))
             continue
         if ref is None or not isinstance(ref, (int, float)):
-            skipped.append(path)
+            unmeasured.append(path)
             continue
         # Counts/config echoes (devices, rounds, ...) must match exactly;
         # only *_ms / *_s / *_kb measurements get the noise tolerance.
@@ -76,7 +88,16 @@ def compare(baseline, current, tolerance):
                 improvements.append((path, ref, cur))
         elif cur != ref:
             regressions.append((path, ref, cur))
-    return regressions, improvements, skipped
+    # Numeric baseline leaves the current run no longer reports: the
+    # bench silently stopped measuring something the baseline tracks.
+    missing = [
+        path
+        for path, ref in sorted(base.items())
+        if isinstance(ref, (int, float)) and not isinstance(ref, bool)
+        and not (path.endswith(".note") or path == "note")
+        and path not in cur_paths
+    ]
+    return regressions, improvements, unmeasured, missing
 
 
 def trim_onto(schema, measured):
@@ -97,7 +118,7 @@ def trim_onto(schema, measured):
     return measured if measured is not None else schema
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("engine_json", nargs="?",
                     default="BENCH_engine.json",
@@ -107,24 +128,25 @@ def main():
                     help="allowed relative slowdown for timings "
                          "(default 0.5 = 50%%)")
     ap.add_argument("--strict", action="store_true",
-                    help="exit non-zero on any regression")
+                    help="exit 1 on any regression, 2 on an "
+                         "unmeasured (null) baseline leaf")
     ap.add_argument("--update", action="store_true",
                     help="trim the measurement onto the baseline "
                          "schema and rewrite it")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     try:
         with open(args.engine_json) as f:
             current = json.load(f)
     except OSError as e:
         print(f"cannot read {args.engine_json}: {e}")
-        return 1
+        return EXIT_REGRESSION
     try:
         with open(args.baseline) as f:
             baseline = json.load(f)
     except OSError as e:
         print(f"no baseline ({e}); nothing to diff against")
-        return 0
+        return EXIT_OK
 
     if args.update:
         updated = trim_onto(baseline, current)
@@ -132,19 +154,29 @@ def main():
             json.dump(updated, f, indent=2)
             f.write("\n")
         print(f"updated {args.baseline} from {args.engine_json}")
-        return 0
+        return EXIT_OK
 
-    regressions, improvements, skipped = compare(
+    regressions, improvements, unmeasured, missing = compare(
         baseline, current, args.tolerance)
     for path, ref, cur in improvements:
-        print(f"  ok        {path}: {ref} -> {cur}")
-    for path in skipped:
-        print(f"  skipped   {path}: baseline unmeasured")
+        print(f"  ok         {path}: {ref} -> {cur}")
+    for path in unmeasured:
+        print(f"  UNMEASURED {path}: baseline is null — populate it "
+              f"via `bench_diff.py --update` from a CI bench artifact")
+    for path in missing:
+        print(f"  MISSING    {path}: baseline tracks this leaf but "
+              f"the current run no longer reports it")
     for path, ref, cur in regressions:
-        print(f"  REGRESSED {path}: {ref} -> {cur}")
-    print(f"{len(regressions)} regression(s), "
-          f"{len(improvements)} ok, {len(skipped)} unmeasured")
-    return 1 if (args.strict and regressions) else 0
+        print(f"  REGRESSED  {path}: {ref} -> {cur}")
+    print(f"{len(regressions)} regression(s), {len(missing)} missing, "
+          f"{len(improvements)} ok, {len(unmeasured)} unmeasured")
+    if args.strict and (regressions or missing):
+        return EXIT_REGRESSION
+    if args.strict and unmeasured:
+        print(f"strict mode: {len(unmeasured)} unmeasured baseline "
+              f"leaf/leaves (exit {EXIT_UNMEASURED})")
+        return EXIT_UNMEASURED
+    return EXIT_OK
 
 
 if __name__ == "__main__":

@@ -1,0 +1,164 @@
+"""Unit tests for bench_diff.py (stdlib unittest only).
+
+Run from the repo root:
+
+    python3 -m unittest discover -s scripts -p 'test_*.py' -v
+
+Covers the three behaviours CI leans on: null-baseline leaves fail
+strict runs with the distinct EXIT_UNMEASURED code, leaves the
+baseline tracks but the run stopped reporting are regressions, and
+the rss_ratio hard bound fires independently of the baseline.
+"""
+
+import importlib.util
+import json
+import os
+import tempfile
+import unittest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff", os.path.join(_HERE, "bench_diff.py"))
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+class CompareTests(unittest.TestCase):
+    def cmp(self, baseline, current, tolerance=0.5):
+        return bench_diff.compare(baseline, current, tolerance)
+
+    def test_null_baseline_leaf_is_unmeasured(self):
+        reg, ok, unmeasured, missing = self.cmp(
+            {"fold": {"single_ms": None}},
+            {"fold": {"single_ms": 12.5}})
+        self.assertEqual(reg, [])
+        self.assertEqual(unmeasured, ["fold.single_ms"])
+        self.assertEqual(missing, [])
+
+    def test_measured_leaf_within_tolerance_is_ok(self):
+        reg, ok, unmeasured, missing = self.cmp(
+            {"fold": {"single_ms": 10.0}},
+            {"fold": {"single_ms": 14.0}})
+        self.assertEqual(reg, [])
+        self.assertEqual(unmeasured, [])
+
+    def test_measured_leaf_beyond_tolerance_regresses(self):
+        reg, _, _, _ = self.cmp(
+            {"fold": {"single_ms": 10.0}},
+            {"fold": {"single_ms": 16.0}})
+        self.assertEqual(reg, [("fold.single_ms", 10.0, 16.0)])
+
+    def test_config_echo_must_match_exactly(self):
+        reg, _, _, _ = self.cmp(
+            {"fold": {"devices": 256}},
+            {"fold": {"devices": 128}})
+        self.assertEqual(reg, [("fold.devices", 256, 128)])
+
+    def test_missing_current_leaf_is_flagged(self):
+        # The baseline tracks par_ms but the run stopped reporting it.
+        reg, ok, unmeasured, missing = self.cmp(
+            {"fleets": [{"seq_ms": 10.0, "par_ms": 5.0}]},
+            {"fleets": [{"seq_ms": 10.0}]})
+        self.assertEqual(reg, [])
+        self.assertEqual(missing, ["fleets[0].par_ms"])
+
+    def test_null_baseline_leaf_missing_from_current_is_quiet(self):
+        # Unmeasured AND unreported: nothing to compare, nothing lost.
+        reg, ok, unmeasured, missing = self.cmp(
+            {"fold": {"single_ms": None}}, {"fold": {}})
+        self.assertEqual((reg, unmeasured, missing), ([], [], []))
+
+    def test_rss_ratio_bound_fires_even_with_null_baseline(self):
+        reg, _, unmeasured, _ = self.cmp(
+            {"lazy": {"rss_ratio": None}},
+            {"lazy": {"rss_ratio": 11.0}})
+        self.assertEqual(
+            reg, [("lazy.rss_ratio", bench_diff.RSS_RATIO_BOUND, 11.0)])
+        self.assertEqual(unmeasured, [])
+
+    def test_rss_ratio_within_bound_is_ok(self):
+        reg, ok, _, _ = self.cmp(
+            {"lazy": {"rss_ratio": None}},
+            {"lazy": {"rss_ratio": 3.5}})
+        self.assertEqual(reg, [])
+        self.assertEqual(
+            ok, [("lazy.rss_ratio", bench_diff.RSS_RATIO_BOUND, 3.5)])
+
+    def test_note_leaves_are_ignored(self):
+        reg, ok, unmeasured, missing = self.cmp(
+            {"note": "schema doc", "n": 1},
+            {"note": "other doc", "n": 1})
+        self.assertEqual((reg, unmeasured, missing), ([], [], []))
+
+
+class MainExitCodeTests(unittest.TestCase):
+    def run_main(self, baseline, current, *flags):
+        with tempfile.TemporaryDirectory() as d:
+            cur_path = os.path.join(d, "BENCH_engine.json")
+            base_path = os.path.join(d, "BENCH_baseline.json")
+            with open(cur_path, "w") as f:
+                json.dump(current, f)
+            with open(base_path, "w") as f:
+                json.dump(baseline, f)
+            return bench_diff.main(
+                [cur_path, "--baseline", base_path, *flags])
+
+    def test_strict_null_baseline_exits_unmeasured(self):
+        code = self.run_main({"fold": {"single_ms": None}},
+                             {"fold": {"single_ms": 12.5}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_UNMEASURED)
+
+    def test_strict_regression_exits_regression(self):
+        code = self.run_main({"fold": {"single_ms": 10.0}},
+                             {"fold": {"single_ms": 100.0}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_regression_outranks_unmeasured(self):
+        code = self.run_main(
+            {"fold": {"single_ms": 10.0, "sharded_ms": None}},
+            {"fold": {"single_ms": 100.0, "sharded_ms": 2.0}},
+            "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_missing_leaf_exits_regression(self):
+        code = self.run_main({"fold": {"single_ms": 10.0}},
+                             {"fold": {}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_rss_bound_violation_exits_regression(self):
+        code = self.run_main({"lazy": {"rss_ratio": None}},
+                             {"lazy": {"rss_ratio": 50.0}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_clean_measured_run_exits_ok(self):
+        code = self.run_main({"fold": {"single_ms": 10.0}},
+                             {"fold": {"single_ms": 9.0}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_OK)
+
+    def test_non_strict_never_fails_on_nulls_or_regressions(self):
+        code = self.run_main(
+            {"fold": {"single_ms": 10.0, "sharded_ms": None}},
+            {"fold": {"single_ms": 100.0, "sharded_ms": 2.0}})
+        self.assertEqual(code, bench_diff.EXIT_OK)
+
+    def test_update_trims_measurement_onto_schema(self):
+        with tempfile.TemporaryDirectory() as d:
+            cur_path = os.path.join(d, "BENCH_engine.json")
+            base_path = os.path.join(d, "BENCH_baseline.json")
+            with open(cur_path, "w") as f:
+                json.dump({"fold": {"single_ms": 12.5, "stray": 1}}, f)
+            with open(base_path, "w") as f:
+                json.dump({"note": "doc",
+                           "fold": {"single_ms": None}}, f)
+            code = bench_diff.main(
+                [cur_path, "--baseline", base_path, "--update"])
+            self.assertEqual(code, bench_diff.EXIT_OK)
+            with open(base_path) as f:
+                updated = json.load(f)
+            # Measured value lands, note survives, stray key dropped.
+            self.assertEqual(
+                updated, {"note": "doc", "fold": {"single_ms": 12.5}})
+
+
+if __name__ == "__main__":
+    unittest.main()

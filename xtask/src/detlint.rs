@@ -1,0 +1,858 @@
+//! detlint — a determinism static-analysis pass over `rust/src/`.
+//!
+//! The repo's contract (ROADMAP.md, docs/DETERMINISM.md) is that a
+//! fixed seed produces a bit-identical `RunRecord` at every
+//! `threads × agg-shards × window × edge-aggregators` setting. The
+//! runtime oracle harness catches contract breaks after the fact;
+//! this pass rejects the *sources* of nondeterminism at build time:
+//!
+//! * `unordered-collection` — `HashMap`/`HashSet` (and their hasher
+//!   machinery) in determinism-critical modules. Iteration order is
+//!   randomized per process, so any fold/serialize over one is a
+//!   latent contract break. Use `BTreeMap`/`BTreeSet`.
+//! * `wall-clock` — `Instant`/`SystemTime`. Simulated time must come
+//!   from `sim::clock::VirtualClock`; wall-clock reads make timing
+//!   (and everything keyed on it) machine-dependent.
+//! * `ambient-random` — `thread_rng`/`OsRng`/`from_entropy`/
+//!   `getrandom`. All randomness must flow from the seeded
+//!   `util::rng::Rng` counter streams.
+//! * `float-accum` — raw `+=` whose LHS is not provably an integer
+//!   and whose RHS is not an integer literal / provably-integer
+//!   identifier. Float addition is non-associative, so accumulation
+//!   order leaks into results; cross-device reductions must go
+//!   through the Q60 fixed-point `FoldSums` path
+//!   (`coordinator/aggregation.rs`, the one allowlisted file).
+//! * `float-ord` — `.partial_cmp(` calls. `None` on NaN makes sort
+//!   comparators panic or (with `unwrap_or`) silently reorder; use
+//!   `total_cmp`. Defining `fn partial_cmp` for a `PartialOrd` impl
+//!   is fine and exempt.
+//!
+//! Escape hatch: a justified annotation on the violating line or the
+//! line directly above it —
+//!
+//! ```text
+//! // detlint-allow: <rule> <reason>
+//! ```
+//!
+//! The reason is mandatory (`bad-allow` otherwise), an allow that
+//! matches no violation is itself an error (`stale-allow`), and every
+//! allow in force is printed in the census so drift is visible in CI
+//! logs.
+//!
+//! Implementation: a comment/string-stripping lexer plus token scans.
+//! No `syn` — the pass must build with zero dependencies in hermetic
+//! environments — so it is deliberately conservative: it only claims
+//! a `+=` is safe when the integer-ness is locally provable, and
+//! anything else needs the Q60 path or an annotation.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const INT_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize",
+    "i8", "i16", "i32", "i64", "i128", "isize",
+];
+const FLOAT_TYPES: &[&str] = &["f32", "f64"];
+
+/// Longest-first so `usize` is stripped before a bare `e` check could
+/// misread its `e` as a float exponent (`0usize` is an integer).
+const INT_SUFFIXES: &[&str] = &[
+    "usize", "isize", "u128", "i128", "u16", "u32", "u64", "i16",
+    "i32", "i64", "u8", "i8",
+];
+
+/// Banned identifiers and the rule each one trips.
+const BANNED: &[(&str, &str)] = &[
+    ("HashMap", "unordered-collection"),
+    ("HashSet", "unordered-collection"),
+    ("hash_map", "unordered-collection"),
+    ("hash_set", "unordered-collection"),
+    ("RandomState", "unordered-collection"),
+    ("DefaultHasher", "unordered-collection"),
+    ("Instant", "wall-clock"),
+    ("SystemTime", "wall-clock"),
+    ("thread_rng", "ambient-random"),
+    ("ThreadRng", "ambient-random"),
+    ("OsRng", "ambient-random"),
+    ("from_entropy", "ambient-random"),
+    ("getrandom", "ambient-random"),
+    // Only the `.partial_cmp(` call form — see banned_violations.
+    ("partial_cmp", "float-ord"),
+];
+
+/// Determinism-critical scopes, relative to `rust/src/`.
+const CHECKED_DIRS: &[&str] =
+    &["coordinator/", "device/", "sim/", "runtime/"];
+const CHECKED_FILES: &[&str] = &["util/rng.rs"];
+
+/// The one place raw float `+=` is the point: the Q60 quantize/fold
+/// kernels themselves (plus their tests, which compare against naive
+/// float folds on purpose).
+const FLOAT_ACCUM_ALLOWLIST: &[&str] = &["coordinator/aggregation.rs"];
+
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+fn is_checked(rel: &str) -> bool {
+    CHECKED_DIRS.iter().any(|d| rel.starts_with(d))
+        || CHECKED_FILES.contains(&rel)
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank out comments, string/char literals, and raw strings while
+/// preserving every newline and column position, so token positions in
+/// the sanitized text map 1:1 onto the original source. Collects
+/// `detlint-allow:` annotations (plain, doc `///`, and inner `//!`
+/// comment forms) on the way.
+fn sanitize(src: &str) -> (Vec<char>, Vec<Allow>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = vec![' '; n];
+    let mut allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            out[i] = '\n';
+            line += 1;
+            i += 1;
+        } else if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            let mut text: String =
+                s[i + 2..j].iter().collect::<String>().trim().to_string();
+            if text.starts_with('!') || text.starts_with('/') {
+                text = text[1..].trim().to_string();
+            }
+            if let Some(rest) = text.strip_prefix("detlint-allow:") {
+                let rest = rest.trim();
+                let mut parts = rest.splitn(2, char::is_whitespace);
+                let rule = parts.next().unwrap_or("").to_string();
+                let reason =
+                    parts.next().unwrap_or("").trim().to_string();
+                allows.push(Allow { line, rule, reason });
+            }
+            i = j;
+        } else if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if s[i] == '\n' {
+                        out[i] = '\n';
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            out[i] = '"';
+            i += 1;
+            while i < n {
+                if s[i] == '\\' && i + 1 < n {
+                    i += 2;
+                } else if s[i] == '"' {
+                    out[i] = '"';
+                    i += 1;
+                    break;
+                } else {
+                    if s[i] == '\n' {
+                        out[i] = '\n';
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == 'r'
+            && (i == 0 || !ident_char(s[i - 1]))
+            && i + 1 < n
+            && (s[i + 1] == '#' || s[i + 1] == '"')
+        {
+            // Raw string r"..." / r#"..."#.
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && s[j] == '"' {
+                i = j + 1;
+                while i < n {
+                    if s[i] == '"'
+                        && s[i + 1..].iter().take(hashes).all(|&h| h == '#')
+                        && s[i + 1..].len() >= hashes
+                    {
+                        i += 1 + hashes;
+                        break;
+                    }
+                    if s[i] == '\n' {
+                        out[i] = '\n';
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            } else {
+                // `r#ident` raw identifier or similar — keep the `r`.
+                out[i] = c;
+                i += 1;
+            }
+        } else if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                // Escaped char literal '\n', '\u{..}'.
+                i += 2;
+                while i < n && s[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < n && s[i + 2] == '\'' {
+                // Plain char literal 'a'.
+                i += 3;
+            } else {
+                // Lifetime tick — keep it so the type-ascription scan
+                // can skip over `&'a`.
+                out[i] = c;
+                i += 1;
+            }
+        } else {
+            out[i] = c;
+            i += 1;
+        }
+    }
+    (out, allows)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Num,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+struct Tok {
+    kind: Kind,
+    text: String,
+    line: usize,
+    start: usize,
+}
+
+fn tokenize(clean: &[char]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let n = clean.len();
+    while i < n {
+        let c = clean[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && ident_char(clean[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: clean[i..j].iter().collect(),
+                line,
+                start: i,
+            });
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (ident_char(clean[j]) || clean[j] == '.') {
+                if clean[j] == '.' && j + 1 < n && clean[j + 1] == '.' {
+                    break; // range `..`
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Num,
+                text: clean[i..j].iter().collect(),
+                line,
+                start: i,
+            });
+            i = j;
+        } else {
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: c.to_string(),
+                line,
+                start: i,
+            });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// Is this numeric literal an integer? `0x..`/`0o..`/`0b..` yes; a
+/// `.` or an `f32`/`f64` suffix no; otherwise strip any integer
+/// suffix first, then a remaining `e` marks a float exponent.
+fn num_is_int(t: &str) -> bool {
+    let mut low = t.to_ascii_lowercase();
+    if low.starts_with("0x") || low.starts_with("0o")
+        || low.starts_with("0b")
+    {
+        return true;
+    }
+    if t.contains('.') || low.ends_with("f32") || low.ends_with("f64") {
+        return false;
+    }
+    for suf in INT_SUFFIXES {
+        if low.ends_with(suf) {
+            low.truncate(low.len() - suf.len());
+            break;
+        }
+    }
+    !low.contains('e')
+}
+
+/// Identifiers whose integer-ness or float-ness is locally provable:
+/// type ascriptions (`x: usize`, fn params, struct fields — skipping
+/// `&`, `mut`, `[`, lifetimes) and literal-initialized lets
+/// (`let mut n = 0usize`).
+fn typed_idents(toks: &[Tok]) -> (BTreeSet<String>, BTreeSet<String>) {
+    let mut known_int = BTreeSet::new();
+    let mut known_float = BTreeSet::new();
+    let n = toks.len();
+    for k in 0..n {
+        let t = &toks[k];
+        if t.kind == Kind::Ident
+            && k + 1 < n
+            && toks[k + 1].kind == Kind::Punct
+            && toks[k + 1].text == ":"
+            && (k + 2 >= n || toks[k + 2].text != ":")
+            && (k == 0 || toks[k - 1].text != ":")
+        {
+            let mut j = k + 2;
+            while j < n
+                && matches!(toks[j].text.as_str(),
+                            "&" | "mut" | "[" | "'")
+            {
+                j += 1;
+            }
+            if j < n && toks[j].kind == Kind::Ident {
+                if INT_TYPES.contains(&toks[j].text.as_str()) {
+                    known_int.insert(t.text.clone());
+                } else if FLOAT_TYPES.contains(&toks[j].text.as_str()) {
+                    known_float.insert(t.text.clone());
+                }
+            }
+        }
+        if t.kind == Kind::Ident && t.text == "let" {
+            let mut j = k + 1;
+            if j < n && toks[j].text == "mut" {
+                j += 1;
+            }
+            if j < n
+                && toks[j].kind == Kind::Ident
+                && j + 1 < n
+                && toks[j + 1].text == "="
+                && (j + 2 >= n || toks[j + 2].text != "=")
+                && j + 2 < n
+                && toks[j + 2].kind == Kind::Num
+            {
+                let name = toks[j].text.clone();
+                if num_is_int(&toks[j + 2].text) {
+                    known_int.insert(name);
+                } else {
+                    known_float.insert(name);
+                }
+            }
+        }
+    }
+    (known_int, known_float)
+}
+
+/// Tokens that terminate the leftward scan for a `+=` LHS.
+fn is_lhs_boundary(text: &str) -> bool {
+    matches!(text, ";" | "{" | "}" | "(" | "," | "|" | "=" | "+" | "-"
+                 | ">" | "<")
+}
+
+fn float_accum_violations(toks: &[Tok]) -> Vec<Violation> {
+    let (known_int, known_float) = typed_idents(toks);
+    let mut out = Vec::new();
+    let n = toks.len();
+    for k in 0..n {
+        // `+` immediately followed by `=` in the source text.
+        if !(toks[k].kind == Kind::Punct
+            && toks[k].text == "+"
+            && k + 1 < n
+            && toks[k + 1].text == "="
+            && toks[k + 1].start == toks[k].start + 1)
+        {
+            continue;
+        }
+        let line = toks[k].line;
+        // LHS: walk back to a statement/expression boundary, then take
+        // the last bracket-depth-0 identifier as the base place
+        // (`self.scores[c].0 += …` → `scores`, `*x += …` → `x`).
+        let mut lhs: Vec<&Tok> = Vec::new();
+        let mut j = k as isize - 1;
+        while j >= 0 {
+            let t = &toks[j as usize];
+            if t.kind == Kind::Punct && is_lhs_boundary(&t.text) {
+                break;
+            }
+            lhs.push(t);
+            j -= 1;
+        }
+        lhs.reverse();
+        let mut base: Option<&str> = None;
+        let mut depth = 0i32;
+        for t in &lhs {
+            if t.text == "[" {
+                depth += 1;
+            } else if t.text == "]" {
+                depth -= 1;
+            } else if depth == 0 && t.kind == Kind::Ident {
+                base = Some(&t.text);
+            }
+        }
+        // RHS: forward to the statement-ending `;`.
+        let mut rhs: Vec<&Tok> = Vec::new();
+        let mut m = k + 2;
+        let mut pdepth = 0i32;
+        while m < n {
+            let t = &toks[m];
+            if t.kind == Kind::Punct && t.text == "(" {
+                pdepth += 1;
+            } else if t.kind == Kind::Punct && t.text == ")" {
+                pdepth -= 1;
+            } else if t.kind == Kind::Punct
+                && t.text == ";"
+                && pdepth <= 0
+            {
+                break;
+            }
+            rhs.push(t);
+            m += 1;
+        }
+        let rhs_int_literal = rhs.len() == 1
+            && rhs[0].kind == Kind::Num
+            && num_is_int(&rhs[0].text);
+        let rhs_int_ident = rhs.len() == 1
+            && rhs[0].kind == Kind::Ident
+            && known_int.contains(rhs[0].text.as_str())
+            && !known_float.contains(rhs[0].text.as_str());
+        let lhs_int = base.is_some_and(|b| {
+            known_int.contains(b) && !known_float.contains(b)
+        });
+        if !(rhs_int_literal || rhs_int_ident || lhs_int) {
+            out.push(Violation {
+                line,
+                rule: "float-accum",
+                msg: format!(
+                    "`{} += ...` may accumulate floats",
+                    base.unwrap_or("?")
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn banned_violations(clean: &[char], toks: &[Tok]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for t in toks {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let Some(&(_, rule)) =
+            BANNED.iter().find(|(name, _)| *name == t.text)
+        else {
+            continue;
+        };
+        if t.text == "partial_cmp" {
+            // Only the `.partial_cmp(` call form is a hazard; the
+            // `fn partial_cmp` definition in a PartialOrd impl is not.
+            let mut p = t.start as isize - 1;
+            while p >= 0 && clean[p as usize].is_whitespace() {
+                p -= 1;
+            }
+            if p < 0 || clean[p as usize] != '.' {
+                continue;
+            }
+        }
+        out.push(Violation {
+            line: t.line,
+            rule,
+            msg: format!("`{}`", t.text),
+        });
+    }
+    out
+}
+
+/// Lint one file's source. Returns the surviving violations and the
+/// allows that actually suppressed something (the census).
+pub fn check_source(rel: &str, src: &str) -> (Vec<Violation>, Vec<Allow>) {
+    let (clean, allows) = sanitize(src);
+    let toks = tokenize(&clean);
+    let mut viol = banned_violations(&clean, &toks);
+    if !FLOAT_ACCUM_ALLOWLIST.contains(&rel) {
+        viol.extend(float_accum_violations(&toks));
+    }
+    // An allow at line L suppresses same-rule violations at L and L+1
+    // (annotation on the violating line, or on its own line above).
+    let mut used = vec![false; allows.len()];
+    let mut kept = Vec::new();
+    for v in viol {
+        let mut suppressed = false;
+        for (a_i, a) in allows.iter().enumerate() {
+            if a.rule == v.rule
+                && (v.line == a.line || v.line == a.line + 1)
+                && !a.reason.is_empty()
+            {
+                used[a_i] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            kept.push(v);
+        }
+    }
+    for (a_i, a) in allows.iter().enumerate() {
+        if a.reason.is_empty() {
+            kept.push(Violation {
+                line: a.line,
+                rule: "bad-allow",
+                msg: "reason required".to_string(),
+            });
+        } else if !used[a_i] {
+            kept.push(Violation {
+                line: a.line,
+                rule: "stale-allow",
+                msg: format!(
+                    "allow for `{}` matches no violation",
+                    a.rule
+                ),
+            });
+        }
+    }
+    let in_force: Vec<Allow> = allows
+        .into_iter()
+        .zip(used)
+        .filter(|(_, u)| *u)
+        .map(|(a, _)| a)
+        .collect();
+    (kept, in_force)
+}
+
+fn collect_rs_files(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk `<repo_root>/rust/src`, lint every checked file, print
+/// violations and the allow census. Exit status: 0 clean, 1 any
+/// violation, 2 IO failure.
+pub fn run(repo_root: &Path) -> i32 {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(&src_root, &mut files) {
+        eprintln!("detlint: cannot walk {}: {e}", src_root.display());
+        return 2;
+    }
+    files.sort();
+    let mut total_v = 0usize;
+    let mut total_a = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("file under src_root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        if !is_checked(&rel) {
+            continue;
+        }
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("detlint: cannot read {rel}: {e}");
+                return 2;
+            }
+        };
+        let (mut viol, in_force) = check_source(&rel, &src);
+        viol.sort_by(|a, b| {
+            (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg))
+        });
+        for v in &viol {
+            println!("VIOLATION {rel}:{}: [{}] {}", v.line, v.rule, v.msg);
+            total_v += 1;
+        }
+        for a in &in_force {
+            println!(
+                "allow     {rel}:{}: [{}] {}",
+                a.line, a.rule, a.reason
+            );
+            total_a += 1;
+        }
+    }
+    println!("== {total_v} violation(s), {total_a} allow(s) in force");
+    if total_v > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Surviving violations of `src` linted as a checked coordinator
+    /// file, as (line, rule) pairs.
+    fn lint(src: &str) -> Vec<(usize, &'static str)> {
+        let (kept, _) = check_source("coordinator/seeded.rs", src);
+        kept.into_iter().map(|v| (v.line, v.rule)).collect()
+    }
+
+    fn rules(src: &str) -> Vec<&'static str> {
+        lint(src).into_iter().map(|(_, r)| r).collect()
+    }
+
+    // -- seeded violations: every rule must fire ----------------------
+
+    #[test]
+    fn seeded_hashmap_fires() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let got = rules(src);
+        assert_eq!(got, vec!["unordered-collection"; 3], "{got:?}");
+    }
+
+    #[test]
+    fn seeded_hashset_and_hasher_fire() {
+        assert_eq!(rules("use std::collections::HashSet;\n"),
+                   vec!["unordered-collection"]);
+        assert_eq!(rules("use std::collections::hash_map::RandomState;\n"),
+                   vec!["unordered-collection"; 2]);
+    }
+
+    #[test]
+    fn seeded_wall_clock_fires() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules(src), vec!["wall-clock"]);
+        let src = "fn f() { let t = std::time::SystemTime::now(); }\n";
+        assert_eq!(rules(src), vec!["wall-clock"]);
+    }
+
+    #[test]
+    fn seeded_ambient_random_fires() {
+        assert_eq!(rules("fn f() { let mut r = rand::thread_rng(); }\n"),
+                   vec!["ambient-random"]);
+        assert_eq!(rules("fn f() { let mut r = OsRng; }\n"),
+                   vec!["ambient-random"]);
+    }
+
+    #[test]
+    fn seeded_float_accum_fires() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n\
+                   \x20   let mut s = 0.0;\n\
+                   \x20   for x in xs {\n\
+                   \x20       s += x;\n\
+                   \x20   }\n\
+                   \x20   s\n\
+                   }\n";
+        assert_eq!(lint(src), vec![(4, "float-accum")]);
+    }
+
+    #[test]
+    fn seeded_float_ord_fires() {
+        let src = "fn f(v: &mut [f64]) {\n\
+                   \x20   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   }\n";
+        assert_eq!(lint(src), vec![(2, "float-ord")]);
+    }
+
+    // -- exemptions ---------------------------------------------------
+
+    #[test]
+    fn fn_partial_cmp_definition_is_exempt() {
+        let src = "impl PartialOrd for X {\n\
+                   \x20   fn partial_cmp(&self, o: &Self)\n\
+                   \x20       -> Option<std::cmp::Ordering> {\n\
+                   \x20       Some(self.cmp(o))\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(rules(src).is_empty());
+    }
+
+    #[test]
+    fn integer_accumulation_is_exempt() {
+        // Literal RHS, known-int ident RHS, and known-int LHS base.
+        let src = "fn f(k: usize, xs: &[f64]) -> usize {\n\
+                   \x20   let mut n = 0usize;\n\
+                   \x20   n += 1;\n\
+                   \x20   n += k;\n\
+                   \x20   n += xs.len();\n\
+                   \x20   n\n\
+                   }\n";
+        assert!(lint(src).is_empty(), "{:?}", lint(src));
+    }
+
+    #[test]
+    fn num_literal_classification() {
+        for t in ["0", "1", "0usize", "10u64", "1_000", "0x1f", "0b10",
+                  "3i128"] {
+            assert!(num_is_int(t), "{t} should be int");
+        }
+        for t in ["0.0", "1e-3", "1E9", "2.5", "1f64", "1f32",
+                  "0.5e2"] {
+            assert!(!num_is_int(t), "{t} should be float");
+        }
+    }
+
+    #[test]
+    fn banned_names_in_strings_and_comments_are_ignored() {
+        let src = "// HashMap Instant thread_rng partial_cmp\n\
+                   /* SystemTime\n   OsRng */\n\
+                   fn f() -> &'static str {\n\
+                   \x20   let c = 'I';\n\
+                   \x20   \"HashMap via Instant\"\n\
+                   }\n";
+        assert!(rules(src).is_empty());
+    }
+
+    #[test]
+    fn allowlisted_file_skips_float_accum_but_not_banned_names() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n\
+                   \x20   let mut s = 0.0;\n\
+                   \x20   for x in xs { s += x; }\n\
+                   \x20   s\n\
+                   }\n\
+                   use std::collections::HashMap;\n";
+        let (kept, _) = check_source("coordinator/aggregation.rs", src);
+        let got: Vec<_> = kept.iter().map(|v| v.rule).collect();
+        assert_eq!(got, vec!["unordered-collection"]);
+    }
+
+    #[test]
+    fn scope_covers_exactly_the_critical_modules() {
+        for rel in ["coordinator/engine.rs", "device/network.rs",
+                    "sim/clock.rs", "runtime/mod.rs", "util/rng.rs"] {
+            assert!(is_checked(rel), "{rel} must be checked");
+        }
+        for rel in ["model/forward.rs", "util/stats.rs", "lib.rs",
+                    "data/mod.rs"] {
+            assert!(!is_checked(rel), "{rel} must not be checked");
+        }
+    }
+
+    // -- escape hatch -------------------------------------------------
+
+    #[test]
+    fn allow_above_line_suppresses_and_is_censused() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n\
+                   \x20   let mut s = 0.0;\n\
+                   \x20   // detlint-allow: float-accum fixed fold order\n\
+                   \x20   for x in xs { s += x; }\n\
+                   \x20   s\n\
+                   }\n";
+        let (kept, in_force) = check_source("coordinator/x.rs", src);
+        assert!(kept.is_empty(), "{kept:?}");
+        assert_eq!(in_force.len(), 1);
+        assert_eq!(in_force[0].rule, "float-accum");
+        assert_eq!(in_force[0].reason, "fixed fold order");
+    }
+
+    #[test]
+    fn allow_on_same_line_suppresses() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n\
+                   \x20   let mut s = 0.0;\n\
+                   \x20   for x in xs { s += x; } \
+                   // detlint-allow: float-accum fixed fold order\n\
+                   \x20   s\n\
+                   }\n";
+        let (kept, in_force) = check_source("coordinator/x.rs", src);
+        assert!(kept.is_empty(), "{kept:?}");
+        assert_eq!(in_force.len(), 1);
+    }
+
+    #[test]
+    fn allow_without_reason_is_rejected_and_does_not_suppress() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n\
+                   \x20   let mut s = 0.0;\n\
+                   \x20   // detlint-allow: float-accum\n\
+                   \x20   for x in xs { s += x; }\n\
+                   \x20   s\n\
+                   }\n";
+        let got = rules(src);
+        assert!(got.contains(&"bad-allow"), "{got:?}");
+        assert!(got.contains(&"float-accum"), "{got:?}");
+    }
+
+    #[test]
+    fn stale_allow_is_rejected() {
+        let src = "// detlint-allow: wall-clock nothing here uses time\n\
+                   fn f() {}\n";
+        assert_eq!(rules(src), vec!["stale-allow"]);
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n\
+                   \x20   let mut s = 0.0;\n\
+                   \x20   // detlint-allow: wall-clock wrong rule\n\
+                   \x20   for x in xs { s += x; }\n\
+                   \x20   s\n\
+                   }\n";
+        let got = rules(src);
+        assert!(got.contains(&"float-accum"), "{got:?}");
+        assert!(got.contains(&"stale-allow"), "{got:?}");
+    }
+
+    // -- the tree itself ----------------------------------------------
+
+    /// The pass over the real tree must be clean. This is what makes
+    /// plain `cargo test` (tier-1) enforce the determinism lint.
+    #[test]
+    fn tree_is_clean() {
+        let root =
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+        assert_eq!(
+            run(root),
+            0,
+            "detlint violations — run `cargo run -p xtask -- detlint` \
+             and fix or annotate (docs/DETERMINISM.md)"
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Repo automation (`cargo xtask` pattern).
+//!
+//! Subcommands:
+//!
+//! * `detlint [repo-root]` — the determinism lint pass over
+//!   `rust/src/` (see `detlint.rs` and `docs/DETERMINISM.md`).
+//!   Exit 0 = clean, 1 = violations, 2 = usage/IO error.
+
+use std::path::PathBuf;
+use std::process::exit;
+
+mod detlint;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("detlint") => {
+            // Default to the workspace root this binary was built in,
+            // so `cargo run -p xtask -- detlint` works from anywhere.
+            let root = args
+                .next()
+                .map(PathBuf::from)
+                .unwrap_or_else(|| {
+                    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+                });
+            exit(detlint::run(&root));
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- detlint [repo-root]");
+            exit(2);
+        }
+    }
+}
