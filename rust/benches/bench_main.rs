@@ -32,8 +32,8 @@ use legend::coordinator::participation::{Full, Participation,
                                          UniformCount};
 use legend::coordinator::strategy::{self};
 use legend::coordinator::trainer::{MockTrainer, PjrtTrainer};
-use legend::coordinator::{run_federated, run_federated_with, FedConfig,
-                          ModelMeta};
+use legend::coordinator::{run_federated, run_federated_with, Codec,
+                          FedConfig, ModelMeta};
 use legend::data::{grammar, partition, Spec};
 use legend::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use legend::model::masks::{arithmetic_ranks, LayerSet, LoraConfig};
@@ -561,6 +561,77 @@ fn main() {
                 ("eager_peak_rss_kb", Value::Num(eager_rss as f64)),
                 ("lazy_peak_rss_kb", Value::Num(lazy_rss as f64)),
                 ("rss_ratio", Value::Num(ratio)),
+            ]),
+        ));
+    }
+
+    // ---- codec: per-codec bytes-on-wire ------------------------------------
+    // The same fixed-seed 2-round / 64-device run under each --codec;
+    // up/down come from the transport's byte-honest tallies (framing
+    // headers and STATUS_BYTES included), so the ratio is what the wire
+    // actually saves, not a nominal payload estimate. The tallies are
+    // covered by the determinism contract, so the byte leaves are
+    // exact across runners. Acceptance (docs/TRANSPORT.md): int8+delta
+    // cuts total bytes-on-wire by >= 35% vs codec=none —
+    // scripts/bench_diff.py holds `int8_savings_ratio` to that bound.
+    if want("engine_codec") {
+        let codec_run = |codec: Codec| -> (usize, usize) {
+            let mut s = strategy::by_name("legend", L, R, 32).unwrap();
+            let mut fleet = Fleet::new(FleetConfig::sized(64));
+            let mut trainer = MockTrainer::new("lora");
+            let cfg = FedConfig {
+                rounds: 2,
+                train_size: 64 * 64,
+                test_size: 64,
+                codec,
+                ..Default::default()
+            };
+            let global = TensorMap::zeros(&real_specs());
+            let rec = run_federated(&cfg, &mut fleet, s.as_mut(),
+                                    &mut trainer, &meta, &spec, global)
+                .unwrap();
+            let up = rec.rounds.iter().map(|r| r.up_bytes).sum();
+            let down = rec.rounds.iter().map(|r| r.down_bytes).sum();
+            (up, down)
+        };
+        let (none_up, none_down) = codec_run(Codec::None);
+        let (int8_up, int8_down) = codec_run(Codec::Int8);
+        let (int4_up, int4_down) = codec_run(Codec::Int4);
+        let none_total = none_up + none_down;
+        let savings = |up: usize, down: usize| -> f64 {
+            1.0 - (up + down) as f64 / none_total as f64
+        };
+        let int8_savings = savings(int8_up, int8_down);
+        let int4_savings = savings(int4_up, int4_down);
+        println!(
+            "{:<40} {:>10} B {:>10} B {:>9.1}% {:>6}",
+            "engine_codec_int8_vs_none_64dev",
+            none_total,
+            int8_up + int8_down,
+            int8_savings * 100.0,
+            64
+        );
+        println!(
+            "{:<40} {:>10} B {:>10} B {:>9.1}% {:>6}",
+            "engine_codec_int4_vs_none_64dev",
+            none_total,
+            int4_up + int4_down,
+            int4_savings * 100.0,
+            64
+        );
+        engine_doc.push((
+            "codec",
+            Value::obj(vec![
+                ("devices", Value::Num(64.0)),
+                ("rounds", Value::Num(2.0)),
+                ("none_up_bytes", Value::Num(none_up as f64)),
+                ("none_down_bytes", Value::Num(none_down as f64)),
+                ("int8_up_bytes", Value::Num(int8_up as f64)),
+                ("int8_down_bytes", Value::Num(int8_down as f64)),
+                ("int4_up_bytes", Value::Num(int4_up as f64)),
+                ("int4_down_bytes", Value::Num(int4_down as f64)),
+                ("int8_savings_ratio", Value::Num(int8_savings)),
+                ("int4_savings_ratio", Value::Num(int4_savings)),
             ]),
         ));
     }

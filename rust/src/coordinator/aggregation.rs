@@ -48,7 +48,8 @@ use anyhow::{anyhow, Result};
 
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
-use crate::model::TensorSpec;
+
+use super::layout::{classify, Pattern};
 
 /// One device's returned update + the configuration it trained under.
 #[derive(Debug, Clone)]
@@ -58,53 +59,6 @@ pub struct DeviceUpdate {
     /// Aggregation weight (1.0 = the paper's uniform 1/n_l; harnesses
     /// may weight by shard size for FedAvg-style averaging).
     pub weight: f64,
-}
-
-/// How a tensor's elements map to (layer, rank-slot) cells.
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Pattern {
-    /// `[L, r, inner]` — slot index varies along axis 1.
-    Rows { r: usize, inner: usize },
-    /// `[L, inner, r]` — slot index varies along axis 2.
-    Cols { r: usize, inner: usize },
-    /// No (layer, slot) structure: averaged over ALL devices (head).
-    Full,
-}
-
-/// True when the manifest naming convention places the rank/width axis
-/// *last*: the LoRA B-halves (`bq`, `bv`, …) and the adapter `down`
-/// projection are `[L, inner, r]`; the A-halves (`aq`, `av`), adapter
-/// `up` `[L, w, inner]` and the 2-D `bdown` bias `[L, w]` carry it
-/// first (python/compile/model.py `lora_shapes`/`adapter_shapes`).
-fn rank_axis_is_last(name: &str) -> bool {
-    name == "down" || (name.starts_with('b') && name != "bdown")
-}
-
-fn classify(spec: &TensorSpec, n_layers: usize, rank_dim: usize)
-            -> Pattern {
-    match spec.shape.as_slice() {
-        // Square [L, r, r]: shape alone cannot tell which axis holds
-        // the rank slots (Rows used to win unconditionally, silently
-        // mis-masking B-side tensors whenever inner == rank_dim).
-        // Disambiguate deterministically from the tensor spec's name.
-        [l, a, b] if *l == n_layers && *a == rank_dim && *b == rank_dim => {
-            if rank_axis_is_last(&spec.name) {
-                Pattern::Cols { r: rank_dim, inner: *a }
-            } else {
-                Pattern::Rows { r: rank_dim, inner: *b }
-            }
-        }
-        [l, a, b] if *l == n_layers && *a == rank_dim => {
-            Pattern::Rows { r: rank_dim, inner: *b }
-        }
-        [l, a, b] if *l == n_layers && *b == rank_dim => {
-            Pattern::Cols { r: rank_dim, inner: *a }
-        }
-        [l, a] if *l == n_layers && *a == rank_dim => {
-            Pattern::Rows { r: rank_dim, inner: 1 }
-        }
-        _ => Pattern::Full,
-    }
 }
 
 /// Fixed-point scale of the fold accumulators: 2⁶⁰. Headroom: f32
@@ -904,37 +858,8 @@ mod tests {
         assert!(g.get("aq").unwrap().iter().all(|&x| x == 5.0));
     }
 
-    #[test]
-    fn classify_square_tensor_disambiguates_by_name() {
-        // Regression: with inner == rank_dim the shape [L, r, r] is
-        // ambiguous and Rows used to win unconditionally — B-side
-        // tensors were mis-masked. The name convention decides.
-        let sq = |name: &str| TensorSpec {
-            name: name.into(),
-            shape: vec![L, R, R],
-        };
-        assert_eq!(classify(&sq("aq"), L, R),
-                   Pattern::Rows { r: R, inner: R });
-        assert_eq!(classify(&sq("av"), L, R),
-                   Pattern::Rows { r: R, inner: R });
-        assert_eq!(classify(&sq("up"), L, R),
-                   Pattern::Rows { r: R, inner: R });
-        assert_eq!(classify(&sq("bq"), L, R),
-                   Pattern::Cols { r: R, inner: R });
-        assert_eq!(classify(&sq("bv"), L, R),
-                   Pattern::Cols { r: R, inner: R });
-        assert_eq!(classify(&sq("down"), L, R),
-                   Pattern::Cols { r: R, inner: R });
-        // Non-square shapes keep their shape-driven classification
-        // regardless of name.
-        let wide = TensorSpec { name: "bq".into(), shape: vec![L, D, R] };
-        assert_eq!(classify(&wide, L, R),
-                   Pattern::Cols { r: R, inner: D });
-        // 2-D bias: rank axis is the only non-layer axis.
-        let bias = TensorSpec { name: "bdown".into(), shape: vec![L, R] };
-        assert_eq!(classify(&bias, L, R),
-                   Pattern::Rows { r: R, inner: 1 });
-    }
+    // `classify`'s unit tests (square-tensor disambiguation included)
+    // moved to `coordinator/layout.rs` with the classifier itself.
 
     #[test]
     fn square_b_tensor_aggregates_along_last_axis() {

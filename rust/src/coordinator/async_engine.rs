@@ -94,6 +94,7 @@ use super::capacity::CapacityEstimator;
 use super::engine::{admitted_cohort, device_round, device_shard,
                     sanitize, test_data, ExecOpts, TrainJob};
 use super::participation::Participation;
+use super::serialize;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
 use super::strategy::{Strategy, StrategyCtx};
 use super::trainer::{LocalOutcome, Trainer};
@@ -226,6 +227,12 @@ struct InFlight {
     gen: usize,
     /// True eq. 12 duration [virtual s], fixed at dispatch.
     duration: f64,
+    /// Real encoded uplink size under the run's codec, fixed at
+    /// dispatch — the update was encoded against the global the
+    /// device was assigned, not whatever the global is at fold time.
+    wire_bytes: usize,
+    /// Outcome with `trainable` already put through the codec (the
+    /// coordinator's single dequantization), ready for the fold.
     outcome: LocalOutcome,
     config: LoraConfig,
 }
@@ -292,7 +299,7 @@ impl<'a> AsyncEngine<'a> {
             if h > 1 {
                 fleet.advance_round();
             }
-            transport.begin_round(h);
+            transport.begin_round();
             let start = clock.elapsed;
 
             // ①a cohort sampling among *idle* devices: a device still
@@ -325,7 +332,7 @@ impl<'a> AsyncEngine<'a> {
                 // ①b status reports → capacity estimation (eq. 8–9).
                 for &i in &cohort {
                     let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
-                    transport.recv_status(i);
+                    transport.recv_status(h, i);
                     estimator.update(i, mu_hat, beta_hat);
                 }
                 let estimates: Vec<_> = cohort
@@ -413,7 +420,8 @@ impl<'a> AsyncEngine<'a> {
                         .map(|&j| {
                             let i = cohort[j];
                             let config = &plan.device_configs[j];
-                            transport.send_assignment(i, &global, config,
+                            transport.send_assignment(h, i, &global,
+                                                      config,
                                                       meta.n_layers,
                                                       rank_dim);
                             TrainJob {
@@ -453,14 +461,24 @@ impl<'a> AsyncEngine<'a> {
                                      fleet.forward_time(i, meta.n_layers),
                                      &plan.device_configs[j], n_batches[j])
                             .completion_time();
-                    let outcome = outs[k]
+                    let mut outcome = outs[k]
                         .take()
                         .expect("trainer must deliver every outcome");
+                    // Encode/decode against the *assigned* global —
+                    // the delta reference both ends hold at dispatch;
+                    // by fold time the global may have moved on.
+                    let (wire_bytes, restored) =
+                        serialize::through_wire(
+                            cfg.codec, outcome.trainable, &global,
+                            &plan.device_configs[j], meta.n_layers,
+                            rank_dim)?;
+                    outcome.trainable = restored;
                     pending.push(
                         EventKey { time: start + duration, device_id: i },
                         InFlight {
                             gen: h,
                             duration,
+                            wire_bytes,
                             outcome,
                             config: plan.device_configs[j].clone(),
                         },
@@ -524,9 +542,11 @@ impl<'a> AsyncEngine<'a> {
                 let i = k.device_id;
                 let tau = h - inf.gen;
                 let w = staleness_weight(tau, s_max, alpha);
-                transport.recv_update(i, &inf.outcome.trainable,
-                                      &inf.config, meta.n_layers,
-                                      rank_dim);
+                // Arrival-time tally (this window's traffic), but the
+                // message logs the round the exchange belongs to —
+                // the dispatch round — not whichever window happens
+                // to be current when a stale update finally folds.
+                transport.recv_update(inf.gen, i, inf.wire_bytes);
                 loss_log.insert(i, (h, inf.outcome.mean_loss));
                 // Same-window folds keep their exact duration (the
                 // sync-oracle path); spillovers are measured against

@@ -70,6 +70,7 @@ use crate::util::rng::Rng;
 use super::aggregation::EdgeAggregator;
 use super::capacity::CapacityEstimator;
 use super::participation::Participation;
+use super::serialize;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
 use super::strategy::{Strategy, StrategyCtx};
 use super::trainer::{CohortSink, DeviceTrainer, LocalOutcome, Trainer};
@@ -335,7 +336,7 @@ impl<'a> RoundEngine<'a> {
             if h > 1 {
                 fleet.advance_round();
             }
-            transport.begin_round(h);
+            transport.begin_round();
 
             // ①a cohort sampling (pre-configuration). An empty or
             // out-of-range sample keeps the round minimal (device 0
@@ -360,7 +361,7 @@ impl<'a> RoundEngine<'a> {
             // zero bytes this round, STATUS_BYTES included.
             for &i in &cohort {
                 let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
-                transport.recv_status(i);
+                transport.recv_status(h, i);
                 estimator.update(i, mu_hat, beta_hat);
             }
             let estimates: Vec<_> = cohort
@@ -450,7 +451,7 @@ impl<'a> RoundEngine<'a> {
                 .map(|&j| {
                     let i = cohort[j];
                     let config = &plan.device_configs[j];
-                    transport.send_assignment(i, &global, config,
+                    transport.send_assignment(h, i, &global, config,
                                               meta.n_layers, rank_dim);
                     TrainJob {
                         device_id: i,
@@ -490,16 +491,24 @@ impl<'a> RoundEngine<'a> {
                 let (cohort_r, admitted_pos_r) = (&cohort, &admitted_pos);
                 let (agg_r, loss_log_r, loss_sum_r) =
                     (&mut agg, &mut loss_log, &mut loss_sum);
+                // The device side encodes its update under the run's
+                // codec (delta vs the assigned global it trained on);
+                // the coordinator dequantizes exactly once here,
+                // before the fold, and the tally records the real
+                // bytes-on-wire. codec=none is a bitwise pass-through.
+                let global_r = &global;
                 let mut sink = |k: usize, out: LocalOutcome| {
                     let j = admitted_pos_r[k];
                     let i = cohort_r[j];
                     let config = &plan.device_configs[j];
-                    transport.recv_update(i, &out.trainable, config,
-                                          meta.n_layers, rank_dim);
+                    let (wire, restored) = serialize::through_wire(
+                        cfg.codec, out.trainable, global_r, config,
+                        meta.n_layers, rank_dim)?;
+                    transport.recv_update(h, i, wire);
                     loss_log_r.insert(i, (h, out.mean_loss));
                     // detlint-allow: float-accum coordinator-thread fold in job-index order
                     *loss_sum_r += out.mean_loss;
-                    agg_r.push(out.trainable, config, 1.0)
+                    agg_r.push(restored, config, 1.0)
                 };
                 let opts = ExecOpts {
                     threads: cfg.threads,

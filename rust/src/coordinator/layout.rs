@@ -1,0 +1,188 @@
+//! The single slot-layout classifier shared by the wire codec
+//! ([`super::serialize`]) and the eq. 17 aggregators
+//! ([`super::aggregation`]).
+//!
+//! A trainable tensor's elements map to (layer, rank-slot) cells in
+//! exactly one of three ways — [`Pattern`] — and both the bytes that
+//! travel and the slots that fold are decided by that classification.
+//! Before this module existed, `serialize` kept its own shape-only
+//! copy of the rule: a square `[L, r, r]` tensor matched the rows arm
+//! first, so B-side squares travelled row-major while the aggregator
+//! (fixed in PR 2) folded them rank-last — the transmitted slots were
+//! not the folded slots. Keeping one classifier makes that class of
+//! drift impossible: encode, decode, byte tally, and fold all call
+//! [`classify`].
+
+use crate::model::TensorSpec;
+
+/// How a tensor's elements map to (layer, rank-slot) cells.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// `[L, r, inner]` — slot index varies along axis 1.
+    Rows { r: usize, inner: usize },
+    /// `[L, inner, r]` — slot index varies along axis 2.
+    Cols { r: usize, inner: usize },
+    /// No (layer, slot) structure: travels whole, averaged over ALL
+    /// devices (head).
+    Full,
+}
+
+/// True when the manifest naming convention places the rank/width axis
+/// *last*: the LoRA B-halves (`bq`, `bv`, …) and the adapter `down`
+/// projection are `[L, inner, r]`; the A-halves (`aq`, `av`), adapter
+/// `up` `[L, w, inner]` and the 2-D `bdown` bias `[L, w]` carry it
+/// first (python/compile/model.py `lora_shapes`/`adapter_shapes`).
+pub fn rank_axis_is_last(name: &str) -> bool {
+    name == "down" || (name.starts_with('b') && name != "bdown")
+}
+
+/// Classify `spec` against the run's `(n_layers, rank_dim)`.
+pub fn classify(spec: &TensorSpec, n_layers: usize, rank_dim: usize)
+                -> Pattern {
+    match spec.shape.as_slice() {
+        // Square [L, r, r]: shape alone cannot tell which axis holds
+        // the rank slots (Rows used to win unconditionally, silently
+        // mis-masking B-side tensors whenever inner == rank_dim).
+        // Disambiguate deterministically from the tensor spec's name.
+        [l, a, b] if *l == n_layers && *a == rank_dim && *b == rank_dim => {
+            if rank_axis_is_last(&spec.name) {
+                Pattern::Cols { r: rank_dim, inner: *a }
+            } else {
+                Pattern::Rows { r: rank_dim, inner: *b }
+            }
+        }
+        [l, a, b] if *l == n_layers && *a == rank_dim => {
+            Pattern::Rows { r: rank_dim, inner: *b }
+        }
+        [l, a, b] if *l == n_layers && *b == rank_dim => {
+            Pattern::Cols { r: rank_dim, inner: *a }
+        }
+        [l, a] if *l == n_layers && *a == rank_dim => {
+            Pattern::Rows { r: rank_dim, inner: 1 }
+        }
+        _ => Pattern::Full,
+    }
+}
+
+/// Number of elements of `spec` that are active (travel / fold) under
+/// a device whose `[L * rank_dim]` slot mask is `mask`.
+pub fn active_elems(spec: &TensorSpec, mask: &[f32], n_layers: usize,
+                    rank_dim: usize) -> usize {
+    match classify(spec, n_layers, rank_dim) {
+        Pattern::Full => spec.numel(),
+        Pattern::Rows { inner, .. } | Pattern::Cols { inner, .. } => {
+            let active: usize =
+                mask.iter().map(|&m| (m != 0.0) as usize).sum();
+            active * inner
+        }
+    }
+}
+
+/// Visit the active elements of a tensor classified as `pat` in the
+/// canonical wire/fold order: ascending layer, then ascending rank
+/// slot within the layer, then ascending inner index within the slot.
+/// `Full` visits every element in storage order. This single iterator
+/// is what keeps encode, decode, and the fold walking the *same*
+/// elements in the *same* order.
+pub fn for_each_active(pat: Pattern, n_layers: usize, mask: &[f32],
+                       mut visit: impl FnMut(usize)) {
+    match pat {
+        Pattern::Full => unreachable!("Full tensors have no mask walk"),
+        Pattern::Rows { r, inner } => {
+            for l in 0..n_layers {
+                for j in 0..r {
+                    if mask[l * r + j] == 0.0 {
+                        continue;
+                    }
+                    let off = (l * r + j) * inner;
+                    for e in off..off + inner {
+                        visit(e);
+                    }
+                }
+            }
+        }
+        Pattern::Cols { r, inner } => {
+            for l in 0..n_layers {
+                for j in 0..r {
+                    if mask[l * r + j] == 0.0 {
+                        continue;
+                    }
+                    let base = l * inner * r + j;
+                    for i in 0..inner {
+                        visit(base + i * r);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: usize = 2;
+    const R: usize = 3;
+    const D: usize = 5;
+
+    fn sq(name: &str) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: vec![L, R, R] }
+    }
+
+    #[test]
+    fn classify_square_tensor_disambiguates_by_name() {
+        assert_eq!(classify(&sq("aq"), L, R),
+                   Pattern::Rows { r: R, inner: R });
+        assert_eq!(classify(&sq("av"), L, R),
+                   Pattern::Rows { r: R, inner: R });
+        assert_eq!(classify(&sq("up"), L, R),
+                   Pattern::Rows { r: R, inner: R });
+        assert_eq!(classify(&sq("bq"), L, R),
+                   Pattern::Cols { r: R, inner: R });
+        assert_eq!(classify(&sq("bv"), L, R),
+                   Pattern::Cols { r: R, inner: R });
+        assert_eq!(classify(&sq("down"), L, R),
+                   Pattern::Cols { r: R, inner: R });
+        let wide = TensorSpec { name: "bq".into(),
+                                shape: vec![L, D, R] };
+        assert_eq!(classify(&wide, L, R),
+                   Pattern::Cols { r: R, inner: D });
+        let bias = TensorSpec { name: "bdown".into(),
+                                shape: vec![L, R] };
+        assert_eq!(classify(&bias, L, R),
+                   Pattern::Rows { r: R, inner: 1 });
+        let head = TensorSpec { name: "head_w".into(),
+                                shape: vec![D, 4] };
+        assert_eq!(classify(&head, L, R), Pattern::Full);
+    }
+
+    #[test]
+    fn active_walk_matches_active_elems_and_never_repeats() {
+        // One slot active per layer: slot 1 of layer 0, slot 2 of
+        // layer 1.
+        let mut mask = vec![0.0f32; L * R];
+        mask[1] = 1.0;
+        mask[R + 2] = 1.0;
+        for spec in [sq("aq"), sq("bq")] {
+            let pat = classify(&spec, L, R);
+            let mut seen = Vec::new();
+            for_each_active(pat, L, &mask, |e| seen.push(e));
+            assert_eq!(seen.len(),
+                       active_elems(&spec, &mask, L, R));
+            let mut uniq = seen.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), seen.len(), "duplicate element");
+            assert!(seen.iter().all(|&e| e < spec.numel()));
+        }
+        // Rows walks slot-contiguous storage; Cols strides by r.
+        let mut rows = Vec::new();
+        for_each_active(Pattern::Rows { r: R, inner: R }, L, &mask,
+                        |e| rows.push(e));
+        assert_eq!(rows[..R], [R, R + 1, R + 2]);
+        let mut cols = Vec::new();
+        for_each_active(Pattern::Cols { r: R, inner: R }, L, &mask,
+                        |e| cols.push(e));
+        assert_eq!(cols[..R], [1, 1 + R, 1 + 2 * R]);
+    }
+}

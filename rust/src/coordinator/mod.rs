@@ -5,6 +5,8 @@
 //! * [`lcd`] — the LoRA Configuration Determination algorithm
 //!   (Alg. 1): joint depth + rank-distribution assignment under
 //!   compute/communication budgets;
+//! * [`layout`] — the single (layer, rank-slot) classifier shared by
+//!   the wire codec and every aggregator;
 //! * [`aggregation`] — adaptive layer-wise (rank-slot-aware)
 //!   aggregation of heterogeneous updates (§4.5, eq. 17);
 //! * [`strategy`] — LEGEND, its two ablations, and the FedLoRA /
@@ -24,6 +26,7 @@ pub mod aggregation;
 pub mod async_engine;
 pub mod capacity;
 pub mod engine;
+pub mod layout;
 pub mod lcd;
 pub mod participation;
 pub mod serialize;
@@ -34,4 +37,5 @@ pub mod trainer;
 
 pub use async_engine::AsyncEngine;
 pub use engine::RoundEngine;
+pub use serialize::Codec;
 pub use server::{run_federated, run_federated_with, FedConfig, ModelMeta};

@@ -1,83 +1,161 @@
-//! Wire (de)serialization of LoRA payloads.
+//! Wire (de)serialization of LoRA payloads + the update codec.
 //!
 //! The transport counts — and the tests round-trip — the exact bytes a
 //! deployment would put on the wire: for each active layer `l`, the
-//! first `r_l` rows of the A factors and columns of the B factors
-//! (f32 little-endian), then the full head. Padded slots never travel;
-//! this is what makes LEGEND's traffic numbers (Fig. 11) smaller than
-//! FedLoRA's even though both share one padded artifact in memory.
+//! first `r_l` rows of the A factors and columns of the B factors,
+//! then the full head. Padded slots never travel; this is what makes
+//! LEGEND's traffic numbers (Fig. 11) smaller than FedLoRA's even
+//! though both share one padded artifact in memory.
+//!
+//! Which elements are "active" — and in what order they travel — is
+//! decided by [`super::layout`], the same classifier the eq. 17
+//! aggregators fold with, so the transmitted slots are by construction
+//! the folded slots (`serialize` used to keep its own shape-only copy
+//! of the rule and silently mis-laid-out square `[L, r, r]` B-side
+//! tensors).
+//!
+//! On top of the raw f32 format sits the [`Codec`] layer
+//! (`--codec none|int8|int4`): quantized modes ship each uplink tensor
+//! as a 12-byte framed header (affine `scale`/`zero_point` + active
+//! count) followed by packed int8 bytes or int4 nibbles of the
+//! *delta* against the device's assigned global — deltas shrink with
+//! convergence, which is what makes the low-bit range cheap. Encoding
+//! happens on the device side of the exchange; the coordinator
+//! dequantizes **exactly once** (in [`through_wire`]) before the i128
+//! Q60 eq. 17 fold, so the fold itself stays bit-identical for a
+//! fixed codec choice. `Codec::None` is a zero-copy pass-through of
+//! today's wire format. Assignments (downlink) always travel f32:
+//! quantizing the model a device trains *on* would perturb training
+//! itself, not just the update in flight. See docs/TRANSPORT.md.
 
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
 use crate::model::TensorSpec;
 
-/// How a trainable tensor maps to (layer, slot) cells; mirrors the
-/// aggregation patterns.
-fn slot_layout(spec: &TensorSpec, n_layers: usize, rank_dim: usize)
-               -> Option<(bool, usize)> {
-    // Returns (slot_on_axis1, inner) for [L, r, inner] (true) or
-    // [L, inner, r] (false); None = full tensor (head).
-    match spec.shape.as_slice() {
-        [l, a, b] if *l == n_layers && *a == rank_dim => Some((true, *b)),
-        [l, a, b] if *l == n_layers && *b == rank_dim => Some((false, *a)),
-        [l, a] if *l == n_layers && *a == rank_dim => Some((true, 1)),
-        _ => None,
+use super::layout::{self, classify, Pattern};
+
+/// Update codec on the device → PS wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Raw f32 little-endian active slots — today's format, bitwise.
+    None,
+    /// Per-tensor affine int8 quantization of the delta vs the
+    /// assigned global.
+    Int8,
+    /// Per-tensor affine int4 (packed nibbles) quantization of the
+    /// delta vs the assigned global.
+    Int4,
+}
+
+impl Codec {
+    pub fn by_name(name: &str) -> anyhow::Result<Codec> {
+        match name {
+            "none" => Ok(Codec::None),
+            "int8" => Ok(Codec::Int8),
+            "int4" => Ok(Codec::Int4),
+            other => Err(anyhow::anyhow!(
+                "unknown codec '{other}' (expected none|int8|int4)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Int8 => "int8",
+            Codec::Int4 => "int4",
+        }
+    }
+
+    /// Quantized modes encode the delta vs the assigned global (the
+    /// reference both ends already hold), not raw values.
+    pub fn uses_delta(self) -> bool {
+        !matches!(self, Codec::None)
+    }
+
+    /// Inclusive integer range of the quantized representation.
+    fn qrange(self) -> (i32, i32) {
+        match self {
+            Codec::None => unreachable!("codec none has no qrange"),
+            Codec::Int8 => (-128, 127),
+            Codec::Int4 => (-8, 7),
+        }
+    }
+
+    /// Packed bytes for `n` quantized values (headers not included).
+    fn packed_len(self, n: usize) -> usize {
+        match self {
+            Codec::None => n * 4,
+            Codec::Int8 => n,
+            Codec::Int4 => (n + 1) / 2,
+        }
     }
 }
 
-/// Bytes of the active payload for `config` (what actually travels).
+/// Per-tensor framed header of the quantized formats: `scale` (f32 LE)
+/// + `zero_point` (i32 LE) + active-value count (u32 LE).
+pub const TENSOR_HEADER_BYTES: usize = 12;
+
+/// The active element indices of one tensor, in canonical wire order.
+fn active_indices(spec: &TensorSpec, mask: &[f32], n_layers: usize,
+                  rank_dim: usize) -> Vec<usize> {
+    match classify(spec, n_layers, rank_dim) {
+        Pattern::Full => (0..spec.numel()).collect(),
+        pat => {
+            let mut idx =
+                Vec::with_capacity(layout::active_elems(spec, mask,
+                                                        n_layers,
+                                                        rank_dim));
+            layout::for_each_active(pat, n_layers, mask,
+                                    |e| idx.push(e));
+            idx
+        }
+    }
+}
+
+/// Bytes of the raw-f32 active payload for `config` (what travels
+/// under `Codec::None`, and on every assignment downlink).
 pub fn active_payload_bytes(state: &TensorMap, config: &LoraConfig,
                             n_layers: usize, rank_dim: usize) -> usize {
     let mask = config.rank_mask(n_layers, rank_dim);
-    let mut total = 0usize;
-    for (spec, _) in &state.entries {
-        match slot_layout(spec, n_layers, rank_dim) {
-            None => total += spec.numel() * 4,
-            Some((_, inner)) => {
-                let active: usize =
-                    mask.iter().map(|&m| m as usize).sum();
-                total += active * inner * 4;
-            }
-        }
-    }
-    total
+    state
+        .entries
+        .iter()
+        .map(|(spec, _)| {
+            layout::active_elems(spec, &mask, n_layers, rank_dim) * 4
+        })
+        .sum()
 }
 
-/// Serialize the active slots to wire bytes (f32 LE).
+/// Bytes `encode_update` will produce for `state` under `codec`.
+pub fn encoded_len(codec: Codec, state: &TensorMap, config: &LoraConfig,
+                   n_layers: usize, rank_dim: usize) -> usize {
+    if codec == Codec::None {
+        return active_payload_bytes(state, config, n_layers, rank_dim);
+    }
+    let mask = config.rank_mask(n_layers, rank_dim);
+    state
+        .entries
+        .iter()
+        .map(|(spec, _)| {
+            let n =
+                layout::active_elems(spec, &mask, n_layers, rank_dim);
+            TENSOR_HEADER_BYTES + codec.packed_len(n)
+        })
+        .sum()
+}
+
+/// Serialize the active slots to wire bytes (f32 LE) — the
+/// `Codec::None` format.
 pub fn encode(state: &TensorMap, config: &LoraConfig, n_layers: usize,
               rank_dim: usize) -> Vec<u8> {
     let mask = config.rank_mask(n_layers, rank_dim);
     let mut out =
         Vec::with_capacity(active_payload_bytes(state, config, n_layers,
                                                 rank_dim));
-    let mut push = |x: f32| out.extend_from_slice(&x.to_le_bytes());
     for (spec, data) in &state.entries {
-        match slot_layout(spec, n_layers, rank_dim) {
-            None => {
-                for &x in data {
-                    push(x);
-                }
-            }
-            Some((rows, inner)) => {
-                for l in 0..n_layers {
-                    for j in 0..rank_dim {
-                        if mask[l * rank_dim + j] == 0.0 {
-                            continue;
-                        }
-                        if rows {
-                            let off = (l * rank_dim + j) * inner;
-                            for &x in &data[off..off + inner] {
-                                push(x);
-                            }
-                        } else {
-                            let base = l * inner * rank_dim + j;
-                            for i in 0..inner {
-                                push(data[base + i * rank_dim]);
-                            }
-                        }
-                    }
-                }
-            }
+        for e in active_indices(spec, &mask, n_layers, rank_dim) {
+            out.extend_from_slice(&data[e].to_le_bytes());
         }
     }
     out
@@ -89,10 +167,15 @@ pub enum WireError {
     Truncated { want: usize, got: usize },
     #[error("trailing bytes: {0}")]
     Trailing(usize),
+    #[error("bad tensor header at byte {at}: {why}")]
+    BadHeader { at: usize, why: &'static str },
+    #[error("active-count mismatch for {tensor}: header says {got}, \
+             config implies {want}")]
+    CountMismatch { tensor: String, want: usize, got: usize },
 }
 
-/// Decode wire bytes into `dest`'s active slots (inactive slots are
-/// left untouched — they weren't transmitted).
+/// Decode raw-f32 wire bytes into `dest`'s active slots (inactive
+/// slots are left untouched — they weren't transmitted).
 pub fn decode(bytes: &[u8], dest: &mut TensorMap, config: &LoraConfig,
               n_layers: usize, rank_dim: usize) -> Result<(), WireError> {
     let want = active_payload_bytes(dest, config, n_layers, rank_dim);
@@ -101,46 +184,215 @@ pub fn decode(bytes: &[u8], dest: &mut TensorMap, config: &LoraConfig,
     }
     let mask = config.rank_mask(n_layers, rank_dim);
     let mut off = 0usize;
-    let mut next = |off: &mut usize| -> f32 {
-        let v = f32::from_le_bytes(
-            bytes[*off..*off + 4].try_into().unwrap());
-        *off += 4;
-        v
-    };
     for (spec, data) in &mut dest.entries {
-        match slot_layout(spec, n_layers, rank_dim) {
-            None => {
-                for x in data.iter_mut() {
-                    *x = next(&mut off);
-                }
-            }
-            Some((rows, inner)) => {
-                for l in 0..n_layers {
-                    for j in 0..rank_dim {
-                        if mask[l * rank_dim + j] == 0.0 {
-                            continue;
-                        }
-                        if rows {
-                            let o = (l * rank_dim + j) * inner;
-                            for x in &mut data[o..o + inner] {
-                                *x = next(&mut off);
-                            }
-                        } else {
-                            let base = l * inner * rank_dim + j;
-                            for i in 0..inner {
-                                data[base + i * rank_dim] =
-                                    next(&mut off);
-                            }
-                        }
-                    }
-                }
-            }
+        for e in active_indices(spec, &mask, n_layers, rank_dim) {
+            data[e] = f32::from_le_bytes(
+                bytes[off..off + 4].try_into().expect("checked above"));
+            off += 4;
         }
     }
     if off != bytes.len() {
         return Err(WireError::Trailing(bytes.len() - off));
     }
     Ok(())
+}
+
+/// Affine quantization parameters mapping `[min, max]` onto
+/// `[qmin, qmax]`. Degenerate inputs (empty range, NaN, zero or
+/// non-finite spread) fall back to `(1.0, 0)` so the codec stays total
+/// and deterministic. All arithmetic is f64 with a single f32/i32
+/// store, so both ends recompute nothing — the header is authoritative.
+fn affine_params(min: f32, max: f32, qmin: i32, qmax: i32)
+                 -> (f32, i32) {
+    if !(min <= max) || !min.is_finite() || !max.is_finite() {
+        return (1.0, 0);
+    }
+    let range = max as f64 - min as f64;
+    let scale = (range / (qmax - qmin) as f64) as f32;
+    if !scale.is_finite() || scale <= 0.0 {
+        return (1.0, 0);
+    }
+    // Place zero_point so `min` maps to `qmin`; saturating f64→i32
+    // cast keeps pathological ranges deterministic instead of UB.
+    let zp = (qmin as f64 - (min as f64 / scale as f64).round()) as i32;
+    (scale, zp)
+}
+
+/// Quantize one value under `(scale, zp)` into `[qmin, qmax]`.
+/// NaN maps to 0 (then clamped) via the saturating cast —
+/// deterministic.
+fn q_of(x: f32, scale: f32, zp: i32, qmin: i32, qmax: i32) -> i32 {
+    let q = (x as f64 / scale as f64).round() + zp as f64;
+    (q as i32).clamp(qmin, qmax)
+}
+
+/// Dequantize one value. i64 intermediate: a corrupt wire header can
+/// carry any i32 `zp`, and `q - zp` must not overflow.
+fn dq_of(q: i32, scale: f32, zp: i32) -> f32 {
+    ((q as i64 - zp as i64) as f64 * scale as f64) as f32
+}
+
+/// Encode `update` under `codec` for the wire. Quantized modes frame
+/// each tensor as [`TENSOR_HEADER_BYTES`] + packed values of the delta
+/// `update − reference` over the active elements in canonical layout
+/// order; `Codec::None` is the raw f32 format (reference unused).
+pub fn encode_update(codec: Codec, update: &TensorMap,
+                     reference: &TensorMap, config: &LoraConfig,
+                     n_layers: usize, rank_dim: usize) -> Vec<u8> {
+    if codec == Codec::None {
+        return encode(update, config, n_layers, rank_dim);
+    }
+    let (qmin, qmax) = codec.qrange();
+    let mask = config.rank_mask(n_layers, rank_dim);
+    let mut out = Vec::with_capacity(encoded_len(codec, update, config,
+                                                 n_layers, rank_dim));
+    for (spec, data) in &update.entries {
+        let refd = reference
+            .get(&spec.name)
+            .expect("reference missing tensor");
+        let idx = active_indices(spec, &mask, n_layers, rank_dim);
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &e in &idx {
+            let v = data[e] - refd[e];
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let (scale, zp) = affine_params(lo, hi, qmin, qmax);
+        out.extend_from_slice(&scale.to_le_bytes());
+        out.extend_from_slice(&zp.to_le_bytes());
+        out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        match codec {
+            Codec::None => unreachable!(),
+            Codec::Int8 => {
+                for &e in &idx {
+                    let q = q_of(data[e] - refd[e], scale, zp, qmin,
+                                 qmax);
+                    out.push(q as i8 as u8);
+                }
+            }
+            Codec::Int4 => {
+                // Two values per byte, low nibble first; nibbles store
+                // q + 8 ∈ [0, 15]. Odd tail leaves the high nibble 0.
+                let mut pending: Option<u8> = None;
+                for &e in &idx {
+                    let u = (q_of(data[e] - refd[e], scale, zp, qmin,
+                                  qmax)
+                             + 8) as u8;
+                    match pending.take() {
+                        Option::None => pending = Some(u),
+                        Some(lo_nib) => out.push(lo_nib | (u << 4)),
+                    }
+                }
+                if let Some(lo_nib) = pending {
+                    out.push(lo_nib);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decode `encode_update` output into `dest`'s active slots, adding
+/// the dequantized delta back onto `reference` (the assigned global
+/// both ends hold). Never panics on truncated, corrupted, or trailing
+/// bytes — every malformed input maps to a [`WireError`].
+pub fn decode_update(codec: Codec, bytes: &[u8], dest: &mut TensorMap,
+                     reference: &TensorMap, config: &LoraConfig,
+                     n_layers: usize, rank_dim: usize)
+                     -> Result<(), WireError> {
+    if codec == Codec::None {
+        return decode(bytes, dest, config, n_layers, rank_dim);
+    }
+    let mask = config.rank_mask(n_layers, rank_dim);
+    let mut off = 0usize;
+    for (spec, data) in &mut dest.entries {
+        let refd = reference
+            .get(&spec.name)
+            .expect("reference missing tensor");
+        let idx = active_indices(spec, &mask, n_layers, rank_dim);
+        if bytes.len() < off + TENSOR_HEADER_BYTES {
+            return Err(WireError::Truncated {
+                want: off + TENSOR_HEADER_BYTES,
+                got: bytes.len(),
+            });
+        }
+        let scale = f32::from_le_bytes(
+            bytes[off..off + 4].try_into().expect("checked above"));
+        let zp = i32::from_le_bytes(
+            bytes[off + 4..off + 8].try_into().expect("checked above"));
+        let count = u32::from_le_bytes(
+            bytes[off + 8..off + 12].try_into().expect("checked above"))
+            as usize;
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(WireError::BadHeader {
+                at: off,
+                why: "scale must be finite and positive",
+            });
+        }
+        off += TENSOR_HEADER_BYTES;
+        if count != idx.len() {
+            return Err(WireError::CountMismatch {
+                tensor: spec.name.clone(),
+                want: idx.len(),
+                got: count,
+            });
+        }
+        let nbytes = codec.packed_len(count);
+        if bytes.len() < off + nbytes {
+            return Err(WireError::Truncated {
+                want: off + nbytes,
+                got: bytes.len(),
+            });
+        }
+        match codec {
+            Codec::None => unreachable!(),
+            Codec::Int8 => {
+                for (i, &e) in idx.iter().enumerate() {
+                    let q = bytes[off + i] as i8 as i32;
+                    data[e] = refd[e] + dq_of(q, scale, zp);
+                }
+            }
+            Codec::Int4 => {
+                for (i, &e) in idx.iter().enumerate() {
+                    let byte = bytes[off + i / 2];
+                    let nib =
+                        if i % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+                    let q = nib as i32 - 8;
+                    data[e] = refd[e] + dq_of(q, scale, zp);
+                }
+            }
+        }
+        off += nbytes;
+    }
+    if off != bytes.len() {
+        return Err(WireError::Trailing(bytes.len() - off));
+    }
+    Ok(())
+}
+
+/// One device → PS exchange through the codec: encode on the device
+/// side, decode exactly once on the coordinator side, and report the
+/// real bytes that travelled. Returns `(wire_bytes, restored_update)`
+/// where `restored_update` is what the eq. 17 fold must consume — for
+/// `Codec::None` that is the update itself, untouched (bitwise
+/// pass-through, no copy); for quantized codecs it is the reference
+/// plus the dequantized delta.
+pub fn through_wire(codec: Codec, update: TensorMap,
+                    reference: &TensorMap, config: &LoraConfig,
+                    n_layers: usize, rank_dim: usize)
+                    -> Result<(usize, TensorMap), WireError> {
+    if codec == Codec::None {
+        let bytes =
+            active_payload_bytes(&update, config, n_layers, rank_dim);
+        return Ok((bytes, update));
+    }
+    let wire = encode_update(codec, &update, reference, config,
+                             n_layers, rank_dim);
+    let mut restored = reference.clone();
+    decode_update(codec, &wire, &mut restored, reference, config,
+                  n_layers, rank_dim)?;
+    Ok((wire.len(), restored))
 }
 
 #[cfg(test)]
@@ -161,15 +413,19 @@ mod tests {
         ]
     }
 
-    fn filled(seed: u64) -> TensorMap {
+    fn filled_of(seed: u64, specs: &[TensorSpec]) -> TensorMap {
         let mut rng = Rng::new(seed);
-        let mut t = TensorMap::zeros(&specs());
+        let mut t = TensorMap::zeros(specs);
         for (_, v) in &mut t.entries {
             for x in v.iter_mut() {
                 *x = rng.f32() - 0.5;
             }
         }
         t
+    }
+
+    fn filled(seed: u64) -> TensorMap {
+        filled_of(seed, &specs())
     }
 
     #[test]
@@ -241,5 +497,220 @@ mod tests {
         let mut dst = TensorMap::zeros(&specs());
         decode(&wire, &mut dst, &cfg, L, R).unwrap();
         assert_eq!(dst.get("bq").unwrap(), src.get("bq").unwrap());
+    }
+
+    #[test]
+    fn square_b_tensor_travels_along_last_axis() {
+        // Wire-level regression mirroring aggregation's
+        // `square_b_tensor_aggregates_along_last_axis`: encode a
+        // rank-1 update of a square bq, decode into a zeroed map, and
+        // the aggregator-active slots — column 0 of every row, i.e.
+        // elements with e % R == 0 — must be exactly the ones
+        // restored. Under the old shape-only `slot_layout`, squares
+        // always travelled row-major (the first R elements of each
+        // layer) and the transmitted slots were not the folded slots.
+        let sq = vec![TensorSpec {
+            name: "bq".into(),
+            shape: vec![L, R, R],
+        }];
+        let mut src = TensorMap::zeros(&sq);
+        for (_, v) in &mut src.entries {
+            v.iter_mut().for_each(|x| *x = 7.0);
+        }
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(L),
+            ranks: vec![1; L],
+        };
+        let wire = encode(&src, &cfg, L, R);
+        assert_eq!(wire.len(), L * R * 4,
+                   "rank-1 square bq ships R values per layer");
+        let mut dst = TensorMap::zeros(&sq);
+        decode(&wire, &mut dst, &cfg, L, R).unwrap();
+        for (e, &v) in dst.get("bq").unwrap().iter().enumerate() {
+            let want = if e % R == 0 { 7.0 } else { 0.0 };
+            assert_eq!(v, want, "bq[{e}]");
+        }
+    }
+
+    #[test]
+    fn codec_none_is_byte_identical_and_pass_through() {
+        let src = filled(7);
+        let zero = TensorMap::zeros(&specs());
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(3),
+            ranks: vec![0, 1, 2, 3],
+        };
+        let legacy = encode(&src, &cfg, L, R);
+        let coded = encode_update(Codec::None, &src, &zero, &cfg, L, R);
+        assert_eq!(legacy, coded, "codec=none must be today's bytes");
+        let (bytes, restored) =
+            through_wire(Codec::None, src.clone(), &zero, &cfg, L, R)
+                .unwrap();
+        assert_eq!(bytes, legacy.len());
+        assert_eq!(restored, src, "pass-through must be bitwise");
+    }
+
+    #[test]
+    fn quantized_roundtrip_error_within_affine_bound() {
+        for codec in [Codec::Int8, Codec::Int4] {
+            let (qmin, qmax) = codec.qrange();
+            let steps = (qmax - qmin) as f64;
+            for seed in 1..=8u64 {
+                let update = filled_of(seed, &specs());
+                let reference = filled_of(seed + 100, &specs());
+                let cfg = LoraConfig {
+                    layers: LayerSet::Depth(3),
+                    ranks: vec![1, 1, 2, 3],
+                };
+                let (bytes, restored) = through_wire(
+                    codec, update.clone(), &reference, &cfg, L, R)
+                    .unwrap();
+                assert_eq!(bytes,
+                           encoded_len(codec, &update, &cfg, L, R));
+                let mask = cfg.rank_mask(L, R);
+                for (spec, got) in &restored.entries {
+                    let want = update.get(&spec.name).unwrap();
+                    let refd = reference.get(&spec.name).unwrap();
+                    let idx = active_indices(spec, &mask, L, R);
+                    // Per-tensor bound: one quantization step of the
+                    // delta range (+ f32 slack).
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for &e in &idx {
+                        let v = want[e] - refd[e];
+                        lo = lo.min(v);
+                        hi = hi.max(v);
+                    }
+                    let bound =
+                        ((hi as f64 - lo as f64) / steps).max(1e-7)
+                            * (1.0 + 1e-4);
+                    for &e in &idx {
+                        let err = (got[e] as f64 - want[e] as f64).abs();
+                        assert!(
+                            err <= bound,
+                            "{:?} {}[{e}]: |{} - {}| = {err} > {bound}",
+                            codec, spec.name, got[e], want[e]
+                        );
+                    }
+                    // Inactive slots restore to the reference exactly.
+                    let active: std::collections::BTreeSet<usize> =
+                        idx.iter().copied().collect();
+                    for e in 0..got.len() {
+                        if !active.contains(&e) {
+                            assert_eq!(got[e], refd[e],
+                                       "inactive {}[{e}]", spec.name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_wire_is_smaller_than_f32() {
+        let src = filled(9);
+        let cfg = LoraConfig::uniform(LayerSet::All, R, L);
+        let f32_bytes = active_payload_bytes(&src, &cfg, L, R);
+        let i8_bytes = encoded_len(Codec::Int8, &src, &cfg, L, R);
+        let i4_bytes = encoded_len(Codec::Int4, &src, &cfg, L, R);
+        assert!(i8_bytes < f32_bytes, "{i8_bytes} !< {f32_bytes}");
+        assert!(i4_bytes < i8_bytes, "{i4_bytes} !< {i8_bytes}");
+    }
+
+    #[test]
+    fn constant_delta_roundtrips_exactly() {
+        // A degenerate (zero-range) delta must hit the scale fallback
+        // and restore exactly: q == zp everywhere ⇒ dq == 0.
+        let reference = filled(10);
+        let update = reference.clone();
+        let cfg = LoraConfig::uniform(LayerSet::All, R, L);
+        for codec in [Codec::Int8, Codec::Int4] {
+            let (_, restored) = through_wire(
+                codec, update.clone(), &reference, &cfg, L, R)
+                .unwrap();
+            assert_eq!(restored, update, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn decode_never_panics_on_malformed_bytes() {
+        let update = filled(11);
+        let reference = filled(12);
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(3),
+            ranks: vec![2, 1, 2, 3],
+        };
+        for codec in [Codec::None, Codec::Int8, Codec::Int4] {
+            let wire = encode_update(codec, &update, &reference, &cfg,
+                                     L, R);
+            // Every truncation prefix is rejected, never a panic.
+            for cut in 0..wire.len() {
+                let mut dst = reference.clone();
+                assert!(
+                    decode_update(codec, &wire[..cut], &mut dst,
+                                  &reference, &cfg, L, R)
+                        .is_err(),
+                    "{codec:?}: prefix {cut}/{} accepted", wire.len()
+                );
+            }
+            // Trailing garbage is rejected.
+            let mut long = wire.clone();
+            long.extend_from_slice(&[0xAB; 3]);
+            let mut dst = reference.clone();
+            assert!(matches!(
+                decode_update(codec, &long, &mut dst, &reference, &cfg,
+                              L, R),
+                Err(WireError::Trailing(3))
+            ));
+            // Single-byte corruption anywhere either decodes to
+            // *something* or errors — never panics. (Headers carry
+            // scale/zp/count; bit-flipped counts and scales must be
+            // caught, value bytes are always in-range by
+            // construction.)
+            for i in 0..wire.len() {
+                let mut bad = wire.clone();
+                bad[i] ^= 0xFF;
+                let mut dst = reference.clone();
+                let _ = decode_update(codec, &bad, &mut dst, &reference,
+                                      &cfg, L, R);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_reported_as_wire_errors() {
+        let update = filled(13);
+        let reference = filled(14);
+        let cfg = LoraConfig::uniform(LayerSet::All, 2, L);
+        let wire = encode_update(Codec::Int8, &update, &reference, &cfg,
+                                 L, R);
+        // Non-finite scale in the first header.
+        let mut bad = wire.clone();
+        bad[0..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        let mut dst = reference.clone();
+        assert!(matches!(
+            decode_update(Codec::Int8, &bad, &mut dst, &reference, &cfg,
+                          L, R),
+            Err(WireError::BadHeader { at: 0, .. })
+        ));
+        // Wrong active count in the first header.
+        let mut bad = wire.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut dst = reference.clone();
+        assert!(matches!(
+            decode_update(Codec::Int8, &bad, &mut dst, &reference, &cfg,
+                          L, R),
+            Err(WireError::CountMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn codec_names_roundtrip() {
+        for codec in [Codec::None, Codec::Int8, Codec::Int4] {
+            assert_eq!(Codec::by_name(codec.name()).unwrap(), codec);
+        }
+        assert!(Codec::by_name("int2").is_err());
+        assert!(!Codec::None.uses_delta());
+        assert!(Codec::Int8.uses_delta() && Codec::Int4.uses_delta());
     }
 }

@@ -26,6 +26,7 @@ use crate::model::Manifest;
 use super::async_engine::AsyncEngine;
 use super::engine::RoundEngine;
 use super::participation::{Full, Participation};
+use super::serialize::Codec;
 use super::strategy::Strategy;
 use super::trainer::Trainer;
 
@@ -88,6 +89,13 @@ pub struct FedConfig {
     /// (`exp::run_strategy_with`, `legend run --lazy`); bit-identical
     /// to the eager fleet for the same seed.
     pub lazy_fleet: bool,
+    /// Uplink update codec (`--codec none|int8|int4`): quantized
+    /// modes ship per-tensor affine-quantized deltas vs the assigned
+    /// global and are dequantized exactly once before the eq. 17
+    /// fold; `Codec::None` is today's raw-f32 wire, bitwise.
+    /// Assignments (downlink) always travel f32 — see
+    /// docs/TRANSPORT.md.
+    pub codec: Codec,
     pub verbose: bool,
 }
 
@@ -112,6 +120,7 @@ impl Default for FedConfig {
             max_staleness: 2,
             edge_aggregators: 1,
             lazy_fleet: false,
+            codec: Codec::None,
             verbose: false,
         }
     }

@@ -7,6 +7,9 @@
 //! the same place the paper does. Payloads are the *logically
 //! transmitted* bytes: only a device's active LoRA slots travel (plus
 //! the head and a fixed-size status report), never the padded tensors.
+//! Uplink updates go through the run's [`super::serialize::Codec`] —
+//! the engine encodes/decodes and hands this layer the real
+//! bytes-on-wire; assignments always travel f32 (docs/TRANSPORT.md).
 //!
 //! Accounting rules under partial participation (engine cohorts):
 //! a sampled-out device exchanges **nothing** — no `STATUS_BYTES`, no
@@ -15,6 +18,15 @@
 //! nothing else (ISSUE: "STATUS_BYTES only for devices that actually
 //! reported"). Only devices the engine actually touched appear in the
 //! round tally.
+//!
+//! Every exchange carries its **logical round** explicitly: under the
+//! async engine an update can complete (and be tallied) after
+//! `begin_round` has advanced, and a round stamp read from shared
+//! transport state at record time would mis-attribute it to the new
+//! round. Tallies remain arrival-time (a late fold is traffic of the
+//! window it lands in — that is what Fig. 11 measures), but the log
+//! stamps each message with the round the exchange logically belongs
+//! to.
 //!
 //! Thread safety: tallies are atomic and the message log is behind a
 //! mutex, so every method takes `&self` and the endpoint can be shared
@@ -84,7 +96,6 @@ impl Counters {
 /// The PS-side transport endpoint.
 #[derive(Debug, Default)]
 pub struct Transport {
-    round: AtomicUsize,
     current: Counters,
     total: Counters,
     /// Optional message log (enabled for tests/debugging).
@@ -107,13 +118,16 @@ impl Transport {
         }
     }
 
-    pub fn begin_round(&self, round: usize) {
-        self.round.store(round, Ordering::Release);
+    /// Reset the per-round tallies. The round itself is *not* latched
+    /// here — each exchange names its logical round explicitly, so a
+    /// late async completion cannot be mis-stamped into the round that
+    /// happens to be current at record time.
+    pub fn begin_round(&self) {
         self.current.reset();
     }
 
-    fn record(&self, tag: Tag, device: usize, bytes: usize,
-              uplink: bool) {
+    fn record(&self, tag: Tag, device: usize, round: usize,
+              bytes: usize, uplink: bool) {
         if uplink {
             self.current.uplink.fetch_add(bytes, Ordering::AcqRel);
             self.total.uplink.fetch_add(bytes, Ordering::AcqRel);
@@ -127,7 +141,7 @@ impl Transport {
             log.lock().expect("log poisoned").push(Message {
                 tag,
                 device,
-                round: self.round.load(Ordering::Acquire),
+                round,
                 bytes,
             });
         }
@@ -136,29 +150,30 @@ impl Transport {
     /// PS → device: assign the active LoRA slots + head (§4.6).
     /// Returns the counted payload bytes. The in-process "wire" is a
     /// shared reference to the global model (devices never mutate
-    /// their assignment), so nothing is copied here.
-    pub fn send_assignment(&self, device: usize, global: &TensorMap,
-                           config: &LoraConfig, n_layers: usize,
-                           rank_dim: usize) -> usize {
+    /// their assignment), so nothing is copied here — and assignments
+    /// always travel f32, so the payload is the raw active footprint.
+    pub fn send_assignment(&self, round: usize, device: usize,
+                           global: &TensorMap, config: &LoraConfig,
+                           n_layers: usize, rank_dim: usize) -> usize {
         let bytes = serialize::active_payload_bytes(
             global, config, n_layers, rank_dim);
-        self.record(Tag::Assign, device, bytes, false);
+        self.record(Tag::Assign, device, round, bytes, false);
         bytes
     }
 
-    /// device → PS: upload the updated active slots.
-    pub fn recv_update(&self, device: usize, update: &TensorMap,
-                       config: &LoraConfig, n_layers: usize,
-                       rank_dim: usize) -> usize {
-        let bytes = serialize::active_payload_bytes(
-            update, config, n_layers, rank_dim);
-        self.record(Tag::Update, device, bytes, true);
+    /// device → PS: upload the updated active slots. `bytes` is the
+    /// real encoded size the engine put through the codec
+    /// (`serialize::through_wire`), so the tally reflects what
+    /// actually travels under `--codec`.
+    pub fn recv_update(&self, round: usize, device: usize,
+                       bytes: usize) -> usize {
+        self.record(Tag::Update, device, round, bytes, true);
         bytes
     }
 
     /// device → PS: status report (μ̂, β̂).
-    pub fn recv_status(&self, device: usize) {
-        self.record(Tag::Status, device, STATUS_BYTES, true);
+    pub fn recv_status(&self, round: usize, device: usize) {
+        self.record(Tag::Status, device, round, STATUS_BYTES, true);
     }
 
     pub fn round_tally(&self) -> Tally {
@@ -197,15 +212,19 @@ mod tests {
         LoraConfig { layers: LayerSet::Depth(depth), ranks: vec![2; L] }
     }
 
+    fn payload(c: &LoraConfig) -> usize {
+        serialize::active_payload_bytes(&global(), c, L, R)
+    }
+
     #[test]
     fn tallies_conserve_and_split_by_direction() {
         let t = Transport::with_log();
-        t.begin_round(1);
+        t.begin_round();
         let g = global();
         let c = cfg(2);
-        let down = t.send_assignment(0, &g, &c, L, R);
-        t.recv_status(0);
-        let up = t.recv_update(0, &g, &c, L, R);
+        let down = t.send_assignment(1, 0, &g, &c, L, R);
+        t.recv_status(1, 0);
+        let up = t.recv_update(1, 0, payload(&c));
         let tally = t.round_tally();
         assert_eq!(down, up, "symmetric assign/update payload");
         assert_eq!(tally.downlink, up);
@@ -217,12 +236,12 @@ mod tests {
     #[test]
     fn deeper_config_costs_more_bytes() {
         let t = Transport::new();
-        t.begin_round(1);
+        t.begin_round();
         let g = global();
-        let _ = t.send_assignment(0, &g, &cfg(1), L, R);
+        let _ = t.send_assignment(1, 0, &g, &cfg(1), L, R);
         let shallow = t.round_tally().downlink;
-        t.begin_round(2);
-        let _ = t.send_assignment(0, &g, &cfg(4), L, R);
+        t.begin_round();
+        let _ = t.send_assignment(2, 0, &g, &cfg(4), L, R);
         let deep = t.round_tally().downlink;
         assert!(deep > shallow);
     }
@@ -230,9 +249,9 @@ mod tests {
     #[test]
     fn begin_round_resets_current_not_total() {
         let t = Transport::new();
-        t.begin_round(1);
-        t.recv_status(0);
-        t.begin_round(2);
+        t.begin_round();
+        t.recv_status(1, 0);
+        t.begin_round();
         assert_eq!(t.round_tally(), Tally::default());
         assert_eq!(t.total_tally().uplink, STATUS_BYTES);
     }
@@ -243,15 +262,15 @@ mod tests {
         // tally must be exactly two devices' worth of traffic and two
         // STATUS_BYTES — nothing for the skipped device.
         let t = Transport::with_log();
-        t.begin_round(1);
+        t.begin_round();
         let g = global();
         let c = cfg(4);
         let mut down = 0;
         let mut up = 0;
         for dev in [0usize, 2] {
-            t.recv_status(dev);
-            down += t.send_assignment(dev, &g, &c, L, R);
-            up += t.recv_update(dev, &g, &c, L, R);
+            t.recv_status(1, dev);
+            down += t.send_assignment(1, dev, &g, &c, L, R);
+            up += t.recv_update(1, dev, payload(&c));
         }
         let tally = t.round_tally();
         assert_eq!(tally.downlink, down);
@@ -263,14 +282,42 @@ mod tests {
     }
 
     #[test]
+    fn stale_update_logs_its_own_round() {
+        // Async-engine shape of events: the exchange for round 1 is
+        // tallied after begin_round has moved the endpoint on to
+        // round 3. The message must carry round 1 — the logical round
+        // passed by the caller — not whatever round is current at
+        // record time (the old `round` atomic mis-stamped exactly this
+        // case).
+        let t = Transport::with_log();
+        t.begin_round();
+        t.recv_status(1, 0);
+        t.begin_round(); // round 2 opens…
+        t.begin_round(); // …and round 3 opens before the fold lands.
+        let stale = t.recv_update(1, 0, 64);
+        let fresh = t.recv_update(3, 1, 64);
+        assert_eq!(stale, fresh);
+        let log = t.log_snapshot().unwrap();
+        assert_eq!(log.len(), 3);
+        assert_eq!((log[1].tag, log[1].device, log[1].round),
+                   (Tag::Update, 0, 1),
+                   "stale-but-admitted update keeps its own round");
+        assert_eq!((log[2].tag, log[2].device, log[2].round),
+                   (Tag::Update, 1, 3));
+        // Arrival-time tallies are unchanged: both updates land in the
+        // current window's counters.
+        assert_eq!(t.round_tally().uplink, 128);
+    }
+
+    #[test]
     fn shared_across_threads() {
         // &self endpoint: concurrent status reports all land.
         let t = Transport::new();
-        t.begin_round(1);
+        t.begin_round();
         std::thread::scope(|s| {
             for dev in 0..8 {
                 let t = &t;
-                s.spawn(move || t.recv_status(dev));
+                s.spawn(move || t.recv_status(1, dev));
             }
         });
         assert_eq!(t.round_tally().uplink, 8 * STATUS_BYTES);

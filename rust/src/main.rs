@@ -19,6 +19,10 @@
 //!          1/(1+τ)^α); --staleness-alpha A (α ≥ 0) and
 //!          --max-staleness S tune it. --async --max-staleness 0
 //!          reproduces the synchronous engine bitwise.
+//!          Update codec: --codec none|int8|int4 quantizes uplink
+//!          updates (per-tensor affine delta vs the assigned global,
+//!          dequantized once before the fold; see docs/TRANSPORT.md).
+//!          --codec none reproduces today's wire bitwise.
 //!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
 //!   fleet  describe the simulated 80-device testbed (Table 1)
 //!   data   describe the synthetic datasets (Table 2)
@@ -67,6 +71,8 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         staleness_alpha: args
             .get_parse("staleness-alpha", d.staleness_alpha)?,
         max_staleness: args.get_parse("max-staleness", d.max_staleness)?,
+        codec: legend::coordinator::Codec::by_name(&args.get_choice(
+            "codec", d.codec.name(), &["none", "int8", "int4"])?)?,
         verbose: !args.flag("quiet"),
     };
     if !cfg.staleness_alpha.is_finite() || cfg.staleness_alpha < 0.0 {

@@ -167,6 +167,10 @@ test_loss,mean_depth,participants,dropped";
                                     Value::Num(r.up_bytes as f64),
                                 ),
                                 (
+                                    "down_bytes",
+                                    Value::Num(r.down_bytes as f64),
+                                ),
+                                (
                                     "avg_waiting",
                                     Value::Num(r.avg_waiting),
                                 ),
@@ -308,6 +312,11 @@ mod tests {
         let parsed =
             crate::util::json::Value::parse(&v.to_string()).unwrap();
         assert_eq!(parsed.get("method").as_str(), Some("m"));
-        assert_eq!(parsed.get("rounds").as_arr().unwrap().len(), 2);
+        let rounds = parsed.get("rounds").as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        // Both traffic directions survive the JSON path (the codec's
+        // byte-honest tallies are checked against these leaves).
+        assert_eq!(rounds[0].get("up_bytes").as_f64(), Some(100.0));
+        assert_eq!(rounds[0].get("down_bytes").as_f64(), Some(50.0));
     }
 }

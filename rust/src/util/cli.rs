@@ -251,6 +251,23 @@ mod tests {
     }
 
     #[test]
+    fn codec_knob_parses_and_defaults() {
+        // The `run` surface for the uplink update codec.
+        let choices = ["none", "int8", "int4"];
+        let a = parse("run --codec int8");
+        assert_eq!(a.get_choice("codec", "none", &choices).unwrap(),
+                   "int8");
+        assert!(a.reject_unknown().is_ok());
+        // Omitted: today's f32 wire.
+        let b = parse("run");
+        assert_eq!(b.get_choice("codec", "none", &choices).unwrap(),
+                   "none");
+        // Malformed values fail loudly, mirroring --participation.
+        let c = parse("run --codec int16");
+        assert!(c.get_choice("codec", "none", &choices).is_err());
+    }
+
+    #[test]
     fn choice_validates_against_set() {
         let a = parse("run --participation sample");
         let choices = ["full", "sample", "deadline"];

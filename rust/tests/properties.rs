@@ -15,7 +15,7 @@ use legend::coordinator::participation::{DeadlineDrop, Participation,
 use legend::coordinator::strategy as fedstrategy;
 use legend::coordinator::trainer::{DeviceTrainer, LocalOutcome,
                                    MockTrainer};
-use legend::coordinator::{run_federated, FedConfig, ModelMeta};
+use legend::coordinator::{run_federated, Codec, FedConfig, ModelMeta};
 use legend::data::Spec;
 use legend::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use legend::data::{partition, Dataset, Example};
@@ -602,6 +602,30 @@ fn engine_run_async(method: &str, seed: u64, threads: usize,
     engine_run_cfg(method, &cfg)
 }
 
+/// Like [`engine_run`]/[`engine_run_async`], but with the uplink
+/// codec exposed (`max_staleness` only read when `async_mode`).
+#[allow(clippy::too_many_arguments)]
+fn engine_run_codec(method: &str, seed: u64, threads: usize,
+                    agg_shards: usize, window: usize, codec: Codec,
+                    async_mode: bool, max_staleness: usize)
+                    -> legend::metrics::RunRecord {
+    let cfg = FedConfig {
+        rounds: 3,
+        train_size: 256,
+        test_size: 64,
+        seed,
+        threads,
+        agg_shards,
+        window,
+        async_mode,
+        staleness_alpha: 0.5,
+        max_staleness,
+        codec,
+        ..Default::default()
+    };
+    engine_run_cfg(method, &cfg)
+}
+
 #[test]
 fn prop_engine_output_invariant_under_threads_shards_window() {
     // Same seed ⇒ bit-identical RunRecord at every
@@ -630,6 +654,139 @@ fn prop_engine_output_invariant_under_threads_shards_window() {
         );
         Ok(())
     });
+}
+
+#[test]
+fn prop_codec_none_is_the_default_wire_bitwise() {
+    // `--codec none` must reproduce today's RunRecord bitwise at every
+    // threads × agg-shards × window setting, sync and async, eager and
+    // lazy fleets — the codec layer is a pure pass-through when off.
+    let methods = ["legend", "hetlora", "fedadapter"];
+    check("codec-none-pass-through", 6, |rng, case| {
+        let method = methods[case % methods.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        for async_mode in [false, true] {
+            let legacy = engine_run_scaled(method, seed, 4, 2, 2, 1,
+                                           false, async_mode);
+            let coded = engine_run_codec(
+                method, seed, 2, 8, 1, Codec::None, async_mode,
+                if async_mode { 2 } else { 0 });
+            prop_assert!(
+                legacy.to_json().to_string()
+                    == coded.to_json().to_string(),
+                "{method} seed {seed} async={async_mode}: codec=none \
+                 JSON diverged from the legacy wire"
+            );
+            prop_assert!(
+                legacy.to_csv_rows() == coded.to_csv_rows(),
+                "{method} seed {seed} async={async_mode}: codec=none \
+                 CSV diverged from the legacy wire"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_codec_keeps_the_determinism_contract() {
+    // Quantization happens device-side before the fold, so a run is a
+    // pure function of (seed, codec): bit-identical RunRecord at every
+    // threads × agg-shards × window setting — and the async engine at
+    // S = 0 still degenerates to the sync engine bitwise, because the
+    // dispatch-time delta reference and the fold-time global coincide
+    // when every window waits for its own dispatches.
+    let methods = ["legend", "fedlora", "fedadapter"];
+    let codecs = [Codec::Int8, Codec::Int4];
+    check("codec-determinism", 6, |rng, case| {
+        let method = methods[case % methods.len()];
+        let codec = codecs[case % codecs.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        let base =
+            engine_run_codec(method, seed, 1, 1, 0, codec, false, 0);
+        let want = base.to_json().to_string();
+        for (threads, shards, window) in [(4usize, 4usize, 2usize),
+                                          (2, 8, 1)] {
+            let got = engine_run_codec(method, seed, threads, shards,
+                                       window, codec, false, 0);
+            prop_assert!(
+                got.to_json().to_string() == want,
+                "{method} {codec:?} seed {seed}: JSON diverged at \
+                 threads={threads} shards={shards} window={window}"
+            );
+        }
+        let asy =
+            engine_run_codec(method, seed, 4, 4, 2, codec, true, 0);
+        prop_assert!(
+            asy.to_json().to_string() == want,
+            "{method} {codec:?} seed {seed}: async S=0 diverged from \
+             the sync engine under quantization"
+        );
+        prop_assert!(
+            asy.to_csv_rows() == base.to_csv_rows(),
+            "{method} {codec:?} seed {seed}: async S=0 CSV diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_codec_shrinks_uplink_traffic() {
+    // Fig-11-style comparison at a fixed seed. The toy engine model is
+    // tiny, so per-tensor headers and STATUS_BYTES weigh relatively
+    // more than on real dims — the hard ≥ 35% total-traffic floor is
+    // enforced on paper-dimension tensors by the bench
+    // (`int8_savings_ratio` in BENCH_engine.json, bound in
+    // scripts/bench_diff.py); here we check the structural facts.
+    let seed = 77;
+    let none = engine_run_codec("legend", seed, 1, 1, 0, Codec::None,
+                                false, 0);
+    let int8 = engine_run_codec("legend", seed, 1, 1, 0, Codec::Int8,
+                                false, 0);
+    let int4 = engine_run_codec("legend", seed, 1, 1, 0, Codec::Int4,
+                                false, 0);
+    // Round 1 is decided before any quantization error can feed back
+    // through losses, so its assignment traffic must match exactly —
+    // assignments always travel f32.
+    assert_eq!(none.rounds[0].down_bytes, int8.rounds[0].down_bytes,
+               "downlink must be codec-independent");
+    assert_eq!(none.rounds[0].down_bytes, int4.rounds[0].down_bytes);
+    let up = |r: &legend::metrics::RunRecord| -> usize {
+        r.rounds.iter().map(|x| x.up_bytes).sum()
+    };
+    assert!(up(&int8) < up(&none),
+            "int8 uplink {} !< f32 uplink {}", up(&int8), up(&none));
+    assert!(up(&int4) < up(&int8),
+            "int4 uplink {} !< int8 uplink {}", up(&int4), up(&int8));
+    // ~4× on the update payload ⇒ well under half even with status
+    // reports and headers riding along.
+    assert!(up(&int8) * 2 < up(&none),
+            "int8 uplink {} not < half of {}", up(&int8), up(&none));
+    let savings =
+        1.0 - int8.total_traffic() as f64 / none.total_traffic() as f64;
+    assert!(savings >= 0.30,
+            "int8 total-traffic savings {savings:.3} < 0.30 even on \
+             the toy model");
+}
+
+/// Fixed-seed int8 oracle run mirroring
+/// `async_oracle_emits_canonical_run_record`: CI's determinism job
+/// runs this twice in separate processes and diffs the artifact, so
+/// the quantized path is held to the same cross-process
+/// bit-reproducibility bar as the raw-f32 wire.
+#[test]
+fn codec_int8_emits_canonical_run_record() {
+    let seed = 424_244;
+    let sync =
+        engine_run_codec("legend", seed, 4, 4, 2, Codec::Int8, false, 0);
+    let asy =
+        engine_run_codec("legend", seed, 4, 4, 2, Codec::Int8, true, 2);
+    let doc = format!(
+        "{{\"int8\":{},\"int8_async_s2\":{}}}",
+        sync.to_json(),
+        asy.to_json()
+    );
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/DETERMINISM_codec_int8.json", doc).unwrap();
 }
 
 #[test]

@@ -17,6 +17,10 @@ Semantics:
   * `rss_ratio` is special-cased as a hard bound: the lazy-fleet
     acceptance criterion is peak RSS within 10x of the eager-80 run,
     independent of runner speed.
+  * `*savings_ratio` leaves are the mirror case, a hard LOWER bound:
+    the codec acceptance criterion is int8+delta cutting total
+    bytes-on-wire by at least 35% vs codec=none (docs/TRANSPORT.md),
+    independent of what the baseline recorded.
   * A null baseline leaf means the committed baseline is unmeasured at
     that path. It is reported with a clear message and, under --strict,
     fails with a DISTINCT exit code (2) so CI can tell "baseline was
@@ -26,7 +30,9 @@ Semantics:
     doesn't know are dropped).
   * A numeric baseline leaf that the current measurement no longer
     reports is a regression (the bench silently stopped measuring
-    something the baseline tracks).
+    something the baseline tracks) — unless the leaf's whole top-level
+    section is absent, which is how a filtered bench run
+    (`cargo bench -- engine_lazy`) looks and is not a loss.
   * Exit code is non-zero only under --strict; the default mode is
     informational so local runs on slow machines don't fail.
 
@@ -38,6 +44,7 @@ import json
 import sys
 
 RSS_RATIO_BOUND = 10.0  # acceptance: lazy peak RSS <= 10x eager-80
+SAVINGS_RATIO_BOUND = 0.35  # acceptance: codec saves >= 35% of bytes
 
 EXIT_OK = 0
 EXIT_REGRESSION = 1  # a measured value regressed (or went missing)
@@ -74,6 +81,12 @@ def compare(baseline, current, tolerance):
             else:
                 improvements.append((path, RSS_RATIO_BOUND, cur))
             continue
+        if path.endswith("savings_ratio"):
+            if cur < SAVINGS_RATIO_BOUND:
+                regressions.append((path, SAVINGS_RATIO_BOUND, cur))
+            else:
+                improvements.append((path, SAVINGS_RATIO_BOUND, cur))
+            continue
         if ref is None or not isinstance(ref, (int, float)):
             unmeasured.append(path)
             continue
@@ -90,12 +103,22 @@ def compare(baseline, current, tolerance):
             regressions.append((path, ref, cur))
     # Numeric baseline leaves the current run no longer reports: the
     # bench silently stopped measuring something the baseline tracks.
+    # A top-level section wholly absent from the current doc is a
+    # *filtered* bench run (`cargo bench -- engine_lazy` emits only its
+    # own section), not a silent loss — only sections the run did emit
+    # are held to this.
+    emitted = set(current) if isinstance(current, dict) else set()
+
+    def section(path):
+        return path.split(".", 1)[0].split("[", 1)[0]
+
     missing = [
         path
         for path, ref in sorted(base.items())
         if isinstance(ref, (int, float)) and not isinstance(ref, bool)
         and not (path.endswith(".note") or path == "note")
         and path not in cur_paths
+        and section(path) in emitted
     ]
     return regressions, improvements, unmeasured, missing
 

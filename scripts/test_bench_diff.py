@@ -4,10 +4,11 @@ Run from the repo root:
 
     python3 -m unittest discover -s scripts -p 'test_*.py' -v
 
-Covers the three behaviours CI leans on: null-baseline leaves fail
-strict runs with the distinct EXIT_UNMEASURED code, leaves the
-baseline tracks but the run stopped reporting are regressions, and
-the rss_ratio hard bound fires independently of the baseline.
+Covers the behaviours CI leans on: null-baseline leaves fail strict
+runs with the distinct EXIT_UNMEASURED code, leaves the baseline
+tracks but the run stopped reporting are regressions (except whole
+sections omitted by a filtered bench run), and the rss_ratio /
+savings_ratio hard bounds fire independently of the baseline.
 """
 
 import importlib.util
@@ -84,6 +85,34 @@ class CompareTests(unittest.TestCase):
         self.assertEqual(
             ok, [("lazy.rss_ratio", bench_diff.RSS_RATIO_BOUND, 3.5)])
 
+    def test_filtered_out_section_is_not_missing(self):
+        # `cargo bench -- engine_lazy` emits only its own section; the
+        # other sections' numeric config echoes must not read as the
+        # bench having silently stopped measuring them.
+        reg, ok, unmeasured, missing = self.cmp(
+            {"fleets": [{"devices": 8, "seq_ms": 10.0}],
+             "lazy": {"rss_ratio": None}},
+            {"lazy": {"rss_ratio": 3.5}})
+        self.assertEqual((reg, unmeasured, missing), ([], [], []))
+
+    def test_savings_ratio_bound_fires_even_with_null_baseline(self):
+        reg, _, unmeasured, _ = self.cmp(
+            {"codec": {"int8_savings_ratio": None}},
+            {"codec": {"int8_savings_ratio": 0.20}})
+        self.assertEqual(
+            reg, [("codec.int8_savings_ratio",
+                   bench_diff.SAVINGS_RATIO_BOUND, 0.20)])
+        self.assertEqual(unmeasured, [])
+
+    def test_savings_ratio_at_or_above_bound_is_ok(self):
+        reg, ok, _, _ = self.cmp(
+            {"codec": {"int8_savings_ratio": None}},
+            {"codec": {"int8_savings_ratio": 0.37}})
+        self.assertEqual(reg, [])
+        self.assertEqual(
+            ok, [("codec.int8_savings_ratio",
+                  bench_diff.SAVINGS_RATIO_BOUND, 0.37)])
+
     def test_note_leaves_are_ignored(self):
         reg, ok, unmeasured, missing = self.cmp(
             {"note": "schema doc", "n": 1},
@@ -129,6 +158,22 @@ class MainExitCodeTests(unittest.TestCase):
         code = self.run_main({"lazy": {"rss_ratio": None}},
                              {"lazy": {"rss_ratio": 50.0}}, "--strict")
         self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_savings_bound_violation_exits_regression(self):
+        code = self.run_main(
+            {"codec": {"int8_savings_ratio": None}},
+            {"codec": {"int8_savings_ratio": 0.1}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_filtered_run_tolerates_absent_sections(self):
+        # The scale-smoke job diffs an engine_lazy-only doc against the
+        # full baseline: sections the filter skipped are not missing.
+        code = self.run_main(
+            {"fleets": [{"devices": 8, "seq_ms": 10.0}],
+             "lazy": {"cohort": 1000, "lazy_round_ms": None}},
+            {"lazy": {"cohort": 1000, "lazy_round_ms": 5.0}},
+            "--strict")
+        self.assertEqual(code, bench_diff.EXIT_UNMEASURED)
 
     def test_strict_clean_measured_run_exits_ok(self):
         code = self.run_main({"fold": {"single_ms": 10.0}},
