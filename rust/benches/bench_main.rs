@@ -636,6 +636,66 @@ fn main() {
         ));
     }
 
+    // ---- realloc: per-round plan refits vs the static plan -----------------
+    // The same fixed-seed 4-round / 64-device run with the LCD plan
+    // frozen (realloc off) and refit every 2 rounds. The refit is an
+    // O(cohort) LCD solve plus the EWMA band check — coordination-side
+    // only, so the overhead ratio must stay small regardless of runner
+    // speed; scripts/bench_diff.py holds `realloc_overhead_ratio` to a
+    // hard 1.5× bound. `epochs_adopted` is deterministic (fixed seed)
+    // and must match exactly once measured.
+    if want("engine_realloc") {
+        let realloc_run = |every: usize| -> (f64, usize) {
+            let mut s = strategy::by_name("legend", L, R, 32).unwrap();
+            let mut fleet = Fleet::new(FleetConfig::sized(64));
+            let mut trainer = MockTrainer::new("lora");
+            let cfg = FedConfig {
+                rounds: 4,
+                train_size: 64 * 64,
+                test_size: 64,
+                realloc_every: every,
+                realloc_hysteresis: 0.05,
+                ..Default::default()
+            };
+            let global = TensorMap::zeros(&real_specs());
+            let t0 = Instant::now();
+            let rec = run_federated(&cfg, &mut fleet, s.as_mut(),
+                                    &mut trainer, &meta, &spec, global)
+                .unwrap();
+            (t0.elapsed().as_secs_f64() * 1e3, rec.rank_realloc_epochs)
+        };
+        let best = |every: usize| -> (f64, usize) {
+            (0..3).map(|_| realloc_run(every)).fold(
+                (f64::MAX, 0),
+                |acc, x| if x.0 < acc.0 { x } else { acc },
+            )
+        };
+        let (static_ms, _) = best(0);
+        let (realloc_ms, epochs) = best(2);
+        let overhead = realloc_ms / static_ms.max(1e-9);
+        println!(
+            "{:<40} {:>9.1} ms {:>9.1} ms {:>11.2}× {:>7}",
+            "engine_realloc_k2_vs_static_64dev",
+            static_ms,
+            realloc_ms,
+            overhead,
+            64
+        );
+        engine_doc.push((
+            "realloc",
+            Value::obj(vec![
+                ("devices", Value::Num(64.0)),
+                ("rounds", Value::Num(4.0)),
+                ("realloc_every", Value::Num(2.0)),
+                ("realloc_hysteresis", Value::Num(0.05)),
+                ("epochs_adopted", Value::Num(epochs as f64)),
+                ("static_ms", Value::Num(static_ms)),
+                ("realloc_ms", Value::Num(realloc_ms)),
+                ("realloc_overhead_ratio", Value::Num(overhead)),
+            ]),
+        ));
+    }
+
     if !engine_doc.is_empty() {
         let mut fields = vec![
             ("bench", Value::Str("engine".into())),

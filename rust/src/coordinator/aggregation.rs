@@ -40,6 +40,7 @@
 //! bits as the flat fold. Quantization error is ~2⁻⁶⁰ relative, far
 //! below the f32 output precision.
 
+use std::borrow::Cow;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -49,7 +50,7 @@ use anyhow::{anyhow, Result};
 use crate::model::masks::LoraConfig;
 use crate::model::state::TensorMap;
 
-use super::layout::{classify, Pattern};
+use super::layout::{self, classify, Pattern};
 
 /// One device's returned update + the configuration it trained under.
 #[derive(Debug, Clone)]
@@ -124,6 +125,24 @@ fn fold_tensor(pat: Pattern, n_layers: usize, x: &[f32], mask: &[f32],
     }
 }
 
+/// Bring one update tensor to the global element count `n`,
+/// zero-padding smaller-rank storage through the single padding rule
+/// ([`layout::pad_to_rank`]) — how every fold path accepts an update a
+/// device trimmed to its own max rank (`serialize::trim_to_rank`).
+/// Full-size tensors borrow without copying; a size that cannot pad to
+/// exactly `n` is shape drift and panics like a missing tensor would.
+fn at_full_rank<'a>(pat: Pattern, n_layers: usize, x: &'a [f32],
+                    n: usize, name: &str) -> Cow<'a, [f32]> {
+    if x.len() == n {
+        return Cow::Borrowed(x);
+    }
+    match layout::pad_to_rank(pat, n_layers, x.to_vec()) {
+        Some(p) if p.len() == n => Cow::Owned(p),
+        _ => panic!("shape drift in {name}: {} elems cannot pad to {n}",
+                    x.len()),
+    }
+}
+
 /// Aggregate `updates` into `global` in place.
 ///
 /// `rank_dim` is r_max for the lora family / w_max for adapters.
@@ -150,8 +169,8 @@ pub fn aggregate(global: &mut TensorMap, updates: &[DeviceUpdate],
                 .trainable
                 .get(&spec.name)
                 .expect("device update missing tensor");
-            debug_assert_eq!(x.len(), n, "shape drift in {}", spec.name);
-            fold_tensor(pat, n_layers, x, mask, u.weight, &mut acc,
+            let x = at_full_rank(pat, n_layers, x, n, &spec.name);
+            fold_tensor(pat, n_layers, &x, mask, u.weight, &mut acc,
                         &mut wsum);
         }
 
@@ -302,8 +321,8 @@ impl StreamingAggregator {
             let x = trainable
                 .get(name)
                 .expect("device update missing tensor");
-            debug_assert_eq!(x.len(), *n, "shape drift in {name}");
-            fold_tensor(*pat, self.n_layers, x, &mask, weight,
+            let x = at_full_rank(*pat, self.n_layers, x, *n, name);
+            fold_tensor(*pat, self.n_layers, &x, &mask, weight,
                         &mut self.acc[ti], &mut self.wsum[ti]);
         }
         self.n_updates += 1;
@@ -413,9 +432,10 @@ enum ShardMode {
 pub struct ShardedAggregator {
     n_layers: usize,
     rank_dim: usize,
-    /// Global tensor count (for reassembling worker shards into dense
-    /// [`FoldSums`] at `into_sums`).
-    n_tensors: usize,
+    /// Global tensor layout: (name, pattern, element count). Worker
+    /// mode pads trimmed-rank updates against this ONCE per push, so
+    /// the shards share a single full-size copy behind the `Arc`.
+    layout: Vec<(String, Pattern, usize)>,
     mode: ShardMode,
     n_updates: usize,
     /// Minimum acceptable model version for [`Self::push_versioned`].
@@ -434,11 +454,22 @@ impl ShardedAggregator {
             shards
         };
         let shards = want.min(global.entries.len().max(1));
+        let layout: Vec<(String, Pattern, usize)> = global
+            .entries
+            .iter()
+            .map(|(spec, g)| {
+                (
+                    spec.name.clone(),
+                    classify(spec, n_layers, rank_dim),
+                    g.len(),
+                )
+            })
+            .collect();
         if shards <= 1 {
             return ShardedAggregator {
                 n_layers,
                 rank_dim,
-                n_tensors: global.entries.len(),
+                layout,
                 mode: ShardMode::Inline(StreamingAggregator::new(
                     global, n_layers, rank_dim,
                 )),
@@ -486,7 +517,7 @@ impl ShardedAggregator {
         ShardedAggregator {
             n_layers,
             rank_dim,
-            n_tensors: global.entries.len(),
+            layout,
             mode: ShardMode::Workers { txs, handles },
             n_updates: 0,
             watermark: 0,
@@ -523,6 +554,20 @@ impl ShardedAggregator {
             }
             ShardMode::Workers { txs, .. } => {
                 let mask = config.rank_mask(self.n_layers, self.rank_dim);
+                // Pad trimmed-rank tensors once, before the broadcast:
+                // every shard then reads the same full-size copy.
+                let mut trainable = trainable;
+                for (name, pat, n) in &self.layout {
+                    let Some(v) = trainable.get_mut(name) else {
+                        continue; // missing tensor: the worker panics
+                    };
+                    if v.len() != *n {
+                        let x = std::mem::take(v);
+                        *v = at_full_rank(*pat, self.n_layers, &x, *n,
+                                          name)
+                            .into_owned();
+                    }
+                }
                 let msg: FoldMsg = Arc::new((trainable, mask, weight));
                 for tx in txs.iter() {
                     tx.send(msg.clone()).map_err(|_| {
@@ -560,8 +605,9 @@ impl ShardedAggregator {
                         anyhow!("aggregation shard panicked")
                     })?);
                 }
-                let mut acc: Vec<Vec<i128>> = vec![Vec::new(); self.n_tensors];
-                let mut wsum: Vec<Vec<i128>> = vec![Vec::new(); self.n_tensors];
+                let n_tensors = self.layout.len();
+                let mut acc: Vec<Vec<i128>> = vec![Vec::new(); n_tensors];
+                let mut wsum: Vec<Vec<i128>> = vec![Vec::new(); n_tensors];
                 for mut st in states {
                     for (k, &(ti, ..)) in st.tensors.iter().enumerate() {
                         acc[ti] = std::mem::take(&mut st.acc[k]);
@@ -1019,6 +1065,61 @@ mod tests {
             update(0.25, 3, vec![3; L]),
             update(4.0, L, vec![2; L]),
         ]
+    }
+
+    #[test]
+    fn trimmed_rank_updates_fold_identically_on_every_path() {
+        // Heterogeneous-rank folding: devices store their updates at
+        // their own max rank (serialize::trim_to_rank), every
+        // aggregator pads them back through layout::pad_to_rank, and
+        // the result is bit-identical to folding the full-rank
+        // originals — buffered, streaming, sharded, and the edge tier.
+        use super::super::serialize::trim_to_rank;
+        let ups = mixed_updates();
+        let trimmed: Vec<DeviceUpdate> = ups
+            .iter()
+            .map(|u| DeviceUpdate {
+                trainable: trim_to_rank(&u.trainable, &u.config, L, R),
+                config: u.config.clone(),
+                weight: u.weight,
+            })
+            .collect();
+        assert!(
+            trimmed
+                .iter()
+                .zip(&ups)
+                .any(|(t, u)| t.trainable.numel() < u.trainable.numel()),
+            "fixture must exercise a real rank mismatch"
+        );
+
+        let mut want = filled(9.0);
+        aggregate(&mut want, &ups, L, R);
+
+        let mut buffered = filled(9.0);
+        aggregate(&mut buffered, &trimmed, L, R);
+        assert_eq!(buffered, want, "buffered fold drifted");
+
+        let mut streamed = filled(9.0);
+        let mut agg = StreamingAggregator::new(&streamed, L, R);
+        for u in &trimmed {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        agg.finish(&mut streamed);
+        assert_eq!(streamed, want, "streaming fold drifted");
+
+        for (edges, shards) in [(1usize, 2usize), (2, 1), (3, 2)] {
+            let mut tiered = filled(9.0);
+            let mut agg = EdgeAggregator::new(&tiered, L, R, edges,
+                                              shards, 4, trimmed.len());
+            for u in &trimmed {
+                agg.push(u.trainable.clone(), &u.config, u.weight)
+                    .unwrap();
+            }
+            agg.finish(&mut tiered).unwrap();
+            assert_eq!(tiered, want,
+                       "{edges} edges × {shards} shards drifted on \
+                        trimmed ranks");
+        }
     }
 
     #[test]

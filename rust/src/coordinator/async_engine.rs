@@ -90,9 +90,10 @@ use crate::sim::clock::{timing_from_pairs, VirtualClock};
 use crate::util::rng::Rng;
 
 use super::aggregation::EdgeAggregator;
-use super::capacity::CapacityEstimator;
+use super::capacity::{CapacityEstimator, Reallocator};
 use super::engine::{admitted_cohort, device_round, device_shard,
-                    sanitize, test_data, ExecOpts, TrainJob};
+                    mean_depth_of, sanitize, test_data, ExecOpts,
+                    TrainJob};
 use super::participation::Participation;
 use super::serialize;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
@@ -225,6 +226,11 @@ struct InFlight {
     /// Commit window the device was dispatched in (it trained on model
     /// version `gen − 1`).
     gen: usize,
+    /// LCD plan epoch the update was *trained* under, fixed at
+    /// dispatch. A spillover may legally fold into a window whose
+    /// current epoch has moved on — its messages and fold keep this
+    /// one.
+    epoch: usize,
     /// True eq. 12 duration [virtual s], fixed at dispatch.
     duration: f64,
     /// Real encoded uplink size under the run's codec, fixed at
@@ -276,6 +282,8 @@ impl<'a> AsyncEngine<'a> {
 
         // ---- state --------------------------------------------------------
         let mut estimator = CapacityEstimator::paper(n);
+        let mut realloc =
+            Reallocator::new(cfg.realloc_every, cfg.realloc_hysteresis);
         let transport = Transport::new();
         let mut clock = VirtualClock::new();
         let mut record = RunRecord::new(&strategy.name(), &cfg.task);
@@ -315,6 +323,10 @@ impl<'a> AsyncEngine<'a> {
                 .collect();
 
             let mut dropped = 0usize;
+            // Epoch of the plan this window dispatches under. A window
+            // whose cohort is empty (everyone still training) plans
+            // nothing: the epoch simply carries over.
+            let mut epoch = realloc.epoch();
             if !cohort.is_empty() {
                 // NOTE: phases ⓪–④ below mirror `RoundEngine::run`
                 // line for line (the shareable pieces — data pipeline,
@@ -329,16 +341,26 @@ impl<'a> AsyncEngine<'a> {
                     })
                     .collect::<Result<_>>()?;
 
-                // ①b status reports → capacity estimation (eq. 8–9).
-                for &i in &cohort {
-                    let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
-                    transport.recv_status(h, i);
-                    estimator.update(i, mu_hat, beta_hat);
-                }
-                let estimates: Vec<_> = cohort
+                // ①b status reports → capacity estimation (eq. 8–9)
+                // → the window's plan capacities, exactly as in the
+                // sync engine: live estimates frozen between
+                // `--realloc-every` refits, epoch resolved before any
+                // message is logged.
+                let live: Vec<_> = cohort
                     .iter()
-                    .map(|&i| estimator.get(i).expect("cohort reported"))
+                    .map(|&i| {
+                        let (mu_hat, beta_hat) =
+                            fleet.observe(i, unit_bytes);
+                        estimator.update(i, mu_hat, beta_hat);
+                        estimator.get(i).expect("cohort reported")
+                    })
                     .collect();
+                let estimates =
+                    realloc.plan_estimates(h, &cohort, &live);
+                epoch = realloc.epoch();
+                for &i in &cohort {
+                    transport.recv_status(h, epoch, i);
+                }
                 let n_batches: Vec<usize> = cohort
                     .iter()
                     .map(|&i| {
@@ -420,8 +442,8 @@ impl<'a> AsyncEngine<'a> {
                         .map(|&j| {
                             let i = cohort[j];
                             let config = &plan.device_configs[j];
-                            transport.send_assignment(h, i, &global,
-                                                      config,
+                            transport.send_assignment(h, epoch, i,
+                                                      &global, config,
                                                       meta.n_layers,
                                                       rank_dim);
                             TrainJob {
@@ -472,11 +494,21 @@ impl<'a> AsyncEngine<'a> {
                             cfg.codec, outcome.trainable, &global,
                             &plan.device_configs[j], meta.n_layers,
                             rank_dim)?;
-                    outcome.trainable = restored;
+                    // Buffer the in-flight update at its own trained
+                    // rank; the eq. 17 fold re-pads it to the full
+                    // rank dimension when its event fires (layout.rs
+                    // owns the one padding rule), so in-flight memory
+                    // scales with the device's assigned rank, not
+                    // r_max — and an update trained under an older
+                    // plan folds unchanged.
+                    outcome.trainable = serialize::trim_to_rank(
+                        &restored, &plan.device_configs[j],
+                        meta.n_layers, rank_dim);
                     pending.push(
                         EventKey { time: start + duration, device_id: i },
                         InFlight {
                             gen: h,
+                            epoch,
                             duration,
                             wire_bytes,
                             outcome,
@@ -543,10 +575,12 @@ impl<'a> AsyncEngine<'a> {
                 let tau = h - inf.gen;
                 let w = staleness_weight(tau, s_max, alpha);
                 // Arrival-time tally (this window's traffic), but the
-                // message logs the round the exchange belongs to —
-                // the dispatch round — not whichever window happens
-                // to be current when a stale update finally folds.
-                transport.recv_update(inf.gen, i, inf.wire_bytes);
+                // message logs the round AND plan epoch the exchange
+                // belongs to — the dispatch round's — not whichever
+                // window/epoch happens to be current when a stale
+                // update finally folds.
+                transport.recv_update(inf.gen, inf.epoch, i,
+                                      inf.wire_bytes);
                 loss_log.insert(i, (h, inf.outcome.mean_loss));
                 // Same-window folds keep their exact duration (the
                 // sync-oracle path); spillovers are measured against
@@ -582,11 +616,12 @@ impl<'a> AsyncEngine<'a> {
                 // detlint-allow: float-accum `folded` is already in ascending device order
                 loss_sum += loss;
             }
-            let mean_depth = folded
-                .iter()
-                .map(|&(_, _, _, depth)| depth as f64)
-                .sum::<f64>()
-                / folded.len().max(1) as f64;
+            // Depth diagnostic over the configs the folded updates
+            // *trained under* (their own InFlight configs — possibly
+            // an older plan epoch), via the shared helper.
+            let depths: Vec<usize> =
+                folded.iter().map(|&(_, _, _, d)| d).collect();
+            let mean_depth = mean_depth_of(&depths);
 
             // Evaluation of the aggregated global model.
             if h % cfg.eval_every == 0 || h == cfg.rounds {
@@ -613,13 +648,14 @@ impl<'a> AsyncEngine<'a> {
                 test_acc: last_acc,
                 test_loss: last_test_loss,
                 mean_depth,
+                plan_epoch: epoch,
                 participants: folded.len(),
                 dropped,
             });
             if cfg.verbose {
                 println!(
                     "[{}/{}] {} async(α={}, S={}) t={:.0}s acc={:.3} \
-                     loss={:.3} folded={} in-flight={}",
+                     loss={:.3} epoch={} folded={} in-flight={}",
                     h,
                     cfg.rounds,
                     strategy.name(),
@@ -628,6 +664,7 @@ impl<'a> AsyncEngine<'a> {
                     clock.elapsed,
                     last_acc,
                     loss_sum / folded.len().max(1) as f64,
+                    epoch,
                     folded.len(),
                     pending.len(),
                 );
@@ -636,6 +673,7 @@ impl<'a> AsyncEngine<'a> {
         // Updates still in flight when the run ends are discarded —
         // the experiment is over and there is no later version to fold
         // them into.
+        record.rank_realloc_epochs = realloc.epoch();
         Ok(record)
     }
 }

@@ -82,6 +82,106 @@ impl CapacityEstimator {
     }
 }
 
+/// Periodic LCD re-allocation policy: turns the live EWMA estimates
+/// into the *plan inputs* for each round, making the LoRA plan a
+/// per-round value instead of a run constant.
+///
+/// * `every == 0` — re-allocation off: live estimates pass through
+///   untouched every round and the plan epoch stays 0, reproducing the
+///   pre-refactor engine bitwise.
+/// * `every == K ≥ 1` — the capacity snapshot feeding the strategy is
+///   *frozen* between refit rounds. On refit rounds (`(h − 1) % K == 0`;
+///   round 1 always refits) the live estimates are compared to the
+///   frozen snapshot under the relative hysteresis band
+///   `|live − frozen| ≤ hysteresis · |frozen|` (per device, μ and β
+///   both): if every cohort device is inside the band, the frozen
+///   snapshot is kept *bitwise* (an unchanged fit is a no-op plan);
+///   otherwise the live snapshot is adopted and the plan epoch
+///   increments. Between refits, cohort devices not yet in the frozen
+///   snapshot (churn) seed from their live estimate without bumping
+///   the epoch — determinism only needs the seeding order to be fixed,
+///   and it is (ascending cohort position).
+///
+/// Determinism: only plain float comparison/subtraction/multiplication
+/// (no accumulation, no `partial_cmp`), all on the coordinator thread
+/// in cohort order — detlint-clean by construction.
+#[derive(Debug, Clone)]
+pub struct Reallocator {
+    every: usize,
+    hysteresis: f64,
+    epoch: usize,
+    frozen: BTreeMap<usize, Capacity>,
+}
+
+impl Reallocator {
+    pub fn new(every: usize, hysteresis: f64) -> Self {
+        Reallocator {
+            every,
+            hysteresis: hysteresis.max(0.0),
+            epoch: 0,
+            frozen: BTreeMap::new(),
+        }
+    }
+
+    /// Plan epoch the *next* plan will be produced under. 0 until the
+    /// first adopted refit; with `every == 0` it never moves.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// True when re-allocation is enabled and round `h` (1-based) is a
+    /// refit round.
+    fn is_refit_round(&self, h: usize) -> bool {
+        self.every > 0 && (h.saturating_sub(1)) % self.every == 0
+    }
+
+    /// `b` within the relative hysteresis band around `a`.
+    fn within_band(&self, a: f64, b: f64) -> bool {
+        let d = b - a;
+        let lim = self.hysteresis * if a < 0.0 { -a } else { a };
+        -lim <= d && d <= lim
+    }
+
+    /// Produce the capacity snapshot the strategy plans round `h` from.
+    /// `cohort[j]`'s live estimate is `live[j]`; the result is indexed
+    /// the same way. Mutates the frozen snapshot / epoch per the policy
+    /// above.
+    pub fn plan_estimates(&mut self, h: usize, cohort: &[usize],
+                          live: &[Capacity]) -> Vec<Capacity> {
+        debug_assert_eq!(cohort.len(), live.len());
+        if self.every == 0 {
+            return live.to_vec();
+        }
+        if self.is_refit_round(h) {
+            let unchanged = cohort.iter().zip(live).all(|(&i, c)| {
+                match self.frozen.get(&i) {
+                    Some(f) => {
+                        self.within_band(f.mu, c.mu)
+                            && self.within_band(f.beta, c.beta)
+                    }
+                    None => false,
+                }
+            });
+            if !unchanged {
+                for (&i, c) in cohort.iter().zip(live) {
+                    self.frozen.insert(i, *c);
+                }
+                self.epoch += 1;
+            }
+        } else {
+            // Between refits: devices the snapshot has never seen
+            // (churn) seed from live without an epoch bump.
+            for (&i, c) in cohort.iter().zip(live) {
+                self.frozen.entry(i).or_insert(*c);
+            }
+        }
+        cohort
+            .iter()
+            .map(|i| self.frozen[i])
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +254,105 @@ mod tests {
         let c = est.get(0).unwrap();
         assert!(c.mu > 0.04, "estimate {0} should chase the new mode",
                 c.mu);
+    }
+
+    fn cap(mu: f64) -> Capacity {
+        Capacity { mu, beta: mu * 10.0 }
+    }
+
+    #[test]
+    fn realloc_off_passes_live_estimates_through() {
+        let mut r = Reallocator::new(0, 0.05);
+        for h in 1..=5 {
+            let live = vec![cap(0.01 * h as f64), cap(0.02 * h as f64)];
+            let got = r.plan_estimates(h, &[0, 1], &live);
+            assert_eq!(got, live, "off must be a bitwise pass-through");
+            assert_eq!(r.epoch(), 0, "off never moves the epoch");
+        }
+    }
+
+    #[test]
+    fn realloc_freezes_between_refits_and_adopts_on_drift() {
+        // K = 2: rounds 1, 3, 5 … are refit rounds.
+        let mut r = Reallocator::new(2, 0.05);
+        let seed = vec![cap(0.010), cap(0.020)];
+        assert_eq!(r.plan_estimates(1, &[0, 1], &seed), seed);
+        assert_eq!(r.epoch(), 1, "round 1 adopts the first fit");
+        // Round 2 is frozen: live estimates moved, the plan input
+        // must not.
+        let moved = vec![cap(0.015), cap(0.030)];
+        assert_eq!(r.plan_estimates(2, &[0, 1], &moved), seed);
+        assert_eq!(r.epoch(), 1);
+        // Round 3 refits and the drift exceeds 5%: adopt.
+        assert_eq!(r.plan_estimates(3, &[0, 1], &moved), moved);
+        assert_eq!(r.epoch(), 2);
+    }
+
+    #[test]
+    fn realloc_hysteresis_keeps_an_unchanged_fit_bitwise() {
+        let mut r = Reallocator::new(1, 0.10);
+        let seed = vec![cap(0.010)];
+        assert_eq!(r.plan_estimates(1, &[0], &seed), seed);
+        assert_eq!(r.epoch(), 1);
+        // 5% drift, inside the 10% band: the FROZEN values survive
+        // bitwise, and the epoch holds.
+        let nudged = vec![cap(0.0105)];
+        let got = r.plan_estimates(2, &[0], &nudged);
+        assert_eq!(got[0].mu.to_bits(), seed[0].mu.to_bits());
+        assert_eq!(got[0].beta.to_bits(), seed[0].beta.to_bits());
+        assert_eq!(r.epoch(), 1);
+        // 20% drift breaks the band: adopt, epoch moves.
+        let jumped = vec![cap(0.012)];
+        assert_eq!(r.plan_estimates(3, &[0], &jumped), jumped);
+        assert_eq!(r.epoch(), 2);
+    }
+
+    #[test]
+    fn realloc_unseen_device_on_refit_round_forces_adoption() {
+        let mut r = Reallocator::new(1, 1000.0);
+        let _ = r.plan_estimates(1, &[0], &[cap(0.010)]);
+        assert_eq!(r.epoch(), 1);
+        // A churned-in device has no frozen entry: even a huge band
+        // cannot call the fit unchanged.
+        let live = vec![cap(0.010), cap(0.040)];
+        assert_eq!(r.plan_estimates(2, &[0, 1], &live), live);
+        assert_eq!(r.epoch(), 2);
+    }
+
+    #[test]
+    fn realloc_seeds_churned_devices_between_refits() {
+        // K = 3: round 2 is not a refit round, but a never-seen device
+        // must still get a deterministic estimate (its live one) —
+        // without an epoch bump.
+        let mut r = Reallocator::new(3, 0.05);
+        let _ = r.plan_estimates(1, &[0], &[cap(0.010)]);
+        assert_eq!(r.epoch(), 1);
+        let got = r.plan_estimates(2, &[0, 1], &[cap(0.5), cap(0.040)]);
+        assert_eq!(got[0], cap(0.010), "frozen device stays frozen");
+        assert_eq!(got[1], cap(0.040), "churned device seeds from live");
+        assert_eq!(r.epoch(), 1);
+        // And the seed sticks on the next non-refit round.
+        let again = r.plan_estimates(3, &[1], &[cap(0.9)]);
+        assert_eq!(again[0], cap(0.040));
+        assert_eq!(r.epoch(), 1);
+    }
+
+    #[test]
+    fn realloc_every_one_zero_hysteresis_tracks_live() {
+        // K = 1 with a zero band refits and adopts every round the
+        // estimates move at all — the estimates the strategy sees are
+        // exactly the live ones (the off-equivalence the property
+        // suite checks end to end).
+        let mut r = Reallocator::new(1, 0.0);
+        for h in 1..=4 {
+            let live = vec![cap(0.01 + 0.001 * h as f64)];
+            assert_eq!(r.plan_estimates(h, &[0], &live), live);
+        }
+        assert_eq!(r.epoch(), 4);
+        // Bitwise-identical estimates inside the zero band: frozen is
+        // kept, but frozen == live bitwise, so the plan is unchanged.
+        let same = vec![cap(0.01 + 0.001 * 4.0)];
+        assert_eq!(r.plan_estimates(5, &[0], &same), same);
+        assert_eq!(r.epoch(), 4);
     }
 }

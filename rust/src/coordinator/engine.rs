@@ -68,7 +68,7 @@ use crate::sim::clock::{simulate_round, DeviceRound, VirtualClock};
 use crate::util::rng::Rng;
 
 use super::aggregation::EdgeAggregator;
-use super::capacity::CapacityEstimator;
+use super::capacity::{CapacityEstimator, Reallocator};
 use super::participation::Participation;
 use super::serialize;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
@@ -318,6 +318,8 @@ impl<'a> RoundEngine<'a> {
 
         // ---- state --------------------------------------------------------
         let mut estimator = CapacityEstimator::paper(n);
+        let mut realloc =
+            Reallocator::new(cfg.realloc_every, cfg.realloc_hysteresis);
         let transport = Transport::new();
         let mut clock = VirtualClock::new();
         let mut record = RunRecord::new(&strategy.name(), &cfg.task);
@@ -356,18 +358,31 @@ impl<'a> RoundEngine<'a> {
                 })
                 .collect::<Result<_>>()?;
 
-            // ①b status reports → capacity estimation (eq. 8–9).
-            // Only sampled devices report: a skipped device costs
-            // zero bytes this round, STATUS_BYTES included.
-            for &i in &cohort {
-                let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
-                transport.recv_status(h, i);
-                estimator.update(i, mu_hat, beta_hat);
-            }
-            let estimates: Vec<_> = cohort
+            // ①b status reports → capacity estimation (eq. 8–9) →
+            // the round's *plan* capacities. Only sampled devices
+            // report: a skipped device costs zero bytes this round,
+            // STATUS_BYTES included. With `--realloc-every K > 0` the
+            // live EWMA estimates are frozen between refit rounds
+            // (hysteresis keeps an unchanged fit bitwise), so the LCD
+            // plan is a per-round value under an explicit epoch;
+            // K = 0 passes the live estimates straight through —
+            // today's engine, bitwise. The epoch is resolved before
+            // any message is logged so every exchange names the plan
+            // it belongs to.
+            let live: Vec<_> = cohort
                 .iter()
-                .map(|&i| estimator.get(i).expect("cohort reported"))
+                .map(|&i| {
+                    let (mu_hat, beta_hat) =
+                        fleet.observe(i, unit_bytes);
+                    estimator.update(i, mu_hat, beta_hat);
+                    estimator.get(i).expect("cohort reported")
+                })
                 .collect();
+            let estimates = realloc.plan_estimates(h, &cohort, &live);
+            let epoch = realloc.epoch();
+            for &i in &cohort {
+                transport.recv_status(h, epoch, i);
+            }
             let n_batches: Vec<usize> = cohort
                 .iter()
                 .map(|&i| {
@@ -451,8 +466,9 @@ impl<'a> RoundEngine<'a> {
                 .map(|&j| {
                     let i = cohort[j];
                     let config = &plan.device_configs[j];
-                    transport.send_assignment(h, i, &global, config,
-                                              meta.n_layers, rank_dim);
+                    transport.send_assignment(h, epoch, i, &global,
+                                              config, meta.n_layers,
+                                              rank_dim);
                     TrainJob {
                         device_id: i,
                         init: &global,
@@ -504,7 +520,7 @@ impl<'a> RoundEngine<'a> {
                     let (wire, restored) = serialize::through_wire(
                         cfg.codec, out.trainable, global_r, config,
                         meta.n_layers, rank_dim)?;
-                    transport.recv_update(h, i, wire);
+                    transport.recv_update(h, epoch, i, wire);
                     loss_log_r.insert(i, (h, out.mean_loss));
                     // detlint-allow: float-accum coordinator-thread fold in job-index order
                     *loss_sum_r += out.mean_loss;
@@ -550,13 +566,11 @@ impl<'a> RoundEngine<'a> {
                 last_test_loss = tl;
             }
 
-            let mean_depth = admitted_pos
+            let depths: Vec<usize> = admitted_pos
                 .iter()
-                .map(|&j| {
-                    plan.device_configs[j].depth(meta.n_layers) as f64
-                })
-                .sum::<f64>()
-                / admitted.len().max(1) as f64;
+                .map(|&j| plan.device_configs[j].depth(meta.n_layers))
+                .collect();
+            let mean_depth = mean_depth_of(&depths);
             record.rounds.push(RoundRecord {
                 round: h,
                 sim_time: clock.elapsed,
@@ -568,13 +582,14 @@ impl<'a> RoundEngine<'a> {
                 test_acc: last_acc,
                 test_loss: last_test_loss,
                 mean_depth,
+                plan_epoch: epoch,
                 participants: admitted.len(),
                 dropped: cohort.len() - admitted.len(),
             });
             if cfg.verbose {
                 println!(
                     "[{}/{}] {} t={:.0}s acc={:.3} loss={:.3} \
-                     depth={:.1} wait={:.1}s part={}/{}",
+                     depth={:.1} epoch={} wait={:.1}s part={}/{}",
                     h,
                     cfg.rounds,
                     strategy.name(),
@@ -582,14 +597,28 @@ impl<'a> RoundEngine<'a> {
                     last_acc,
                     loss_sum / admitted.len().max(1) as f64,
                     mean_depth,
+                    epoch,
                     timing.avg_waiting,
                     admitted.len(),
                     n,
                 );
             }
         }
+        record.rank_realloc_epochs = realloc.epoch();
         Ok(record)
     }
+}
+
+/// Mean assigned LoRA depth over the updates that actually folded
+/// this round. Now that the plan is a per-round value, both engines
+/// must derive the depth diagnostic (and the round log line) from the
+/// configs the folded updates *trained under* — the sync engine's
+/// current plan, the async engine's per-update `InFlight` configs —
+/// never from a run-start plan snapshot. One helper so the two can't
+/// drift.
+pub(crate) fn mean_depth_of(depths: &[usize]) -> f64 {
+    depths.iter().map(|&d| d as f64).sum::<f64>()
+        / depths.len().max(1) as f64
 }
 
 /// Eq. 12 inputs for one device. Shared by deadline admission (fed
@@ -720,5 +749,17 @@ mod tests {
     fn effective_threads_resolves_auto() {
         assert!(effective_threads(0) >= 1);
         assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn mean_depth_reads_the_folded_configs() {
+        // Regression (per-round plans): the diagnostic is the mean of
+        // exactly the depths handed in — the folded updates' own
+        // configs — not any earlier round's plan.
+        assert_eq!(mean_depth_of(&[4, 8, 12]), 8.0);
+        assert_eq!(mean_depth_of(&[7]), 7.0);
+        // An empty fold (async window with nothing landing) reads 0,
+        // not NaN.
+        assert_eq!(mean_depth_of(&[]), 0.0);
     }
 }

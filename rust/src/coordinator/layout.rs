@@ -117,6 +117,70 @@ pub fn for_each_active(pat: Pattern, n_layers: usize, mask: &[f32],
     }
 }
 
+/// Zero-pad a rank-sloted tensor trained at a smaller rank dimension
+/// up to the full `pat` layout (`r` slots per layer). This is THE
+/// padding rule for heterogeneous-rank folding: serialize, both
+/// engines, and the edge tier all route mismatched-rank tensors
+/// through here, so a value trained in slot `(l, j)` always lands at
+/// the same element the mask-gated eq. 17 fold reads for `(l, j)`.
+///
+/// `x` must hold `n_layers · r_src · inner` elements for some
+/// `1 ≤ r_src ≤ r` (the source laid out exactly like `pat` but with
+/// `r_src` slots per layer); slots `j ≥ r_src` are zero-filled.
+/// Returns `None` when no such `r_src` exists (shape drift — the
+/// caller decides whether that is an error). `Full` tensors carry no
+/// slot structure and pass through only at their exact size.
+pub fn pad_to_rank(pat: Pattern, n_layers: usize, x: Vec<f32>)
+                   -> Option<Vec<f32>> {
+    let (r, inner) = match pat {
+        Pattern::Full => {
+            return Some(x);
+        }
+        Pattern::Rows { r, inner } | Pattern::Cols { r, inner } => {
+            (r, inner)
+        }
+    };
+    let full = n_layers * r * inner;
+    if x.len() == full {
+        return Some(x);
+    }
+    let per_layer = n_layers * inner;
+    if per_layer == 0 || x.len() % per_layer != 0 {
+        return None;
+    }
+    let r_src = x.len() / per_layer;
+    if r_src == 0 || r_src > r {
+        return None;
+    }
+    let mut out = vec![0.0f32; full];
+    match pat {
+        Pattern::Full => unreachable!("handled above"),
+        Pattern::Rows { .. } => {
+            // [L, r_src, inner] → [L, r, inner]: slots contiguous.
+            for l in 0..n_layers {
+                for j in 0..r_src {
+                    let src = (l * r_src + j) * inner;
+                    let dst = (l * r + j) * inner;
+                    out[dst..dst + inner]
+                        .copy_from_slice(&x[src..src + inner]);
+                }
+            }
+        }
+        Pattern::Cols { .. } => {
+            // [L, inner, r_src] → [L, inner, r]: slots strided.
+            for l in 0..n_layers {
+                for i in 0..inner {
+                    let src = l * inner * r_src + i * r_src;
+                    let dst = l * inner * r + i * r;
+                    out[dst..dst + r_src]
+                        .copy_from_slice(&x[src..src + r_src]);
+                }
+            }
+        }
+    }
+    Some(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +248,60 @@ mod tests {
         for_each_active(Pattern::Cols { r: R, inner: R }, L, &mask,
                         |e| cols.push(e));
         assert_eq!(cols[..R], [1, 1 + R, 1 + 2 * R]);
+    }
+
+    #[test]
+    fn pad_to_rank_places_slots_where_the_fold_reads_them() {
+        // r_src = 2 of R = 3 slots, inner = D. Fill the source with
+        // distinct values, pad, and check that every active (l, j)
+        // element lands exactly where for_each_active visits it.
+        let rows = Pattern::Rows { r: R, inner: D };
+        let src: Vec<f32> = (0..L * 2 * D).map(|e| e as f32 + 1.0).collect();
+        let padded = pad_to_rank(rows, L, src.clone()).unwrap();
+        assert_eq!(padded.len(), L * R * D);
+        for l in 0..L {
+            for j in 0..2 {
+                for i in 0..D {
+                    assert_eq!(padded[(l * R + j) * D + i],
+                               src[(l * 2 + j) * D + i]);
+                }
+            }
+            // The padded slot is zero.
+            for i in 0..D {
+                assert_eq!(padded[(l * R + 2) * D + i], 0.0);
+            }
+        }
+
+        let cols = Pattern::Cols { r: R, inner: D };
+        let src: Vec<f32> = (0..L * D * 2).map(|e| e as f32 + 1.0).collect();
+        let padded = pad_to_rank(cols, L, src.clone()).unwrap();
+        assert_eq!(padded.len(), L * D * R);
+        for l in 0..L {
+            for i in 0..D {
+                for j in 0..2 {
+                    assert_eq!(padded[l * D * R + i * R + j],
+                               src[l * D * 2 + i * 2 + j]);
+                }
+                assert_eq!(padded[l * D * R + i * R + 2], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_to_rank_full_size_is_identity_and_drift_is_none() {
+        let rows = Pattern::Rows { r: R, inner: D };
+        let full: Vec<f32> = (0..L * R * D).map(|e| e as f32).collect();
+        assert_eq!(pad_to_rank(rows, L, full.clone()), Some(full));
+        // Not a multiple of L·inner → shape drift, not padding.
+        assert_eq!(pad_to_rank(rows, L, vec![0.0; L * D + 1]), None);
+        // r_src would exceed r → drift.
+        assert_eq!(pad_to_rank(rows, L, vec![0.0; L * (R + 1) * D]),
+                   None);
+        // Empty source → drift (r_src = 0 has no slots to place).
+        assert_eq!(pad_to_rank(rows, L, vec![]), None);
+        // Full tensors pass through untouched.
+        let head = vec![1.0f32; 7];
+        assert_eq!(pad_to_rank(Pattern::Full, L, head.clone()),
+                   Some(head));
     }
 }

@@ -63,15 +63,21 @@ pub struct LcdDevice {
     pub unit_rank_bytes: usize,
 }
 
+/// Sum of the ranks of the `k` DEEPEST layers — the layers a
+/// depth-`k` device actually trains and uploads. Both the eq. 12
+/// completion estimate and the eq. 15 upload-byte check hinge on this
+/// sum; computing it in one place means they can never disagree about
+/// which layers a depth buys.
+pub fn deepest_rank_sum(ranks: &[usize], k: usize) -> usize {
+    ranks.iter().rev().take(k).sum()
+}
+
 impl LcdDevice {
     /// Reference completion time at depth `k` with ranks `ranks`
     /// (eq. 12 with estimated capacities).
     pub fn est_completion(&self, k: usize, ranks: &[usize]) -> f64 {
-        let rank_sum: usize =
-            ranks.iter().rev().take(k).sum();
-        self.n_batches as f64
-            * (self.fwd_time + k as f64 * self.capacity.mu)
-            + rank_sum as f64 * self.capacity.beta
+        self.compute_seconds(k)
+            + deepest_rank_sum(ranks, k) as f64 * self.capacity.beta
     }
 
     fn compute_seconds(&self, k: usize) -> f64 {
@@ -80,8 +86,7 @@ impl LcdDevice {
     }
 
     fn upload_bytes(&self, k: usize, ranks: &[usize]) -> usize {
-        let rank_sum: usize = ranks.iter().rev().take(k).sum();
-        rank_sum * self.unit_rank_bytes
+        deepest_rank_sum(ranks, k) * self.unit_rank_bytes
     }
 }
 
@@ -218,6 +223,28 @@ mod tests {
         d.comm_budget = 0;
         let cfgs = determine(&params(), &[d]);
         assert_eq!(cfgs[0].depth(12), 1);
+    }
+
+    #[test]
+    fn deepest_rank_sum_takes_the_last_k_layers() {
+        let ranks: Vec<usize> = (1..=12).collect();
+        assert_eq!(deepest_rank_sum(&ranks, 0), 0);
+        assert_eq!(deepest_rank_sum(&ranks, 3), 10 + 11 + 12);
+        assert_eq!(deepest_rank_sum(&ranks, 12), 78);
+        // k beyond the layer count saturates at the full sum.
+        assert_eq!(deepest_rank_sum(&ranks, 99), 78);
+        // The two eq. 12/15 call sites must agree through the shared
+        // helper: completion minus compute equals upload converted to
+        // seconds-per-unit-rank for every depth.
+        let d = dev(0.01, 0.1);
+        for k in 0..=12 {
+            let via_completion = d.est_completion(k, &ranks)
+                - 8.0 * (d.fwd_time + k as f64 * 0.01);
+            let via_bytes =
+                d.upload_bytes(k, &ranks) as f64 / 2048.0 * 0.1;
+            assert!((via_completion - via_bytes).abs() < 1e-9,
+                    "depth {k}: {via_completion} vs {via_bytes}");
+        }
     }
 
     #[test]

@@ -395,6 +395,60 @@ pub fn through_wire(codec: Codec, update: TensorMap,
     Ok((wire.len(), restored))
 }
 
+/// Re-lay-out a trained update at the smallest rank dimension that
+/// keeps every active slot: each rank-sloted tensor drops from the
+/// run's `rank_dim` to the device's [`LoraConfig::max_active_rank`]
+/// (`Full` tensors — the head — are untouched). This is the exact
+/// inverse of [`layout::pad_to_rank`] on the slots that matter: active
+/// slots `j < r_l ≤ r_dst` survive in their `(l, j)` cell, and the
+/// dropped slots are inactive under `config`'s mask, so they neither
+/// travel nor fold. The async engine buffers in-flight updates in this
+/// form — O(device rank) instead of O(r_max) per tensor — and the
+/// aggregators pad them back through the single padding rule on fold.
+pub fn trim_to_rank(update: &TensorMap, config: &LoraConfig,
+                    n_layers: usize, rank_dim: usize) -> TensorMap {
+    let r_dst = config.max_active_rank(n_layers).min(rank_dim).max(1);
+    let entries = update
+        .entries
+        .iter()
+        .map(|(spec, data)| match classify(spec, n_layers, rank_dim) {
+            Pattern::Full => (spec.clone(), data.clone()),
+            _ if r_dst == rank_dim => (spec.clone(), data.clone()),
+            Pattern::Rows { r, inner } => {
+                let mut out = vec![0.0f32; n_layers * r_dst * inner];
+                for l in 0..n_layers {
+                    for j in 0..r_dst {
+                        let src = (l * r + j) * inner;
+                        let dst = (l * r_dst + j) * inner;
+                        out[dst..dst + inner]
+                            .copy_from_slice(&data[src..src + inner]);
+                    }
+                }
+                let shape = if spec.shape.len() == 2 {
+                    vec![n_layers, r_dst]
+                } else {
+                    vec![n_layers, r_dst, inner]
+                };
+                (TensorSpec { name: spec.name.clone(), shape }, out)
+            }
+            Pattern::Cols { r, inner } => {
+                let mut out = vec![0.0f32; n_layers * inner * r_dst];
+                for l in 0..n_layers {
+                    for i in 0..inner {
+                        let src = l * inner * r + i * r;
+                        let dst = l * inner * r_dst + i * r_dst;
+                        out[dst..dst + r_dst]
+                            .copy_from_slice(&data[src..src + r_dst]);
+                    }
+                }
+                let shape = vec![n_layers, inner, r_dst];
+                (TensorSpec { name: spec.name.clone(), shape }, out)
+            }
+        })
+        .collect();
+    TensorMap { entries }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -702,6 +756,99 @@ mod tests {
                           L, R),
             Err(WireError::CountMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn trim_to_rank_is_the_inverse_of_pad_on_active_slots() {
+        let src = filled(20);
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(2),
+            ranks: vec![0, 0, 1, 2],
+        };
+        let trimmed = trim_to_rank(&src, &cfg, L, R);
+        // max_active_rank = 2 of R = 3: rank-sloted tensors shrink,
+        // the head does not.
+        assert_eq!(trimmed.spec("aq").unwrap().shape, vec![L, 2, D]);
+        assert_eq!(trimmed.spec("bq").unwrap().shape, vec![L, D, 2]);
+        assert_eq!(trimmed.get("head_w").unwrap(),
+                   src.get("head_w").unwrap());
+        // Specs stay consistent with their data.
+        for (spec, v) in &trimmed.entries {
+            assert_eq!(spec.numel(), v.len(), "{}", spec.name);
+        }
+        // Padding back restores every active element bitwise.
+        let mask = cfg.rank_mask(L, R);
+        for name in ["aq", "bq"] {
+            let spec = src.spec(name).unwrap();
+            let pat = classify(spec, L, R);
+            let padded = layout::pad_to_rank(
+                pat, L, trimmed.get(name).unwrap().to_vec())
+                .unwrap();
+            let orig = src.get(name).unwrap();
+            layout::for_each_active(pat, L, &mask, |e| {
+                assert_eq!(padded[e], orig[e], "{name}[{e}]");
+            });
+        }
+        // A config already at full rank trims to an identical map.
+        let full = LoraConfig::uniform(LayerSet::All, R, L);
+        assert_eq!(trim_to_rank(&src, &full, L, R), src);
+    }
+
+    #[test]
+    fn padded_square_b_tensor_folds_like_the_unpadded_reference() {
+        // Hetero-rank × codec: a device stores its square [L, r, r]
+        // B-side update at its own max rank, the coordinator zero-pads
+        // it back through layout::pad_to_rank, ships it through every
+        // codec, and the eq. 17 fold of what comes off the wire is
+        // bit-identical to folding the unpadded original.
+        use super::super::aggregation::{aggregate, DeviceUpdate};
+        let sq = vec![TensorSpec {
+            name: "bq".into(),
+            shape: vec![L, R, R],
+        }];
+        let update = filled_of(21, &sq);
+        let reference = filled_of(22, &sq);
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(L),
+            ranks: vec![2; L],
+        };
+        let trimmed = trim_to_rank(&update, &cfg, L, R);
+        assert_eq!(trimmed.get("bq").unwrap().len(), L * R * 2,
+                   "square bq must trim along its LAST axis");
+        let pat = classify(&sq[0], L, R);
+        let mut padded = TensorMap::zeros(&sq);
+        *padded.get_mut("bq").unwrap() = layout::pad_to_rank(
+            pat, L, trimmed.get("bq").unwrap().to_vec())
+            .unwrap();
+
+        let fold = |restored: TensorMap| {
+            let mut g = TensorMap::zeros(&sq);
+            let ups = [DeviceUpdate {
+                trainable: restored,
+                config: cfg.clone(),
+                weight: 1.0,
+            }];
+            aggregate(&mut g, &ups, L, R);
+            g
+        };
+        for codec in [Codec::None, Codec::Int8, Codec::Int4] {
+            // The padded slots are inactive: same bytes travel.
+            let wire_p = encode_update(codec, &padded, &reference, &cfg,
+                                       L, R);
+            let wire_u = encode_update(codec, &update, &reference, &cfg,
+                                       L, R);
+            assert_eq!(wire_p, wire_u,
+                       "{codec:?}: padded slots must not travel");
+            let (bytes_p, restored_p) = through_wire(
+                codec, padded.clone(), &reference, &cfg, L, R)
+                .unwrap();
+            let (bytes_u, restored_u) = through_wire(
+                codec, update.clone(), &reference, &cfg, L, R)
+                .unwrap();
+            assert_eq!(bytes_p, bytes_u);
+            assert_eq!(fold(restored_p), fold(restored_u),
+                       "{codec:?}: padded fold drifted");
+        }
     }
 
     #[test]

@@ -89,6 +89,20 @@ pub struct FedConfig {
     /// (`exp::run_strategy_with`, `legend run --lazy`); bit-identical
     /// to the eager fleet for the same seed.
     pub lazy_fleet: bool,
+    /// Periodic LCD re-allocation interval K (`--realloc-every`):
+    /// the capacity snapshot the strategy plans from is re-fit from
+    /// the live EWMA estimates every K commit rounds and *frozen*
+    /// between refits, making the LoRA plan a per-round value with an
+    /// explicit epoch (`coordinator/capacity.rs::Reallocator`). 0 =
+    /// off — live estimates flow through every round, bitwise
+    /// reproducing the pre-realloc engines.
+    pub realloc_every: usize,
+    /// Relative hysteresis band for refits
+    /// (`--realloc-hysteresis`): a refit whose live μ and β all sit
+    /// within this fraction of the frozen snapshot keeps the frozen
+    /// values bitwise and does not bump the plan epoch — an
+    /// unchanged fit is a no-op plan.
+    pub realloc_hysteresis: f64,
     /// Uplink update codec (`--codec none|int8|int4`): quantized
     /// modes ship per-tensor affine-quantized deltas vs the assigned
     /// global and are dequantized exactly once before the eq. 17
@@ -120,6 +134,8 @@ impl Default for FedConfig {
             max_staleness: 2,
             edge_aggregators: 1,
             lazy_fleet: false,
+            realloc_every: 0,
+            realloc_hysteresis: 0.05,
             codec: Codec::None,
             verbose: false,
         }

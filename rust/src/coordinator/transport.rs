@@ -59,6 +59,12 @@ pub struct Message {
     pub tag: Tag,
     pub device: usize,
     pub round: usize,
+    /// LCD plan epoch the exchange was produced under (0 until the
+    /// first re-allocation). Like `round`, it is named explicitly by
+    /// the caller: under the async engine an update trained under the
+    /// *previous* plan legally folds after a re-allocation, and its
+    /// messages must keep the epoch that shaped them.
+    pub plan_epoch: usize,
     pub bytes: usize,
 }
 
@@ -127,7 +133,7 @@ impl Transport {
     }
 
     fn record(&self, tag: Tag, device: usize, round: usize,
-              bytes: usize, uplink: bool) {
+              epoch: usize, bytes: usize, uplink: bool) {
         if uplink {
             self.current.uplink.fetch_add(bytes, Ordering::AcqRel);
             self.total.uplink.fetch_add(bytes, Ordering::AcqRel);
@@ -142,6 +148,7 @@ impl Transport {
                 tag,
                 device,
                 round,
+                plan_epoch: epoch,
                 bytes,
             });
         }
@@ -152,28 +159,33 @@ impl Transport {
     /// shared reference to the global model (devices never mutate
     /// their assignment), so nothing is copied here — and assignments
     /// always travel f32, so the payload is the raw active footprint.
-    pub fn send_assignment(&self, round: usize, device: usize,
-                           global: &TensorMap, config: &LoraConfig,
-                           n_layers: usize, rank_dim: usize) -> usize {
+    pub fn send_assignment(&self, round: usize, epoch: usize,
+                           device: usize, global: &TensorMap,
+                           config: &LoraConfig, n_layers: usize,
+                           rank_dim: usize) -> usize {
         let bytes = serialize::active_payload_bytes(
             global, config, n_layers, rank_dim);
-        self.record(Tag::Assign, device, round, bytes, false);
+        self.record(Tag::Assign, device, round, epoch, bytes, false);
         bytes
     }
 
     /// device → PS: upload the updated active slots. `bytes` is the
     /// real encoded size the engine put through the codec
     /// (`serialize::through_wire`), so the tally reflects what
-    /// actually travels under `--codec`.
-    pub fn recv_update(&self, round: usize, device: usize,
+    /// actually travels under `--codec`. `epoch` is the plan epoch the
+    /// update was *trained* under — for an async fold landing after a
+    /// re-allocation, that is the previous epoch, not the current one.
+    pub fn recv_update(&self, round: usize, epoch: usize, device: usize,
                        bytes: usize) -> usize {
-        self.record(Tag::Update, device, round, bytes, true);
+        self.record(Tag::Update, device, round, epoch, bytes, true);
         bytes
     }
 
     /// device → PS: status report (μ̂, β̂).
-    pub fn recv_status(&self, round: usize, device: usize) {
-        self.record(Tag::Status, device, round, STATUS_BYTES, true);
+    pub fn recv_status(&self, round: usize, epoch: usize,
+                       device: usize) {
+        self.record(Tag::Status, device, round, epoch, STATUS_BYTES,
+                    true);
     }
 
     pub fn round_tally(&self) -> Tally {
@@ -222,9 +234,9 @@ mod tests {
         t.begin_round();
         let g = global();
         let c = cfg(2);
-        let down = t.send_assignment(1, 0, &g, &c, L, R);
-        t.recv_status(1, 0);
-        let up = t.recv_update(1, 0, payload(&c));
+        let down = t.send_assignment(1, 0, 0, &g, &c, L, R);
+        t.recv_status(1, 0, 0);
+        let up = t.recv_update(1, 0, 0, payload(&c));
         let tally = t.round_tally();
         assert_eq!(down, up, "symmetric assign/update payload");
         assert_eq!(tally.downlink, up);
@@ -238,10 +250,10 @@ mod tests {
         let t = Transport::new();
         t.begin_round();
         let g = global();
-        let _ = t.send_assignment(1, 0, &g, &cfg(1), L, R);
+        let _ = t.send_assignment(1, 0, 0, &g, &cfg(1), L, R);
         let shallow = t.round_tally().downlink;
         t.begin_round();
-        let _ = t.send_assignment(2, 0, &g, &cfg(4), L, R);
+        let _ = t.send_assignment(2, 0, 0, &g, &cfg(4), L, R);
         let deep = t.round_tally().downlink;
         assert!(deep > shallow);
     }
@@ -250,7 +262,7 @@ mod tests {
     fn begin_round_resets_current_not_total() {
         let t = Transport::new();
         t.begin_round();
-        t.recv_status(1, 0);
+        t.recv_status(1, 0, 0);
         t.begin_round();
         assert_eq!(t.round_tally(), Tally::default());
         assert_eq!(t.total_tally().uplink, STATUS_BYTES);
@@ -268,9 +280,9 @@ mod tests {
         let mut down = 0;
         let mut up = 0;
         for dev in [0usize, 2] {
-            t.recv_status(1, dev);
-            down += t.send_assignment(1, dev, &g, &c, L, R);
-            up += t.recv_update(1, dev, payload(&c));
+            t.recv_status(1, 0, dev);
+            down += t.send_assignment(1, 0, dev, &g, &c, L, R);
+            up += t.recv_update(1, 0, dev, payload(&c));
         }
         let tally = t.round_tally();
         assert_eq!(tally.downlink, down);
@@ -291,11 +303,11 @@ mod tests {
         // case).
         let t = Transport::with_log();
         t.begin_round();
-        t.recv_status(1, 0);
+        t.recv_status(1, 0, 0);
         t.begin_round(); // round 2 opens…
         t.begin_round(); // …and round 3 opens before the fold lands.
-        let stale = t.recv_update(1, 0, 64);
-        let fresh = t.recv_update(3, 1, 64);
+        let stale = t.recv_update(1, 0, 0, 64);
+        let fresh = t.recv_update(3, 0, 1, 64);
         assert_eq!(stale, fresh);
         let log = t.log_snapshot().unwrap();
         assert_eq!(log.len(), 3);
@@ -310,6 +322,32 @@ mod tests {
     }
 
     #[test]
+    fn messages_carry_their_plan_epoch() {
+        // An update trained under epoch 1 legally folds after the plan
+        // moved on to epoch 2 (async engine + re-allocation): the log
+        // must keep the epoch the exchange was produced under, exactly
+        // like the logical round.
+        let t = Transport::with_log();
+        t.begin_round();
+        let g = global();
+        let c = cfg(2);
+        let _ = t.send_assignment(4, 1, 0, &g, &c, L, R);
+        let _ = t.recv_update(5, 1, 0, 64); // trained under epoch 1…
+        t.recv_status(5, 2, 0); // …while round 5 re-planned to epoch 2.
+        let log = t.log_snapshot().unwrap();
+        assert_eq!(
+            log.iter()
+                .map(|m| (m.tag, m.round, m.plan_epoch))
+                .collect::<Vec<_>>(),
+            vec![
+                (Tag::Assign, 4, 1),
+                (Tag::Update, 5, 1),
+                (Tag::Status, 5, 2),
+            ]
+        );
+    }
+
+    #[test]
     fn shared_across_threads() {
         // &self endpoint: concurrent status reports all land.
         let t = Transport::new();
@@ -317,7 +355,7 @@ mod tests {
         std::thread::scope(|s| {
             for dev in 0..8 {
                 let t = &t;
-                s.spawn(move || t.recv_status(1, dev));
+                s.spawn(move || t.recv_status(1, 0, dev));
             }
         });
         assert_eq!(t.round_tally().uplink, 8 * STATUS_BYTES);

@@ -23,6 +23,12 @@
 //!          updates (per-tensor affine delta vs the assigned global,
 //!          dequantized once before the fold; see docs/TRANSPORT.md).
 //!          --codec none reproduces today's wire bitwise.
+//!          Periodic re-allocation: --realloc-every K re-fits the LCD
+//!          plan from the live capacity EWMAs every K rounds (frozen
+//!          between refits; --realloc-hysteresis H keeps a fit that
+//!          moved less than H bitwise — see docs/ADAPTIVE.md).
+//!          --realloc-every 0 reproduces the static-plan engine
+//!          bitwise.
 //!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
 //!   fleet  describe the simulated 80-device testbed (Table 1)
 //!   data   describe the synthetic datasets (Table 2)
@@ -71,6 +77,9 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         staleness_alpha: args
             .get_parse("staleness-alpha", d.staleness_alpha)?,
         max_staleness: args.get_parse("max-staleness", d.max_staleness)?,
+        realloc_every: args.get_parse("realloc-every", d.realloc_every)?,
+        realloc_hysteresis: args
+            .get_parse("realloc-hysteresis", d.realloc_hysteresis)?,
         codec: legend::coordinator::Codec::by_name(&args.get_choice(
             "codec", d.codec.name(), &["none", "int8", "int4"])?)?,
         verbose: !args.flag("quiet"),
@@ -79,6 +88,13 @@ fn fed_config_from(args: &Args) -> Result<FedConfig> {
         return Err(anyhow!(
             "--staleness-alpha must be a finite value ≥ 0, got {}",
             cfg.staleness_alpha
+        ));
+    }
+    if !cfg.realloc_hysteresis.is_finite() || cfg.realloc_hysteresis < 0.0
+    {
+        return Err(anyhow!(
+            "--realloc-hysteresis must be a finite value ≥ 0, got {}",
+            cfg.realloc_hysteresis
         ));
     }
     Ok(cfg)

@@ -26,8 +26,16 @@ pub struct RoundRecord {
     pub train_loss: f64,
     pub test_acc: f64,
     pub test_loss: f64,
-    /// Mean LoRA depth assigned this round (diagnostic).
+    /// Mean LoRA depth assigned this round (diagnostic). Computed
+    /// from the configs of the updates that actually folded this
+    /// round — the round's *active* plan — never from a run-start
+    /// snapshot (`coordinator/engine.rs::mean_depth_of`).
     pub mean_depth: f64,
+    /// LCD plan epoch this round was planned under: bumped each time
+    /// a `--realloc-every` refit adopts new capacity estimates; 0
+    /// forever when re-allocation is off. An async fold may carry an
+    /// *older* epoch on its messages than the round records here.
+    pub plan_epoch: usize,
     /// Devices that trained and reported this round (cohort minus
     /// deadline drops; equals the fleet size under full
     /// participation).
@@ -42,6 +50,11 @@ pub struct RunRecord {
     pub method: String,
     pub task: String,
     pub rounds: Vec<RoundRecord>,
+    /// Plan epochs adopted over the run (final Reallocator epoch):
+    /// how many `--realloc-every` refits actually changed the plan
+    /// inputs. 0 when re-allocation is off or every refit landed
+    /// inside the hysteresis band.
+    pub rank_realloc_epochs: usize,
 }
 
 impl RunRecord {
@@ -50,6 +63,7 @@ impl RunRecord {
             method: method.to_string(),
             task: task.to_string(),
             rounds: Vec::new(),
+            rank_realloc_epochs: 0,
         }
     }
 
@@ -119,7 +133,7 @@ impl RunRecord {
 
     pub const CSV_HEADER: &'static str = "method,task,round,sim_time,\
 round_time,avg_waiting,up_bytes,down_bytes,train_loss,test_acc,\
-test_loss,mean_depth,participants,dropped";
+test_loss,mean_depth,participants,dropped,plan_epoch";
 
     pub fn to_csv_rows(&self) -> String {
         let mut out = String::new();
@@ -127,7 +141,7 @@ test_loss,mean_depth,participants,dropped";
             let _ = writeln!(
                 out,
                 "{},{},{},{:.3},{:.3},{:.3},{},{},{:.5},{:.5},{:.5},\
-                 {:.2},{},{}",
+                 {:.2},{},{},{}",
                 self.method,
                 self.task,
                 r.round,
@@ -141,7 +155,8 @@ test_loss,mean_depth,participants,dropped";
                 r.test_loss,
                 r.mean_depth,
                 r.participants,
-                r.dropped
+                r.dropped,
+                r.plan_epoch
             );
         }
         out
@@ -151,6 +166,10 @@ test_loss,mean_depth,participants,dropped";
         Value::obj(vec![
             ("method", Value::Str(self.method.clone())),
             ("task", Value::Str(self.task.clone())),
+            (
+                "rank_realloc_epochs",
+                Value::Num(self.rank_realloc_epochs as f64),
+            ),
             (
                 "rounds",
                 Value::Arr(
@@ -181,6 +200,10 @@ test_loss,mean_depth,participants,dropped";
                                 (
                                     "dropped",
                                     Value::Num(r.dropped as f64),
+                                ),
+                                (
+                                    "plan_epoch",
+                                    Value::Num(r.plan_epoch as f64),
                                 ),
                             ])
                         })
@@ -307,7 +330,9 @@ mod tests {
 
     #[test]
     fn json_roundtrips() {
-        let r = run_with_accs(&[0.5, 0.6]);
+        let mut r = run_with_accs(&[0.5, 0.6]);
+        r.rank_realloc_epochs = 3;
+        r.rounds[1].plan_epoch = 2;
         let v = r.to_json();
         let parsed =
             crate::util::json::Value::parse(&v.to_string()).unwrap();
@@ -318,5 +343,10 @@ mod tests {
         // byte-honest tallies are checked against these leaves).
         assert_eq!(rounds[0].get("up_bytes").as_f64(), Some(100.0));
         assert_eq!(rounds[0].get("down_bytes").as_f64(), Some(50.0));
+        // Plan epochs survive both levels of the JSON path.
+        assert_eq!(parsed.get("rank_realloc_epochs").as_f64(),
+                   Some(3.0));
+        assert_eq!(rounds[0].get("plan_epoch").as_f64(), Some(0.0));
+        assert_eq!(rounds[1].get("plan_epoch").as_f64(), Some(2.0));
     }
 }

@@ -105,6 +105,18 @@ impl LoraConfig {
         self.layers.count(n_layers)
     }
 
+    /// Largest rank any active layer uses, floored at 1 — the smallest
+    /// rank dimension a trained update can be stored in without losing
+    /// active slots (the heterogeneous-rank trim/pad convention in
+    /// `coordinator/layout.rs::pad_to_rank`).
+    pub fn max_active_rank(&self, n_layers: usize) -> usize {
+        self.active_ranks(n_layers)
+            .into_iter()
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
+
     /// Layers the backward pass must traverse: gradients flow from the
     /// output down to the SHALLOWEST adapted layer, so position — not
     /// just count — sets the compute cost (§2.2, Fig. 3b: Layers-S is
@@ -213,5 +225,26 @@ mod tests {
         let cfg = LoraConfig::uniform(LayerSet::All, 8, 12);
         assert_eq!(cfg.total_rank(12), 96);
         assert_eq!(cfg.depth(12), 12);
+    }
+
+    #[test]
+    fn max_active_rank_tracks_active_layers_only() {
+        let cfg = LoraConfig {
+            layers: LayerSet::Depth(2),
+            ranks: vec![99, 0, 3, 4],
+        };
+        // Layer 0's rank 99 is inactive and must not count.
+        assert_eq!(cfg.max_active_rank(4), 4);
+        // No active layers (or all-zero ranks) floor at 1.
+        let none = LoraConfig {
+            layers: LayerSet::Explicit(vec![]),
+            ranks: vec![5; 4],
+        };
+        assert_eq!(none.max_active_rank(4), 1);
+        let zeros = LoraConfig {
+            layers: LayerSet::All,
+            ranks: vec![0; 4],
+        };
+        assert_eq!(zeros.max_active_rank(4), 1);
     }
 }

@@ -223,6 +223,35 @@ mod tests {
     }
 
     #[test]
+    fn realloc_knobs_parse_and_default() {
+        // The `run` surface for periodic LCD re-allocation.
+        let a = parse(
+            "run --realloc-every 5 --realloc-hysteresis 0.1",
+        );
+        assert_eq!(a.get_parse("realloc-every", 0usize).unwrap(), 5);
+        assert_eq!(
+            a.get_parse("realloc-hysteresis", 0.05f64).unwrap(),
+            0.1
+        );
+        assert!(a.reject_unknown().is_ok());
+        // Omitted: re-allocation off, default band — the static-plan
+        // engine, bitwise.
+        let b = parse("run");
+        assert_eq!(b.get_parse("realloc-every", 0usize).unwrap(), 0);
+        assert_eq!(
+            b.get_parse("realloc-hysteresis", 0.05f64).unwrap(),
+            0.05
+        );
+        // Malformed values fail loudly, mirroring --window.
+        let c = parse("run --realloc-every 2.5");
+        assert!(c.get_parse("realloc-every", 0usize).is_err());
+        let d = parse("run --realloc-every=-1");
+        assert!(d.get_parse("realloc-every", 0usize).is_err());
+        let e = parse("run --realloc-hysteresis banana");
+        assert!(e.get_parse("realloc-hysteresis", 0.05f64).is_err());
+    }
+
+    #[test]
     fn scale_knobs_parse_and_default() {
         // The `run` surface for the lazy fleet + edge-aggregation tier.
         let a = parse(

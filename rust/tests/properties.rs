@@ -3,6 +3,7 @@
 //! assignment/masks, capacity estimation, partitioning, timing, JSON.
 
 use legend::coordinator::aggregation::{aggregate, DeviceUpdate,
+                                       EdgeAggregator,
                                        ShardedAggregator,
                                        StreamingAggregator};
 use legend::coordinator::async_engine::{staleness_weight, EventKey,
@@ -12,6 +13,7 @@ use legend::coordinator::engine::{train_parallel, ExecOpts, TrainJob};
 use legend::coordinator::lcd::{self, LcdDevice, LcdParams};
 use legend::coordinator::participation::{DeadlineDrop, Participation,
                                          UniformSample};
+use legend::coordinator::serialize::trim_to_rank;
 use legend::coordinator::strategy as fedstrategy;
 use legend::coordinator::trainer::{DeviceTrainer, LocalOutcome,
                                    MockTrainer};
@@ -624,6 +626,285 @@ fn engine_run_codec(method: &str, seed: u64, threads: usize,
         ..Default::default()
     };
     engine_run_cfg(method, &cfg)
+}
+
+/// Like [`engine_run_codec`], but with the periodic-re-allocation
+/// knobs (`realloc_every`, `realloc_hysteresis`) exposed.
+#[allow(clippy::too_many_arguments)]
+fn engine_run_realloc(method: &str, seed: u64, threads: usize,
+                      agg_shards: usize, window: usize, codec: Codec,
+                      async_mode: bool, max_staleness: usize,
+                      every: usize, hysteresis: f64)
+                      -> legend::metrics::RunRecord {
+    let cfg = FedConfig {
+        rounds: 3,
+        train_size: 256,
+        test_size: 64,
+        seed,
+        threads,
+        agg_shards,
+        window,
+        async_mode,
+        staleness_alpha: 0.5,
+        max_staleness,
+        codec,
+        realloc_every: every,
+        realloc_hysteresis: hysteresis,
+        ..Default::default()
+    };
+    engine_run_cfg(method, &cfg)
+}
+
+/// Zero every plan-epoch field so two records can be compared on the
+/// model/timing/traffic trajectory alone (the `--realloc-every 1
+/// --realloc-hysteresis 0` run adopts the live estimates each round —
+/// identical trajectory, moving epochs).
+fn strip_epochs(mut r: legend::metrics::RunRecord)
+                -> legend::metrics::RunRecord {
+    r.rank_realloc_epochs = 0;
+    for round in &mut r.rounds {
+        round.plan_epoch = 0;
+    }
+    r
+}
+
+#[test]
+fn prop_realloc_off_reproduces_the_static_plan_engine_bitwise() {
+    // `--realloc-every 0` must be a bitwise no-op: the live capacity
+    // estimates pass straight through to the strategy, reproducing
+    // the pre-realloc engines' RunRecord at every threads ×
+    // agg-shards × window setting, sync and async, under all three
+    // codecs — whatever the hysteresis knob says.
+    let methods = ["legend", "fedadapter"];
+    let codecs = [Codec::None, Codec::Int8, Codec::Int4];
+    check("realloc-off-equivalence", 6, |rng, case| {
+        let method = methods[case % methods.len()];
+        let codec = codecs[case % codecs.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        for async_mode in [false, true] {
+            let s_max = if async_mode { 2 } else { 0 };
+            let base = engine_run_codec(method, seed, 1, 1, 0, codec,
+                                        async_mode, s_max);
+            let want = base.to_json().to_string();
+            prop_assert!(
+                base.rank_realloc_epochs == 0
+                    && base.rounds.iter().all(|r| r.plan_epoch == 0),
+                "{method} seed {seed}: off run moved the plan epoch"
+            );
+            for (threads, shards, window) in
+                [(1usize, 1usize, 0usize), (4, 4, 2), (8, 1, 3)]
+            {
+                let got = engine_run_realloc(
+                    method, seed, threads, shards, window, codec,
+                    async_mode, s_max, 0, 0.37);
+                prop_assert!(
+                    got.to_json().to_string() == want,
+                    "{method} {codec:?} seed {seed} \
+                     async={async_mode}: realloc-off JSON diverged at \
+                     threads={threads} shards={shards} window={window}"
+                );
+                prop_assert!(
+                    got.to_csv_rows() == base.to_csv_rows(),
+                    "{method} {codec:?} seed {seed} \
+                     async={async_mode}: realloc-off CSV diverged at \
+                     threads={threads} shards={shards} window={window}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_realloc_on_keeps_the_determinism_contract() {
+    // With re-allocation enabled the run is still a pure function of
+    // the seed: bit-identical RunRecord at every threads × agg-shards
+    // × window setting, sync and async — and the refits really
+    // happen (the epoch counter moves).
+    let methods = ["legend", "hetlora"];
+    let codecs = [Codec::None, Codec::Int8];
+    check("realloc-on-determinism", 4, |rng, case| {
+        let method = methods[case % methods.len()];
+        let codec = codecs[case % codecs.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        for async_mode in [false, true] {
+            let s_max = if async_mode { 2 } else { 0 };
+            let base = engine_run_realloc(method, seed, 1, 1, 0, codec,
+                                          async_mode, s_max, 2, 0.05);
+            let want = base.to_json().to_string();
+            prop_assert!(
+                base.rank_realloc_epochs >= 1,
+                "{method} seed {seed} async={async_mode}: no refit \
+                 ever adopted on the fading fleet"
+            );
+            prop_assert!(
+                base.rounds.iter().all(|r| r.plan_epoch >= 1),
+                "{method} seed {seed}: round 1 always adopts the \
+                 first fit"
+            );
+            for (threads, shards, window) in
+                [(4usize, 4usize, 2usize), (2, 8, 1)]
+            {
+                let got = engine_run_realloc(
+                    method, seed, threads, shards, window, codec,
+                    async_mode, s_max, 2, 0.05);
+                prop_assert!(
+                    got.to_json().to_string() == want,
+                    "{method} {codec:?} seed {seed} \
+                     async={async_mode}: realloc-on JSON diverged at \
+                     threads={threads} shards={shards} window={window}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_realloc_every_round_zero_band_matches_off_trajectory() {
+    // `--realloc-every 1 --realloc-hysteresis 0` refits every round
+    // and adopts whenever anything moved: the strategy sees exactly
+    // the live estimates, so the model/timing/traffic trajectory must
+    // match the off run BITWISE — only the plan-epoch bookkeeping may
+    // differ (and must actually move).
+    let methods = ["legend", "fedlora"];
+    check("realloc-live-tracking", 4, |rng, case| {
+        let method = methods[case % methods.len()];
+        let seed = rng.next_u64() % 1_000_003;
+        for async_mode in [false, true] {
+            let s_max = if async_mode { 2 } else { 0 };
+            let off = engine_run_codec(method, seed, 4, 2, 2,
+                                       Codec::None, async_mode, s_max);
+            let live = engine_run_realloc(
+                method, seed, 4, 2, 2, Codec::None, async_mode, s_max,
+                1, 0.0);
+            prop_assert!(
+                live.rank_realloc_epochs >= 1,
+                "{method} seed {seed} async={async_mode}: zero-band \
+                 every-round refit never adopted"
+            );
+            prop_assert!(
+                strip_epochs(live).to_json().to_string()
+                    == strip_epochs(off).to_json().to_string(),
+                "{method} seed {seed} async={async_mode}: live \
+                 tracking changed the trajectory"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trimmed_updates_fold_identically_across_all_paths() {
+    // The heterogeneous-rank folding contract end to end: an update
+    // stored at its own max active rank (`serialize::trim_to_rank`)
+    // must fold BITWISE like its full-rank original through every
+    // aggregation path — buffered, streaming, sharded, and the edge
+    // tier — because all of them pad through the one rule in
+    // `layout::pad_to_rank`.
+    let d = 3usize;
+    let specs = vec![
+        TensorSpec { name: "aq".into(), shape: vec![L, R, d] },
+        TensorSpec { name: "bq".into(), shape: vec![L, d, R] },
+        TensorSpec { name: "head_w".into(), shape: vec![d, 4] },
+    ];
+    check("hetero-rank-fold-invariance", 32, |rng, _| {
+        let n = rng.range_incl(1, 10);
+        let mut updates: Vec<DeviceUpdate> =
+            (0..n).map(|_| random_update(rng, &specs)).collect();
+        for u in &mut updates {
+            if rng.bernoulli(0.3) {
+                u.weight = rng.uniform(0.1, 4.0);
+            }
+        }
+        let trimmed: Vec<DeviceUpdate> = updates
+            .iter()
+            .map(|u| DeviceUpdate {
+                trainable: trim_to_rank(&u.trainable, &u.config, L, R),
+                config: u.config.clone(),
+                weight: u.weight,
+            })
+            .collect();
+        let mut global = TensorMap::zeros(&specs);
+        for (_, v) in &mut global.entries {
+            for x in v.iter_mut() {
+                *x = rng.uniform(-1.0, 1.0) as f32;
+            }
+        }
+        let mut want = global.clone();
+        aggregate(&mut want, &updates, L, R);
+
+        let compare = |got: &TensorMap, path: &str| -> Result<(), String> {
+            for (spec, w) in &want.entries {
+                let g = got.get(&spec.name).unwrap();
+                for (e, (&a, &b)) in
+                    g.iter().zip(w.iter()).enumerate()
+                {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{path}: {}[{e}]: trimmed {a} != full {b}",
+                        spec.name
+                    );
+                }
+            }
+            Ok(())
+        };
+
+        let mut got = global.clone();
+        let mut agg = StreamingAggregator::new(&got, L, R);
+        for u in &trimmed {
+            agg.push(&u.trainable, &u.config, u.weight);
+        }
+        agg.finish(&mut got);
+        compare(&got, "streaming")?;
+
+        for shards in [1usize, 4] {
+            let mut got = global.clone();
+            let mut agg = ShardedAggregator::new(&got, L, R, shards, 4);
+            for u in &trimmed {
+                agg.push(u.trainable.clone(), &u.config, u.weight)
+                    .map_err(|e| e.to_string())?;
+            }
+            agg.finish(&mut got).map_err(|e| e.to_string())?;
+            compare(&got, &format!("sharded-{shards}"))?;
+        }
+
+        for edges in [2usize, 3] {
+            let mut got = global.clone();
+            let mut agg =
+                EdgeAggregator::new(&got, L, R, edges, 2, 4, n);
+            for u in &trimmed {
+                agg.push(u.trainable.clone(), &u.config, u.weight)
+                    .map_err(|e| e.to_string())?;
+            }
+            agg.finish(&mut got).map_err(|e| e.to_string())?;
+            compare(&got, &format!("edge-{edges}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Fixed-seed realloc oracle mirroring
+/// `async_oracle_emits_canonical_run_record`: CI's determinism job
+/// runs this twice in separate processes and diffs the artifact, so
+/// per-round re-allocation is held to the same cross-process
+/// bit-reproducibility bar as the static-plan engines.
+#[test]
+fn realloc_oracle_emits_canonical_run_record() {
+    let seed = 424_245;
+    let sync = engine_run_realloc("legend", seed, 4, 4, 2, Codec::None,
+                                  false, 0, 2, 0.05);
+    let asy = engine_run_realloc("legend", seed, 4, 4, 2, Codec::Int8,
+                                 true, 2, 2, 0.05);
+    assert!(sync.rank_realloc_epochs >= 1,
+            "oracle run never adopted a refit");
+    let doc = format!(
+        "{{\"realloc_sync\":{},\"realloc_async_int8_s2\":{}}}",
+        sync.to_json(),
+        asy.to_json()
+    );
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/DETERMINISM_realloc.json", doc).unwrap();
 }
 
 #[test]

@@ -21,6 +21,10 @@ Semantics:
     the codec acceptance criterion is int8+delta cutting total
     bytes-on-wire by at least 35% vs codec=none (docs/TRANSPORT.md),
     independent of what the baseline recorded.
+  * `*realloc_overhead_ratio` is a hard UPPER bound: periodic LCD
+    re-allocation (docs/ADAPTIVE.md) is an O(cohort) coordinator-side
+    refit, so a run with --realloc-every 2 may cost at most 1.5x the
+    static-plan run, independent of runner speed.
   * A null baseline leaf means the committed baseline is unmeasured at
     that path. It is reported with a clear message and, under --strict,
     fails with a DISTINCT exit code (2) so CI can tell "baseline was
@@ -45,6 +49,7 @@ import sys
 
 RSS_RATIO_BOUND = 10.0  # acceptance: lazy peak RSS <= 10x eager-80
 SAVINGS_RATIO_BOUND = 0.35  # acceptance: codec saves >= 35% of bytes
+REALLOC_OVERHEAD_BOUND = 1.5  # acceptance: realloc run <= 1.5x static
 
 EXIT_OK = 0
 EXIT_REGRESSION = 1  # a measured value regressed (or went missing)
@@ -86,6 +91,12 @@ def compare(baseline, current, tolerance):
                 regressions.append((path, SAVINGS_RATIO_BOUND, cur))
             else:
                 improvements.append((path, SAVINGS_RATIO_BOUND, cur))
+            continue
+        if path.endswith("realloc_overhead_ratio"):
+            if cur > REALLOC_OVERHEAD_BOUND:
+                regressions.append((path, REALLOC_OVERHEAD_BOUND, cur))
+            else:
+                improvements.append((path, REALLOC_OVERHEAD_BOUND, cur))
             continue
         if ref is None or not isinstance(ref, (int, float)):
             unmeasured.append(path)

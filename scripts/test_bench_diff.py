@@ -113,6 +113,24 @@ class CompareTests(unittest.TestCase):
             ok, [("codec.int8_savings_ratio",
                   bench_diff.SAVINGS_RATIO_BOUND, 0.37)])
 
+    def test_realloc_overhead_bound_fires_even_with_null_baseline(self):
+        reg, _, unmeasured, _ = self.cmp(
+            {"realloc": {"realloc_overhead_ratio": None}},
+            {"realloc": {"realloc_overhead_ratio": 2.2}})
+        self.assertEqual(
+            reg, [("realloc.realloc_overhead_ratio",
+                   bench_diff.REALLOC_OVERHEAD_BOUND, 2.2)])
+        self.assertEqual(unmeasured, [])
+
+    def test_realloc_overhead_within_bound_is_ok(self):
+        reg, ok, _, _ = self.cmp(
+            {"realloc": {"realloc_overhead_ratio": None}},
+            {"realloc": {"realloc_overhead_ratio": 1.05}})
+        self.assertEqual(reg, [])
+        self.assertEqual(
+            ok, [("realloc.realloc_overhead_ratio",
+                  bench_diff.REALLOC_OVERHEAD_BOUND, 1.05)])
+
     def test_note_leaves_are_ignored(self):
         reg, ok, unmeasured, missing = self.cmp(
             {"note": "schema doc", "n": 1},
@@ -163,6 +181,12 @@ class MainExitCodeTests(unittest.TestCase):
         code = self.run_main(
             {"codec": {"int8_savings_ratio": None}},
             {"codec": {"int8_savings_ratio": 0.1}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_realloc_bound_violation_exits_regression(self):
+        code = self.run_main(
+            {"realloc": {"realloc_overhead_ratio": None}},
+            {"realloc": {"realloc_overhead_ratio": 3.0}}, "--strict")
         self.assertEqual(code, bench_diff.EXIT_REGRESSION)
 
     def test_strict_filtered_run_tolerates_absent_sections(self):
