@@ -696,6 +696,84 @@ fn main() {
         ));
     }
 
+    // ---- multi-job: 2 tenants through the scheduler vs sequential ----------
+    // The same two fixed-seed 24-device-cohort jobs run (a) back to
+    // back through the single-job engine and (b) interleaved by the
+    // multi-job scheduler over one shared 64-device fleet. Training
+    // volume is identical (24 devices × 2 rounds per job), so the
+    // ratio isolates what the scheduling layer itself costs — claim
+    // order, disjointness filtering, backfill, token buckets;
+    // scripts/bench_diff.py holds `multijob_overhead_ratio` to a hard
+    // 1.5× bound.
+    if want("engine_multijob") {
+        use legend::coordinator::{JobScheduler, JobSpec};
+        let job_cfg = |seed: u64| FedConfig {
+            rounds: 2,
+            train_size: 24 * 64,
+            test_size: 64,
+            seed,
+            ..Default::default()
+        };
+        let single_run = |seed: u64| -> f64 {
+            let mut s = strategy::by_name("legend", L, R, 32).unwrap();
+            let mut fleet = Fleet::new(FleetConfig::sized(64));
+            let mut trainer = MockTrainer::new("lora");
+            let global = TensorMap::zeros(&real_specs());
+            let t0 = Instant::now();
+            let _ = run_federated_with(&job_cfg(seed), &mut fleet,
+                                       s.as_mut(), &mut trainer, &meta,
+                                       &spec, global,
+                                       &mut UniformCount { count: 24 })
+                .unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let sched_run = || -> f64 {
+            let mut sched =
+                JobScheduler::new(meta.clone(), spec.clone(), 64);
+            for j in 0..2u64 {
+                let s =
+                    strategy::by_name("legend", L, R, 32).unwrap();
+                sched
+                    .admit(JobSpec::new(job_cfg(1 + j)), s,
+                           Box::new(MockTrainer::new("lora")),
+                           Box::new(UniformCount { count: 24 }),
+                           TensorMap::zeros(&real_specs()))
+                    .unwrap();
+            }
+            let mut fleet = Fleet::new(FleetConfig::sized(64));
+            let t0 = Instant::now();
+            let _ = sched.run(&mut fleet).unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let best = |f: &dyn Fn() -> f64| -> f64 {
+            (0..3).map(|_| f()).fold(f64::MAX, f64::min)
+        };
+        let sequential_ms =
+            best(&|| single_run(1)) + best(&|| single_run(2));
+        let scheduler_ms = best(&sched_run);
+        let overhead = scheduler_ms / sequential_ms.max(1e-9);
+        println!(
+            "{:<40} {:>9.1} ms {:>9.1} ms {:>11.2}× {:>7}",
+            "engine_multijob_2jobs_64dev",
+            sequential_ms,
+            scheduler_ms,
+            overhead,
+            64
+        );
+        engine_doc.push((
+            "multijob",
+            Value::obj(vec![
+                ("devices", Value::Num(64.0)),
+                ("jobs", Value::Num(2.0)),
+                ("rounds", Value::Num(2.0)),
+                ("cohort_per_job", Value::Num(24.0)),
+                ("sequential_ms", Value::Num(sequential_ms)),
+                ("scheduler_ms", Value::Num(scheduler_ms)),
+                ("multijob_overhead_ratio", Value::Num(overhead)),
+            ]),
+        ));
+    }
+
     if !engine_doc.is_empty() {
         let mut fields = vec![
             ("bench", Value::Str("engine".into())),

@@ -50,8 +50,16 @@ impl CapacityEstimator {
 
     /// Fold in a round's status report (μ̂, β̂) from device `i`. The
     /// first report from a device seeds its state directly.
+    ///
+    /// An out-of-range id is dropped, in release builds too — a
+    /// `debug_assert!` here used to let a stray report silently
+    /// pollute `state` in release, and everything downstream
+    /// (backfill via [`Self::seen`], plan snapshots) trusts `state`
+    /// to hold only real devices.
     pub fn update(&mut self, i: usize, mu_hat: f64, beta_hat: f64) {
-        debug_assert!(i < self.n_devices, "device {i} out of range");
+        if i >= self.n_devices {
+            return;
+        }
         match self.state.entry(i) {
             std::collections::btree_map::Entry::Vacant(v) => {
                 v.insert(Ema { mu: mu_hat, beta: beta_hat });
@@ -79,6 +87,17 @@ impl CapacityEstimator {
 
     pub fn is_empty(&self) -> bool {
         self.n_devices == 0
+    }
+
+    /// The devices that have ever reported, with their current
+    /// estimates, in ascending id order. O(devices seen), not
+    /// O(fleet) — the multi-job scheduler's cohort backfill iterates
+    /// this instead of scanning the id space, which matters on a
+    /// lazily-derived million-device fleet.
+    pub fn seen(&self) -> impl Iterator<Item = (usize, Capacity)> + '_ {
+        self.state
+            .iter()
+            .map(|(&i, e)| (i, Capacity { mu: e.mu, beta: e.beta }))
     }
 }
 
@@ -256,6 +275,24 @@ mod tests {
                 c.mu);
     }
 
+    #[test]
+    fn out_of_range_update_is_dropped_not_recorded() {
+        // Regression: this used to be a debug_assert! only, so a
+        // release build silently seeded state for a device the fleet
+        // does not have. It must be a no-op in every profile.
+        let mut est = CapacityEstimator::paper(3);
+        est.update(3, 0.01, 0.1);
+        est.update(usize::MAX, 0.01, 0.1);
+        assert!(est.get(3).is_none());
+        assert_eq!(est.state.len(), 0);
+        assert_eq!(est.seen().count(), 0);
+        // In-range reports still land, and seen() reflects exactly
+        // the devices that reported.
+        est.update(2, 0.01, 0.1);
+        assert_eq!(est.seen().collect::<Vec<_>>(),
+                   vec![(2, Capacity { mu: 0.01, beta: 0.1 })]);
+    }
+
     fn cap(mu: f64) -> Capacity {
         Capacity { mu, beta: mu * 10.0 }
     }
@@ -335,6 +372,59 @@ mod tests {
         let again = r.plan_estimates(3, &[1], &[cap(0.9)]);
         assert_eq!(again[0], cap(0.040));
         assert_eq!(r.epoch(), 1);
+    }
+
+    #[test]
+    fn realloc_hysteresis_band_is_symmetric() {
+        // |live − frozen| ≤ H·|frozen| must hold on BOTH sides of the
+        // frozen value: a 10% band around 0.010 keeps live values in
+        // [0.009, 0.011] bitwise (epoch holds) and adopts just
+        // outside either edge.
+        for (live_mu, keeps) in [
+            (0.011, true),   // exactly at the upper edge: kept
+            (0.009, true),   // exactly at the lower edge: kept
+            (0.0111, false), // just above: adopted
+            (0.0089, false), // just below: adopted
+        ] {
+            let mut r = Reallocator::new(1, 0.10);
+            let seed = vec![cap(0.010)];
+            assert_eq!(r.plan_estimates(1, &[0], &seed), seed);
+            assert_eq!(r.epoch(), 1);
+            let live = vec![cap(live_mu)];
+            let got = r.plan_estimates(2, &[0], &live);
+            if keeps {
+                assert_eq!(got[0].mu.to_bits(), seed[0].mu.to_bits(),
+                           "live {live_mu} is inside the band");
+                assert_eq!(r.epoch(), 1);
+            } else {
+                assert_eq!(got[0].mu.to_bits(), live[0].mu.to_bits(),
+                           "live {live_mu} is outside the band");
+                assert_eq!(r.epoch(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn realloc_churn_seed_counts_as_frozen_on_next_refit() {
+        // A device seeded between refits (churn, no epoch bump) is
+        // real frozen state: if the next refit round finds the whole
+        // cohort inside the band — the churned device included — the
+        // fit is unchanged and the epoch must still not move.
+        let mut r = Reallocator::new(2, 0.10);
+        let _ = r.plan_estimates(1, &[0], &[cap(0.010)]);
+        assert_eq!(r.epoch(), 1);
+        // Round 2 (between refits): device 1 churns in, seeds from
+        // live, epoch holds.
+        let got = r.plan_estimates(2, &[0, 1], &[cap(0.010), cap(0.020)]);
+        assert_eq!(got[1], cap(0.020));
+        assert_eq!(r.epoch(), 1);
+        // Round 3 refits; both devices are within 10% of their frozen
+        // values (device 1's being the churn seed): no adoption.
+        let live = vec![cap(0.0101), cap(0.0202)];
+        let kept = r.plan_estimates(3, &[0, 1], &live);
+        assert_eq!(kept[0], cap(0.010));
+        assert_eq!(kept[1], cap(0.020));
+        assert_eq!(r.epoch(), 1, "in-band refit must not bump the epoch");
     }
 
     #[test]

@@ -46,6 +46,14 @@
 //!    status report, no assignment, no upload (Fig. 11 accounting
 //!    stays honest under sampling).
 //!
+//! Since the multi-job coordinator landed (`coordinator/jobs.rs`,
+//! docs/MULTIJOB.md), the round loop itself lives in
+//! [`RoundLoopState`]: everything one job carries across rounds, with
+//! `sample_cohort` + `step` as the per-round entry points.
+//! [`RoundEngine::run`] is the degenerate single-job case — one state,
+//! the full sampled cohort, no ingest cap — and is property-tested to
+//! reproduce the pre-split loop bitwise.
+//!
 //! Determinism contract: all RNG draws (data, fleet observation,
 //! participation) happen on the coordinator thread in a fixed order;
 //! per-device training state is keyed by device id and derived from
@@ -74,7 +82,7 @@ use super::serialize;
 use super::server::{cosine_lr, FedConfig, ModelMeta};
 use super::strategy::{Strategy, StrategyCtx};
 use super::trainer::{CohortSink, DeviceTrainer, LocalOutcome, Trainer};
-use super::transport::Transport;
+use super::transport::{Tally, Transport};
 
 /// One device's phase-④ work item. Everything a worker thread needs,
 /// by value or by shared reference: the assignment payload is read
@@ -292,6 +300,12 @@ impl<'a> RoundEngine<'a> {
     }
 
     /// Run one full federated fine-tuning experiment.
+    ///
+    /// This is the degenerate single-job case of the multi-job
+    /// scheduler (`coordinator/jobs.rs`): one [`RoundLoopState`], a
+    /// private [`CapacityEstimator`], the full sampled cohort and no
+    /// ingest cap every round — property-tested to reproduce the
+    /// pre-split monolithic loop bitwise.
     pub fn run(&self, fleet: &mut dyn FleetView,
                strategy: &mut dyn Strategy,
                trainer: &mut dyn Trainer, spec: &Spec,
@@ -299,313 +313,428 @@ impl<'a> RoundEngine<'a> {
                participation: &mut dyn Participation)
                -> Result<RunRecord> {
         let cfg = self.cfg;
-        let meta = self.meta;
         let n = fleet.len();
-        participation
-            .validate(n)
-            .map_err(|e| anyhow!("participation: {e}"))?;
-        let family = trainer.family();
-        let rank_dim = meta.rank_dim(family);
-        let unit_bytes = meta.unit_bytes(family);
-
-        // ---- data ---------------------------------------------------------
-        // Only the shared test set is materialized up front; training
-        // shards are derived per cohort member per round (a pure
-        // function of `(seed, device_id)`), so data memory is
-        // O(cohort), never O(fleet).
-        let batch = trainer.batch_size();
-        let test = test_data(cfg, spec)?;
-
-        // ---- state --------------------------------------------------------
         let mut estimator = CapacityEstimator::paper(n);
-        let mut realloc =
-            Reallocator::new(cfg.realloc_every, cfg.realloc_hysteresis);
-        let transport = Transport::new();
-        let mut clock = VirtualClock::new();
-        let mut record = RunRecord::new(&strategy.name(), &cfg.task);
-        let mut part_rng = Rng::new(cfg.seed).child("participation");
-        // (round recorded, loss) per device that has ever trained —
-        // sparse, so state is O(devices seen), not O(fleet). A device
-        // re-entering a sampled cohort after sitting out must not have
-        // a many-rounds-old loss surfaced to strategies as "last
-        // round": only an entry from round h−1 reads as fresh.
-        let mut loss_log: BTreeMap<usize, (usize, f64)> = BTreeMap::new();
-        let mut last_round_time = 0f64;
-        let mut last_acc = 0f64;
-        let mut last_test_loss = 0f64;
-
+        let mut state = RoundLoopState::new(cfg, self.meta, strategy,
+                                            trainer, spec, n,
+                                            &*participation)?;
         for h in 1..=cfg.rounds {
             if h > 1 {
                 fleet.advance_round();
             }
-            transport.begin_round();
+            let cohort = state.sample_cohort(participation, h);
+            state.step(cfg, self.meta, fleet, strategy, trainer, spec,
+                       &mut global, participation, &mut estimator, h,
+                       &cohort, usize::MAX)?;
+        }
+        Ok(state.finish())
+    }
+}
 
-            // ①a cohort sampling (pre-configuration). An empty or
-            // out-of-range sample keeps the round minimal (device 0
-            // only) rather than silently reverting to full
-            // participation — mirroring the admit() fallback below.
-            let cohort =
-                sanitize(participation.sample(h, n, &mut part_rng), n)
-                    .unwrap_or_else(|| vec![0]);
+/// What one [`RoundLoopState::step`] did: how many updates folded and
+/// the round's transport tally. The multi-job scheduler deducts
+/// `folded` from the job's token bucket and merges the tallies into
+/// its fleet-wide traffic total.
+pub(crate) struct StepReport {
+    pub folded: usize,
+    pub tally: Tally,
+}
 
-            // ⓪ materialize exactly the cohort's shards for this
-            // round — each a pure function of `(seed, device_id)`, so
-            // non-cohort devices cost nothing.
-            let shards: BTreeMap<usize, Dataset> = cohort
+/// Everything one job's round loop carries **across** rounds, split
+/// out of [`RoundEngine::run`] so the multi-job scheduler
+/// (`coordinator/jobs.rs`) can interleave many jobs over a shared
+/// fleet one round at a time. The capacity estimator is deliberately
+/// NOT part of this state: device capacity is a property of the
+/// fleet, not of any job, so the caller owns it (the single-job
+/// engine makes a private one; the scheduler shares one across all
+/// of its jobs).
+///
+/// Per-round protocol: `sample_cohort` (participation sampling — the
+/// only RNG this state owns) and then `step` (the six §3 phases over
+/// a caller-chosen cohort, which the scheduler may have rewritten to
+/// resolve cross-job contention). `RoundEngine::run` is exactly
+/// sample + step with the untouched cohort and `ingest_cap =
+/// usize::MAX`.
+pub(crate) struct RoundLoopState {
+    realloc: Reallocator,
+    transport: Transport,
+    clock: VirtualClock,
+    record: RunRecord,
+    part_rng: Rng,
+    /// (round recorded, loss) per device that has ever trained —
+    /// sparse, so state is O(devices seen), not O(fleet). A device
+    /// re-entering a sampled cohort after sitting out must not have
+    /// a many-rounds-old loss surfaced to strategies as "last
+    /// round": only an entry from round h−1 reads as fresh.
+    loss_log: BTreeMap<usize, (usize, f64)>,
+    last_round_time: f64,
+    last_acc: f64,
+    last_test_loss: f64,
+    /// Only the shared test set is materialized up front; training
+    /// shards are derived per cohort member per round (a pure
+    /// function of `(seed, device_id)`), so data memory is
+    /// O(cohort), never O(fleet).
+    test: Dataset,
+    batch: usize,
+    rank_dim: usize,
+    unit_bytes: usize,
+    n: usize,
+}
+
+impl RoundLoopState {
+    pub(crate) fn new(cfg: &FedConfig, meta: &ModelMeta,
+                      strategy: &dyn Strategy, trainer: &dyn Trainer,
+                      spec: &Spec, n: usize,
+                      participation: &dyn Participation)
+                      -> Result<Self> {
+        participation
+            .validate(n)
+            .map_err(|e| anyhow!("participation: {e}"))?;
+        let family = trainer.family();
+        Ok(RoundLoopState {
+            realloc: Reallocator::new(cfg.realloc_every,
+                                      cfg.realloc_hysteresis),
+            transport: Transport::new(),
+            clock: VirtualClock::new(),
+            record: RunRecord::new(&strategy.name(), &cfg.task),
+            part_rng: Rng::new(cfg.seed).child("participation"),
+            loss_log: BTreeMap::new(),
+            last_round_time: 0.0,
+            last_acc: 0.0,
+            last_test_loss: 0.0,
+            test: test_data(cfg, spec)?,
+            batch: trainer.batch_size(),
+            rank_dim: meta.rank_dim(family),
+            unit_bytes: meta.unit_bytes(family),
+            n,
+        })
+    }
+
+    /// ①a cohort sampling (pre-configuration). An empty or
+    /// out-of-range sample keeps the round minimal (device 0 only)
+    /// rather than silently reverting to full participation —
+    /// mirroring the admit() fallback inside `step`.
+    pub(crate) fn sample_cohort(&mut self,
+                                participation: &mut dyn Participation,
+                                h: usize) -> Vec<usize> {
+        sanitize(participation.sample(h, self.n, &mut self.part_rng),
+                 self.n)
+            .unwrap_or_else(|| vec![0])
+    }
+
+    /// Latest evaluated test accuracy (0.0 before the first eval).
+    pub(crate) fn latest_accuracy(&self) -> f64 {
+        self.last_acc
+    }
+
+    /// Seal the run: stamp the final plan-epoch count and hand back
+    /// the per-job [`RunRecord`].
+    pub(crate) fn finish(mut self) -> RunRecord {
+        self.record.rank_realloc_epochs = self.realloc.epoch();
+        self.record
+    }
+
+    /// One global round for this job over `cohort` — sorted, deduped,
+    /// in-range and non-empty (`sample_cohort` output, possibly with
+    /// contested devices swapped out by the multi-job scheduler).
+    /// `ingest_cap` bounds how many updates the coordinator folds
+    /// this round (the job's token-bucket grant); `usize::MAX` =
+    /// unlimited, which is bitwise a no-op.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn step(&mut self, cfg: &FedConfig, meta: &ModelMeta,
+                       fleet: &mut dyn FleetView,
+                       strategy: &mut dyn Strategy,
+                       trainer: &mut dyn Trainer, spec: &Spec,
+                       global: &mut TensorMap,
+                       participation: &mut dyn Participation,
+                       estimator: &mut CapacityEstimator, h: usize,
+                       cohort: &[usize], ingest_cap: usize)
+                       -> Result<StepReport> {
+        let Self {
+            realloc,
+            transport,
+            clock,
+            record,
+            loss_log,
+            last_round_time,
+            last_acc,
+            last_test_loss,
+            test,
+            batch,
+            rank_dim,
+            unit_bytes,
+            n,
+            ..
+        } = self;
+        let (batch, rank_dim, unit_bytes, n) =
+            (*batch, *rank_dim, *unit_bytes, *n);
+        transport.begin_round();
+
+        // ⓪ materialize exactly the cohort's shards for this round —
+        // each a pure function of `(seed, device_id)`, so non-cohort
+        // devices cost nothing.
+        let shards: BTreeMap<usize, Dataset> = cohort
+            .iter()
+            .map(|&i| Ok((i, device_shard(cfg, spec, i, n, batch)?)))
+            .collect::<Result<_>>()?;
+
+        // ①b status reports → capacity estimation (eq. 8–9) → the
+        // round's *plan* capacities. Only sampled devices report: a
+        // skipped device costs zero bytes this round, STATUS_BYTES
+        // included. With `--realloc-every K > 0` the live EWMA
+        // estimates are frozen between refit rounds (hysteresis keeps
+        // an unchanged fit bitwise), so the LCD plan is a per-round
+        // value under an explicit epoch; K = 0 passes the live
+        // estimates straight through — today's engine, bitwise. The
+        // epoch is resolved before any message is logged so every
+        // exchange names the plan it belongs to.
+        let live: Vec<_> = cohort
+            .iter()
+            .map(|&i| {
+                let (mu_hat, beta_hat) = fleet.observe(i, unit_bytes);
+                estimator.update(i, mu_hat, beta_hat);
+                estimator.get(i).expect("cohort reported")
+            })
+            .collect();
+        let estimates = realloc.plan_estimates(h, cohort, &live);
+        let epoch = realloc.epoch();
+        for &i in cohort {
+            transport.recv_status(h, epoch, i);
+        }
+        let n_batches: Vec<usize> = cohort
+            .iter()
+            .map(|&i| {
+                shards[&i].len().div_ceil(batch).min(cfg.max_batches)
+            })
+            .collect();
+
+        // ② LoRA configuration (§4.4) over the cohort.
+        let fwd_times: Vec<f64> = estimates
+            .iter()
+            .map(|c| calib::FWD_FRAC * c.mu * meta.n_layers as f64)
+            .collect();
+        let ctx = StrategyCtx {
+            round: h,
+            n_layers: meta.n_layers,
+            rank_dim,
+            fwd_times: fwd_times.clone(),
+            estimates: estimates.clone(),
+            n_batches: n_batches.clone(),
+            unit_rank_bytes: unit_bytes,
+            compute_budgets: vec![f64::MAX; cohort.len()],
+            comm_budgets: vec![usize::MAX; cohort.len()],
+            last_losses: cohort
                 .iter()
                 .map(|&i| {
-                    Ok((i, device_shard(cfg, spec, i, n, batch)?))
-                })
-                .collect::<Result<_>>()?;
-
-            // ①b status reports → capacity estimation (eq. 8–9) →
-            // the round's *plan* capacities. Only sampled devices
-            // report: a skipped device costs zero bytes this round,
-            // STATUS_BYTES included. With `--realloc-every K > 0` the
-            // live EWMA estimates are frozen between refit rounds
-            // (hysteresis keeps an unchanged fit bitwise), so the LCD
-            // plan is a per-round value under an explicit epoch;
-            // K = 0 passes the live estimates straight through —
-            // today's engine, bitwise. The epoch is resolved before
-            // any message is logged so every exchange names the plan
-            // it belongs to.
-            let live: Vec<_> = cohort
-                .iter()
-                .map(|&i| {
-                    let (mu_hat, beta_hat) =
-                        fleet.observe(i, unit_bytes);
-                    estimator.update(i, mu_hat, beta_hat);
-                    estimator.get(i).expect("cohort reported")
-                })
-                .collect();
-            let estimates = realloc.plan_estimates(h, &cohort, &live);
-            let epoch = realloc.epoch();
-            for &i in &cohort {
-                transport.recv_status(h, epoch, i);
-            }
-            let n_batches: Vec<usize> = cohort
-                .iter()
-                .map(|&i| {
-                    shards[&i].len().div_ceil(batch).min(cfg.max_batches)
-                })
-                .collect();
-
-            // ② LoRA configuration (§4.4) over the cohort.
-            let fwd_times: Vec<f64> = estimates
-                .iter()
-                .map(|c| calib::FWD_FRAC * c.mu * meta.n_layers as f64)
-                .collect();
-            let ctx = StrategyCtx {
-                round: h,
-                n_layers: meta.n_layers,
-                rank_dim,
-                fwd_times: fwd_times.clone(),
-                estimates: estimates.clone(),
-                n_batches: n_batches.clone(),
-                unit_rank_bytes: unit_bytes,
-                compute_budgets: vec![f64::MAX; cohort.len()],
-                comm_budgets: vec![usize::MAX; cohort.len()],
-                last_losses: cohort
-                    .iter()
-                    .map(|&i| {
-                        // Only a loss recorded in the immediately
-                        // previous round is "last round"; anything
-                        // older surfaces as 0 (round-1 semantics).
-                        match loss_log.get(&i) {
-                            Some(&(r, loss)) if r + 1 == h => loss,
-                            _ => 0.0,
-                        }
-                    })
-                    .collect(),
-                last_round_time,
-                device_ids: cohort.clone(),
-                staleness: cohort
-                    .iter()
-                    .map(|&i| {
-                        // Rounds since the device's loss was recorded:
-                        // 0 = fresh (immediately previous round),
-                        // usize::MAX = never trained.
-                        match loss_log.get(&i) {
-                            Some(&(r, _)) => (h - 1).saturating_sub(r),
-                            None => usize::MAX,
-                        }
-                    })
-                    .collect(),
-            };
-            let plan = strategy.configure(&ctx);
-            debug_assert_eq!(plan.device_configs.len(), cohort.len());
-
-            // ①c deadline admission: predicted eq. 12 completion from
-            // the PS-side *estimates* (the true parameters are not
-            // observable at the server). Same DeviceRound math as
-            // phase ⑥, just fed with estimates instead of truth.
-            let predicted: Vec<f64> = (0..cohort.len())
-                .map(|j| {
-                    device_round(meta, unit_bytes, cohort[j],
-                                 estimates[j].mu, estimates[j].beta,
-                                 fwd_times[j],
-                                 &plan.device_configs[j],
-                                 n_batches[j])
-                        .completion_time()
-                })
-                .collect();
-            let admitted =
-                admitted_cohort(participation, h, &cohort, &predicted, n);
-            // Cohort positions of the admitted devices.
-            let admitted_pos: Vec<usize> = admitted
-                .iter()
-                .map(|i| cohort.binary_search(i).unwrap())
-                .collect();
-
-            // ③ assignment + download accounting (§4.6), ④ local
-            // fine-tuning, ⑤ streaming upload accounting + layer-wise
-            // aggregation (eq. 17).
-            let lr = cosine_lr(cfg.lr0, h, cfg.rounds) as f32;
-            let jobs: Vec<TrainJob<'_>> = admitted_pos
-                .iter()
-                .map(|&j| {
-                    let i = cohort[j];
-                    let config = &plan.device_configs[j];
-                    transport.send_assignment(h, epoch, i, &global,
-                                              config, meta.n_layers,
-                                              rank_dim);
-                    TrainJob {
-                        device_id: i,
-                        init: &global,
-                        masks: Masks {
-                            rank_mask: config
-                                .rank_mask(meta.n_layers, rank_dim),
-                            layer_mask: config.layer_mask(meta.n_layers),
-                        },
-                        shard: &shards[&i],
-                        lr,
-                        max_batches: cfg.max_batches,
+                    // Only a loss recorded in the immediately
+                    // previous round is "last round"; anything
+                    // older surfaces as 0 (round-1 semantics).
+                    match loss_log.get(&i) {
+                        Some(&(r, loss)) if r + 1 == h => loss,
+                        _ => 0.0,
                     }
                 })
-                .collect();
-
-            // Shard fold queues inherit the window: with W set, at
-            // most W updates sit in a lagging shard's queue before
-            // push() back-pressures, keeping transient memory
-            // O(model + W) end to end. The edge tier slices the
-            // admitted cohort across `edge_aggregators` concurrent
-            // folds; fixed-point accumulation keeps the root merge
-            // bit-identical to the flat fold at every edge count.
-            let shard_cap = if cfg.window > 0 { cfg.window } else { 8 };
-            let mut agg = EdgeAggregator::new(
-                &global, meta.n_layers, rank_dim, cfg.edge_aggregators,
-                cfg.agg_shards, shard_cap, admitted.len(),
-            );
-            let mut loss_sum = 0f64;
-            {
-                // Outcomes arrive in device-index order (the reorder
-                // buffer lives in train_parallel), so accounting and
-                // eq. 17 folds are bit-stable at every threads ×
-                // shards × window × edge setting.
-                let transport = &transport;
-                let plan = &plan;
-                let (cohort_r, admitted_pos_r) = (&cohort, &admitted_pos);
-                let (agg_r, loss_log_r, loss_sum_r) =
-                    (&mut agg, &mut loss_log, &mut loss_sum);
-                // The device side encodes its update under the run's
-                // codec (delta vs the assigned global it trained on);
-                // the coordinator dequantizes exactly once here,
-                // before the fold, and the tally records the real
-                // bytes-on-wire. codec=none is a bitwise pass-through.
-                let global_r = &global;
-                let mut sink = |k: usize, out: LocalOutcome| {
-                    let j = admitted_pos_r[k];
-                    let i = cohort_r[j];
-                    let config = &plan.device_configs[j];
-                    let (wire, restored) = serialize::through_wire(
-                        cfg.codec, out.trainable, global_r, config,
-                        meta.n_layers, rank_dim)?;
-                    transport.recv_update(h, epoch, i, wire);
-                    loss_log_r.insert(i, (h, out.mean_loss));
-                    // detlint-allow: float-accum coordinator-thread fold in job-index order
-                    *loss_sum_r += out.mean_loss;
-                    agg_r.push(restored, config, 1.0)
-                };
-                let opts = ExecOpts {
-                    threads: cfg.threads,
-                    window: cfg.window,
-                };
-                trainer.train_cohort(&jobs, &opts, &mut sink)?;
-            }
-            drop(jobs);
-            let tally = transport.round_tally();
-            agg.finish(&mut global)?;
-
-            // ⑥ timing (eq. 12/13) with TRUE device parameters, over
-            // the devices that actually took part.
-            let rounds_t: Vec<DeviceRound> = admitted_pos
+                .collect(),
+            last_round_time: *last_round_time,
+            device_ids: cohort.to_vec(),
+            staleness: cohort
                 .iter()
-                .map(|&j| {
-                    let i = cohort[j];
-                    device_round(meta, unit_bytes, i, fleet.true_mu(i),
-                                 fleet.true_beta(i, unit_bytes),
-                                 fleet.forward_time(i, meta.n_layers),
-                                 &plan.device_configs[j], n_batches[j])
+                .map(|&i| {
+                    // Rounds since the device's loss was recorded:
+                    // 0 = fresh (immediately previous round),
+                    // usize::MAX = never trained.
+                    match loss_log.get(&i) {
+                        Some(&(r, _)) => (h - 1).saturating_sub(r),
+                        None => usize::MAX,
+                    }
                 })
-                .collect();
-            let timing = simulate_round(&rounds_t);
-            clock.advance(&timing);
-            last_round_time = timing.round_time;
+                .collect(),
+        };
+        let plan = strategy.configure(&ctx);
+        debug_assert_eq!(plan.device_configs.len(), cohort.len());
 
-            // Evaluation of the aggregated global model.
-            if h % cfg.eval_every == 0 || h == cfg.rounds {
-                let eval_masks = Masks {
-                    rank_mask: plan
-                        .eval_config
-                        .rank_mask(meta.n_layers, rank_dim),
-                    layer_mask: plan.eval_config.layer_mask(meta.n_layers),
-                };
-                let (tl, ta) =
-                    trainer.evaluate(&global, &eval_masks, &test)?;
-                last_acc = ta;
-                last_test_loss = tl;
-            }
+        // ①c deadline admission: predicted eq. 12 completion from
+        // the PS-side *estimates* (the true parameters are not
+        // observable at the server). Same DeviceRound math as phase
+        // ⑥, just fed with estimates instead of truth.
+        let predicted: Vec<f64> = (0..cohort.len())
+            .map(|j| {
+                device_round(meta, unit_bytes, cohort[j],
+                             estimates[j].mu, estimates[j].beta,
+                             fwd_times[j],
+                             &plan.device_configs[j],
+                             n_batches[j])
+                    .completion_time()
+            })
+            .collect();
+        let admitted =
+            admitted_cohort(participation, h, cohort, &predicted, n);
+        // Per-job ingest rate limit (multi-job token bucket): fold at
+        // most `ingest_cap` updates this round, preferring the
+        // fastest-predicted devices. usize::MAX leaves the admitted
+        // cohort untouched.
+        let admitted =
+            rate_limited(admitted, cohort, &predicted, ingest_cap);
+        // Cohort positions of the admitted devices.
+        let admitted_pos: Vec<usize> = admitted
+            .iter()
+            .map(|i| cohort.binary_search(i).unwrap())
+            .collect();
 
-            let depths: Vec<usize> = admitted_pos
-                .iter()
-                .map(|&j| plan.device_configs[j].depth(meta.n_layers))
-                .collect();
-            let mean_depth = mean_depth_of(&depths);
-            record.rounds.push(RoundRecord {
-                round: h,
-                sim_time: clock.elapsed,
-                round_time: timing.round_time,
-                avg_waiting: timing.avg_waiting,
-                up_bytes: tally.uplink,
-                down_bytes: tally.downlink,
-                train_loss: loss_sum / admitted.len().max(1) as f64,
-                test_acc: last_acc,
-                test_loss: last_test_loss,
-                mean_depth,
-                plan_epoch: epoch,
-                participants: admitted.len(),
-                dropped: cohort.len() - admitted.len(),
-            });
-            if cfg.verbose {
-                println!(
-                    "[{}/{}] {} t={:.0}s acc={:.3} loss={:.3} \
-                     depth={:.1} epoch={} wait={:.1}s part={}/{}",
-                    h,
-                    cfg.rounds,
-                    strategy.name(),
-                    clock.elapsed,
-                    last_acc,
-                    loss_sum / admitted.len().max(1) as f64,
-                    mean_depth,
-                    epoch,
-                    timing.avg_waiting,
-                    admitted.len(),
-                    n,
-                );
-            }
+        // ③ assignment + download accounting (§4.6), ④ local
+        // fine-tuning, ⑤ streaming upload accounting + layer-wise
+        // aggregation (eq. 17).
+        let lr = cosine_lr(cfg.lr0, h, cfg.rounds) as f32;
+        // Shared view of the global for the assignment/fold phase;
+        // the unique reborrow for `agg.finish` happens after the jobs
+        // (and the sink's wire reads) are done with it.
+        let global_ro: &TensorMap = &*global;
+        let jobs: Vec<TrainJob<'_>> = admitted_pos
+            .iter()
+            .map(|&j| {
+                let i = cohort[j];
+                let config = &plan.device_configs[j];
+                transport.send_assignment(h, epoch, i, global_ro,
+                                          config, meta.n_layers,
+                                          rank_dim);
+                TrainJob {
+                    device_id: i,
+                    init: global_ro,
+                    masks: Masks {
+                        rank_mask: config
+                            .rank_mask(meta.n_layers, rank_dim),
+                        layer_mask: config.layer_mask(meta.n_layers),
+                    },
+                    shard: &shards[&i],
+                    lr,
+                    max_batches: cfg.max_batches,
+                }
+            })
+            .collect();
+
+        // Shard fold queues inherit the window: with W set, at most W
+        // updates sit in a lagging shard's queue before push()
+        // back-pressures, keeping transient memory O(model + W) end
+        // to end. The edge tier slices the admitted cohort across
+        // `edge_aggregators` concurrent folds; fixed-point
+        // accumulation keeps the root merge bit-identical to the flat
+        // fold at every edge count.
+        let shard_cap = if cfg.window > 0 { cfg.window } else { 8 };
+        let mut agg = EdgeAggregator::new(
+            global_ro, meta.n_layers, rank_dim, cfg.edge_aggregators,
+            cfg.agg_shards, shard_cap, admitted.len(),
+        );
+        let mut loss_sum = 0f64;
+        {
+            // Outcomes arrive in device-index order (the reorder
+            // buffer lives in train_parallel), so accounting and
+            // eq. 17 folds are bit-stable at every threads × shards ×
+            // window × edge setting.
+            let transport = &*transport;
+            let plan = &plan;
+            let (cohort_r, admitted_pos_r) = (&cohort, &admitted_pos);
+            let (agg_r, loss_log_r, loss_sum_r) =
+                (&mut agg, &mut *loss_log, &mut loss_sum);
+            // The device side encodes its update under the run's
+            // codec (delta vs the assigned global it trained on); the
+            // coordinator dequantizes exactly once here, before the
+            // fold, and the tally records the real bytes-on-wire.
+            // codec=none is a bitwise pass-through.
+            let global_r = global_ro;
+            let mut sink = |k: usize, out: LocalOutcome| {
+                let j = admitted_pos_r[k];
+                let i = cohort_r[j];
+                let config = &plan.device_configs[j];
+                let (wire, restored) = serialize::through_wire(
+                    cfg.codec, out.trainable, global_r, config,
+                    meta.n_layers, rank_dim)?;
+                transport.recv_update(h, epoch, i, wire);
+                loss_log_r.insert(i, (h, out.mean_loss));
+                // detlint-allow: float-accum coordinator-thread fold in job-index order
+                *loss_sum_r += out.mean_loss;
+                agg_r.push(restored, config, 1.0)
+            };
+            let opts = ExecOpts {
+                threads: cfg.threads,
+                window: cfg.window,
+            };
+            trainer.train_cohort(&jobs, &opts, &mut sink)?;
         }
-        record.rank_realloc_epochs = realloc.epoch();
-        Ok(record)
+        drop(jobs);
+        let tally = transport.round_tally();
+        agg.finish(&mut *global)?;
+
+        // ⑥ timing (eq. 12/13) with TRUE device parameters, over the
+        // devices that actually took part.
+        let rounds_t: Vec<DeviceRound> = admitted_pos
+            .iter()
+            .map(|&j| {
+                let i = cohort[j];
+                device_round(meta, unit_bytes, i, fleet.true_mu(i),
+                             fleet.true_beta(i, unit_bytes),
+                             fleet.forward_time(i, meta.n_layers),
+                             &plan.device_configs[j], n_batches[j])
+            })
+            .collect();
+        let timing = simulate_round(&rounds_t);
+        clock.advance(&timing);
+        *last_round_time = timing.round_time;
+
+        // Evaluation of the aggregated global model.
+        if h % cfg.eval_every == 0 || h == cfg.rounds {
+            let eval_masks = Masks {
+                rank_mask: plan
+                    .eval_config
+                    .rank_mask(meta.n_layers, rank_dim),
+                layer_mask: plan.eval_config.layer_mask(meta.n_layers),
+            };
+            let (tl, ta) =
+                trainer.evaluate(global, &eval_masks, test)?;
+            *last_acc = ta;
+            *last_test_loss = tl;
+        }
+
+        let depths: Vec<usize> = admitted_pos
+            .iter()
+            .map(|&j| plan.device_configs[j].depth(meta.n_layers))
+            .collect();
+        let mean_depth = mean_depth_of(&depths);
+        record.rounds.push(RoundRecord {
+            round: h,
+            sim_time: clock.elapsed,
+            round_time: timing.round_time,
+            avg_waiting: timing.avg_waiting,
+            up_bytes: tally.uplink,
+            down_bytes: tally.downlink,
+            train_loss: loss_sum / admitted.len().max(1) as f64,
+            test_acc: *last_acc,
+            test_loss: *last_test_loss,
+            mean_depth,
+            plan_epoch: epoch,
+            participants: admitted.len(),
+            dropped: cohort.len() - admitted.len(),
+        });
+        if cfg.verbose {
+            println!(
+                "[{}/{}] {} t={:.0}s acc={:.3} loss={:.3} \
+                 depth={:.1} epoch={} wait={:.1}s part={}/{}",
+                h,
+                cfg.rounds,
+                strategy.name(),
+                clock.elapsed,
+                *last_acc,
+                loss_sum / admitted.len().max(1) as f64,
+                mean_depth,
+                epoch,
+                timing.avg_waiting,
+                admitted.len(),
+                n,
+            );
+        }
+        Ok(StepReport {
+            folded: admitted.len(),
+            tally,
+        })
     }
 }
 
@@ -721,17 +850,32 @@ pub(crate) fn admitted_cohort(participation: &mut dyn Participation,
     }
 }
 
-/// Sorted, deduped, in-range, non-empty — or None.
-pub(crate) fn sanitize(mut ids: Vec<usize>, n: usize)
-                       -> Option<Vec<usize>> {
-    ids.retain(|&i| i < n);
-    ids.sort_unstable();
-    ids.dedup();
-    if ids.is_empty() {
-        None
-    } else {
-        Some(ids)
+/// Truncate an admitted cohort to the token-bucket grant `cap`,
+/// keeping the fastest-predicted devices (ties by id) and restoring
+/// ascending-id order. `cap` is floored at 1 — the round loop needs
+/// ≥ 1 participant, and the scheduler idles a job instead of stepping
+/// it when its bucket is empty. A cap ≥ the cohort size is a no-op,
+/// so the single-job engine (`usize::MAX`) is bitwise unaffected.
+pub(crate) fn rate_limited(admitted: Vec<usize>, cohort: &[usize],
+                           predicted: &[f64], cap: usize)
+                           -> Vec<usize> {
+    let cap = cap.max(1);
+    if admitted.len() <= cap {
+        return admitted;
     }
+    let mut by_speed = admitted;
+    by_speed.sort_by(|a, b| {
+        let pa = predicted[cohort
+            .binary_search(a)
+            .expect("admitted device not in cohort")];
+        let pb = predicted[cohort
+            .binary_search(b)
+            .expect("admitted device not in cohort")];
+        pa.total_cmp(&pb).then(a.cmp(b))
+    });
+    by_speed.truncate(cap);
+    by_speed.sort_unstable();
+    by_speed
 }
 
 #[cfg(test)]
@@ -761,5 +905,33 @@ mod tests {
         // An empty fold (async window with nothing landing) reads 0,
         // not NaN.
         assert_eq!(mean_depth_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn rate_limited_keeps_fastest_and_restores_id_order() {
+        let cohort = vec![2, 5, 7, 9];
+        // predicted completion per cohort position: device 7 fastest,
+        // then 2, then 9, then 5.
+        let predicted = vec![3.0, 9.0, 1.0, 5.0];
+        let all = vec![2, 5, 7, 9];
+        assert_eq!(rate_limited(all.clone(), &cohort, &predicted, 2),
+                   vec![2, 7]);
+        assert_eq!(rate_limited(all.clone(), &cohort, &predicted, 3),
+                   vec![2, 7, 9]);
+        // cap >= len is a no-op (the single-job engine's path).
+        assert_eq!(
+            rate_limited(all.clone(), &cohort, &predicted, usize::MAX),
+            all
+        );
+        // cap 0 is floored at 1: the loop needs a participant.
+        assert_eq!(rate_limited(all, &cohort, &predicted, 0), vec![7]);
+    }
+
+    #[test]
+    fn rate_limited_breaks_prediction_ties_by_id() {
+        let cohort = vec![1, 2, 3];
+        let predicted = vec![4.0, 4.0, 4.0];
+        assert_eq!(rate_limited(vec![1, 2, 3], &cohort, &predicted, 2),
+                   vec![1, 2]);
     }
 }

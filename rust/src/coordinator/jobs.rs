@@ -1,0 +1,581 @@
+//! # Multi-job coordination — N tenants, one fleet, one engine
+//!
+//! One coordinator multiplexing N concurrent fine-tuning jobs over a
+//! shared heterogeneous fleet (docs/MULTIJOB.md). Each job is a full
+//! [`FedConfig`] + strategy + trainer + participation policy with its
+//! own global model, round loop ([`super::engine::RoundLoopState`]),
+//! transport endpoint and [`RunRecord`]; the scheduler owns what is a
+//! property of the *fleet* rather than of any job: the shared
+//! [`CapacityEstimator`], the per-round device partition, and the
+//! admission ledger.
+//!
+//! Invariants (property-tested in `rust/tests/multi_job.rs`):
+//!
+//! * **Disjoint cohorts** — no device appears in two jobs' cohorts in
+//!   the same global round. Jobs claim devices in a deterministic
+//!   order; a later claimant loses contested devices and backfills
+//!   from the fastest unclaimed devices the capacity estimator has
+//!   seen.
+//! * **Starvation-freedom** — a rotating guarantee slot puts one
+//!   active job at the head of the claim order each round (round-robin
+//!   over active jobs, ahead of priority), so every admitted job's
+//!   cohort is non-empty at least once every `P = |active jobs|`
+//!   rounds, however skewed the priorities.
+//! * **Token-bucket rate limit** — per-job ingest is bounded by a
+//!   [`TokenBucket`]: a job never folds more updates than its bucket
+//!   grants, refill happens on round advance, and `reset`/`disable`
+//!   restore the documented states exactly.
+//! * **Admission control** — a job is rejected when the residual
+//!   fleet capacity (fleet size minus the `min_cohort` reservations of
+//!   already-admitted jobs) cannot meet its own `min_cohort`, or when
+//!   its participation policy rejects the residual slice.
+//! * **Determinism** — everything here is ordered collections and
+//!   integer/`total_cmp` comparisons on the coordinator thread; fixed
+//!   seed ⇒ bit-identical per-job `RunRecord`s at every threads ×
+//!   agg-shards × window setting, and a single admitted job
+//!   reproduces [`super::engine::RoundEngine::run`] bitwise.
+//!
+//! Capacity-awareness without breaking determinism: the scheduler
+//! never calls `fleet.observe` itself — observation draws live in
+//! per-`(device, round)` counter cells keyed by an observation
+//! counter, so an extra scheduler-side draw would shift every job's
+//! estimates. Only `step` observes (exactly as the single-job engine
+//! does), and the shared estimator accumulates reports across all
+//! jobs' cohorts.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Spec;
+use crate::device::FleetView;
+use crate::metrics::RunRecord;
+use crate::model::state::TensorMap;
+
+use super::capacity::CapacityEstimator;
+use super::engine::RoundLoopState;
+use super::participation::Participation;
+use super::server::{FedConfig, ModelMeta};
+use super::strategy::Strategy;
+use super::trainer::Trainer;
+use super::transport::Tally;
+
+/// Token-bucket configuration for one job's coordinator ingest:
+/// at most `burst` tokens held at any instant, `refill` added per
+/// round advance. One token = one folded device update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RateLimit {
+    pub burst: usize,
+    pub refill: usize,
+}
+
+/// Per-job ingest rate limiter.
+///
+/// Contract (property-tested):
+/// * starts full (`tokens == burst`);
+/// * [`TokenBucket::advance_round`] sets
+///   `tokens = min(burst, tokens + refill)` — so over any window of
+///   `w` round advances a job is granted at most `burst + w·refill`
+///   tokens;
+/// * [`TokenBucket::take`] grants `min(want, tokens)` and deducts the
+///   grant;
+/// * [`TokenBucket::reset`] restores the documented initial state
+///   (a full bucket);
+/// * [`TokenBucket::disable`] stops limiting — `available` reads
+///   `usize::MAX` and `take` grants everything without deducting —
+///   while the stored token level keeps refilling normally, so
+///   [`TokenBucket::enable`] resumes exactly where an idle limiter
+///   would have been.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TokenBucket {
+    burst: usize,
+    refill: usize,
+    tokens: usize,
+    enabled: bool,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full.
+    pub fn new(burst: usize, refill: usize) -> Self {
+        TokenBucket { burst, refill, tokens: burst, enabled: true }
+    }
+
+    /// A bucket that never limits (the default when no `--job-rate`
+    /// is set). Equivalent to `new(0, 0)` + `disable()`.
+    pub fn unlimited() -> Self {
+        TokenBucket { burst: 0, refill: 0, tokens: 0, enabled: false }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Stored token level (meaningful even while disabled).
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Tokens a taker could get right now: `usize::MAX` when
+    /// disabled, the stored level otherwise.
+    pub fn available(&self) -> usize {
+        if self.enabled {
+            self.tokens
+        } else {
+            usize::MAX
+        }
+    }
+
+    /// Consume up to `want` tokens; returns the grant. A disabled
+    /// bucket grants everything and deducts nothing.
+    pub fn take(&mut self, want: usize) -> usize {
+        if !self.enabled {
+            return want;
+        }
+        let grant = want.min(self.tokens);
+        self.tokens -= grant;
+        grant
+    }
+
+    /// Round advance: add `refill`, capped at `burst`. The stored
+    /// level refills whether or not the limiter is enabled.
+    pub fn advance_round(&mut self) {
+        self.tokens = self.tokens.saturating_add(self.refill).min(self.burst);
+    }
+
+    /// Restore the documented initial state: a full bucket. Does not
+    /// change enablement.
+    pub fn reset(&mut self) {
+        self.tokens = self.burst;
+    }
+
+    /// Stop limiting (grants become unlimited, nothing is deducted).
+    pub fn disable(&mut self) {
+        self.enabled = false;
+    }
+
+    /// Resume limiting from the stored token level.
+    pub fn enable(&mut self) {
+        self.enabled = true;
+    }
+}
+
+/// One tenant's job description: a full [`FedConfig`] plus the
+/// scheduling contract it is admitted under.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub cfg: FedConfig,
+    /// Target accuracy. Metric-only unless `stop_at_target` is set.
+    pub target_acc: f64,
+    /// Claim-order priority: higher claims devices earlier (after the
+    /// round's rotating guarantee slot); ties break by job id.
+    pub priority: i64,
+    /// Admission floor: the job is only admitted while the residual
+    /// fleet capacity can reserve this many devices for it.
+    pub min_cohort: usize,
+    /// Ingest token bucket; `None` = unlimited.
+    pub rate: Option<RateLimit>,
+    /// Finish the job early once `target_acc` is reached (its
+    /// reservation is released back to the residual pool). Off by
+    /// default: the single-job engine never stops early, and
+    /// `--jobs 1` must reproduce it bitwise.
+    pub stop_at_target: bool,
+}
+
+impl JobSpec {
+    pub fn new(cfg: FedConfig) -> Self {
+        let target_acc = cfg.target_acc;
+        JobSpec {
+            cfg,
+            target_acc,
+            priority: 0,
+            min_cohort: 1,
+            rate: None,
+            stop_at_target: false,
+        }
+    }
+}
+
+/// Why [`JobScheduler::admit`] rejected a job.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum AdmissionError {
+    #[error("job needs a minimum cohort of at least 1 device")]
+    EmptyMinCohort,
+    #[error(
+        "residual fleet capacity {residual} of {fleet} devices \
+         cannot meet the job's minimum cohort {need}"
+    )]
+    InsufficientCapacity {
+        need: usize,
+        residual: usize,
+        fleet: usize,
+    },
+    #[error("participation policy rejects the residual fleet slice: {0}")]
+    Participation(String),
+    #[error("job init: {0}")]
+    Init(String),
+}
+
+struct JobEntry<'a> {
+    spec: JobSpec,
+    strategy: Box<dyn Strategy + 'a>,
+    trainer: Box<dyn Trainer + 'a>,
+    participation: Box<dyn Participation + 'a>,
+    global: TensorMap,
+    state: RoundLoopState,
+    bucket: TokenBucket,
+    finished: bool,
+}
+
+/// What a multi-job run produced.
+#[derive(Debug)]
+pub struct MultiJobReport {
+    /// Per-job run records keyed by job id (admission order).
+    pub records: BTreeMap<usize, RunRecord>,
+    /// Per-job round tallies merged: total coordinator traffic.
+    pub fleet_traffic: Tally,
+    /// Per-global-round cohort assignment (job id → sorted device
+    /// ids), recorded only under
+    /// [`JobScheduler::record_cohorts`] — the invariant suite's
+    /// direct evidence for disjointness and starvation-freedom.
+    /// Empty when recording is off (the default: O(rounds · cohort)
+    /// memory has no business in a production run).
+    pub cohorts: Vec<BTreeMap<usize, Vec<usize>>>,
+}
+
+/// Capacity-aware multi-job scheduler. Admit jobs with
+/// [`JobScheduler::admit`], then drive every admitted job to its
+/// configured `rounds` with [`JobScheduler::run`].
+pub struct JobScheduler<'a> {
+    meta: ModelMeta,
+    /// The shared data spec (task grammar); every job's shards and
+    /// test set derive from it under the job's own seed.
+    data: Spec,
+    n_devices: usize,
+    /// Σ min_cohort over admitted, unfinished jobs.
+    reserved: usize,
+    estimator: CapacityEstimator,
+    jobs: Vec<JobEntry<'a>>,
+    record_cohorts: bool,
+}
+
+impl<'a> JobScheduler<'a> {
+    pub fn new(meta: ModelMeta, data: Spec, n_devices: usize) -> Self {
+        JobScheduler {
+            meta,
+            data,
+            n_devices,
+            reserved: 0,
+            estimator: CapacityEstimator::paper(n_devices),
+            jobs: Vec::new(),
+            record_cohorts: false,
+        }
+    }
+
+    /// Record the per-round cohort partition into
+    /// [`MultiJobReport::cohorts`] (test/diagnostic use).
+    pub fn record_cohorts(&mut self, on: bool) {
+        self.record_cohorts = on;
+    }
+
+    /// Devices not yet reserved by admitted jobs' minimum cohorts.
+    pub fn residual_capacity(&self) -> usize {
+        self.n_devices.saturating_sub(self.reserved)
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// The starvation bound P: with J admitted jobs, every job's
+    /// cohort is non-empty at least once every J rounds (while its
+    /// bucket grants and its own `rounds` budget lasts).
+    pub fn starvation_bound(&self) -> usize {
+        self.jobs.len().max(1)
+    }
+
+    /// Admission control: reject when the residual fleet capacity
+    /// cannot meet the job's minimum cohort, or when its participation
+    /// policy cannot operate on the residual slice (e.g. an absolute
+    /// `--sample-count` larger than what is left). On success the
+    /// job's `min_cohort` is reserved and its job id returned.
+    pub fn admit(&mut self, spec: JobSpec,
+                 strategy: Box<dyn Strategy + 'a>,
+                 trainer: Box<dyn Trainer + 'a>,
+                 participation: Box<dyn Participation + 'a>,
+                 global: TensorMap)
+                 -> Result<usize, AdmissionError> {
+        if spec.min_cohort == 0 {
+            return Err(AdmissionError::EmptyMinCohort);
+        }
+        let residual = self.residual_capacity();
+        if spec.min_cohort > residual {
+            return Err(AdmissionError::InsufficientCapacity {
+                need: spec.min_cohort,
+                residual,
+                fleet: self.n_devices,
+            });
+        }
+        participation
+            .validate(residual)
+            .map_err(AdmissionError::Participation)?;
+        let state = RoundLoopState::new(
+            &spec.cfg, &self.meta, strategy.as_ref(), trainer.as_ref(),
+            &self.data, self.n_devices, participation.as_ref(),
+        )
+        .map_err(|e| AdmissionError::Init(format!("{e:#}")))?;
+        let bucket = match spec.rate {
+            Some(r) => TokenBucket::new(r.burst, r.refill),
+            None => TokenBucket::unlimited(),
+        };
+        self.reserved += spec.min_cohort;
+        let id = self.jobs.len();
+        self.jobs.push(JobEntry {
+            spec,
+            strategy,
+            trainer,
+            participation,
+            global,
+            state,
+            bucket,
+            finished: false,
+        });
+        Ok(id)
+    }
+
+    /// Deterministic claim order for global round `h` over the active
+    /// jobs: the rotating guarantee slot first (active job at index
+    /// `(h − 1) mod |active|` in job-id order — this is what bounds
+    /// starvation at P = |active|), then the rest by descending
+    /// priority, ties by ascending job id.
+    fn claim_order(&self, h: usize) -> Vec<usize> {
+        let active: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| !j.finished && h <= j.spec.cfg.rounds)
+            .map(|(id, _)| id)
+            .collect();
+        if active.is_empty() {
+            return active;
+        }
+        let pinned = active[(h - 1) % active.len()];
+        let mut order = vec![pinned];
+        let mut rest: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&id| id != pinned)
+            .collect();
+        rest.sort_by_key(|&id| {
+            (std::cmp::Reverse(self.jobs[id].spec.priority), id)
+        });
+        order.extend(rest);
+        order
+    }
+
+    /// Drive every admitted job to its configured `rounds` over the
+    /// shared fleet, one global round at a time: partition the fleet
+    /// into disjoint per-job cohorts, step each job that holds both
+    /// devices and tokens, and collect the per-job [`RunRecord`]s.
+    pub fn run(mut self, fleet: &mut dyn FleetView)
+               -> Result<MultiJobReport> {
+        if fleet.len() != self.n_devices {
+            return Err(anyhow!(
+                "scheduler sized for {} devices, fleet has {}",
+                self.n_devices,
+                fleet.len()
+            ));
+        }
+        if self.jobs.is_empty() {
+            return Err(anyhow!("no jobs admitted"));
+        }
+        let last_round = self
+            .jobs
+            .iter()
+            .map(|j| j.spec.cfg.rounds)
+            .max()
+            .unwrap_or(0);
+        let mut fleet_traffic = Tally::default();
+        let mut cohort_log: Vec<BTreeMap<usize, Vec<usize>>> =
+            Vec::new();
+        for h in 1..=last_round {
+            if h > 1 {
+                fleet.advance_round();
+                for job in &mut self.jobs {
+                    job.bucket.advance_round();
+                }
+            }
+            let order = self.claim_order(h);
+            let mut claimed: BTreeSet<usize> = BTreeSet::new();
+            let mut round_cohorts: BTreeMap<usize, Vec<usize>> =
+                BTreeMap::new();
+            for id in order {
+                let job = &mut self.jobs[id];
+                // Consult the bucket BEFORE sampling: a job with no
+                // tokens idles the whole round — no sample draw, no
+                // observation, no record — so "never folds more than
+                // the grant" is exact, and an idle round costs the
+                // job's RNG streams nothing.
+                let grant = job.bucket.available();
+                if grant == 0 {
+                    continue;
+                }
+                let sampled =
+                    job.state.sample_cohort(job.participation.as_mut(), h);
+                // Contested devices went to an earlier claimant this
+                // round; backfill from the fastest unclaimed devices
+                // the shared estimator knows.
+                let mut cohort: Vec<usize> = sampled
+                    .iter()
+                    .copied()
+                    .filter(|i| !claimed.contains(i))
+                    .collect();
+                let lost = sampled.len() - cohort.len();
+                backfill(&mut cohort, &sampled, &claimed,
+                         &self.estimator, lost);
+                if cohort.is_empty() {
+                    // Everything it wanted is taken and nothing is
+                    // known to backfill from: the job sits this round
+                    // out. The rotating guarantee slot bounds how
+                    // often this can happen (head claimant never
+                    // loses a device).
+                    continue;
+                }
+                claimed.extend(cohort.iter().copied());
+                let report = job.state.step(
+                    &job.spec.cfg, &self.meta, fleet,
+                    job.strategy.as_mut(), job.trainer.as_mut(),
+                    &self.data, &mut job.global,
+                    job.participation.as_mut(), &mut self.estimator,
+                    h, &cohort, grant,
+                )?;
+                job.bucket.take(report.folded);
+                fleet_traffic = fleet_traffic.merged(&report.tally);
+                if self.record_cohorts {
+                    round_cohorts.insert(id, cohort);
+                }
+                if job.spec.stop_at_target
+                    && job.state.latest_accuracy() >= job.spec.target_acc
+                {
+                    job.finished = true;
+                    self.reserved = self
+                        .reserved
+                        .saturating_sub(job.spec.min_cohort);
+                }
+            }
+            if self.record_cohorts {
+                cohort_log.push(round_cohorts);
+            }
+        }
+        let records = self
+            .jobs
+            .into_iter()
+            .enumerate()
+            .map(|(id, j)| (id, j.state.finish()))
+            .collect();
+        Ok(MultiJobReport {
+            records,
+            fleet_traffic,
+            cohorts: cohort_log,
+        })
+    }
+}
+
+/// Refill a cohort that lost contested devices to earlier claimants,
+/// drawing up to `want` of the fastest unclaimed devices the shared
+/// capacity estimator has seen (ascending μ under `total_cmp`, ties
+/// by id), then restoring ascending-id order. Devices the estimator
+/// has never seen are not candidates: their capacity is unknown, and
+/// scanning the id space for them would be O(fleet) on a
+/// lazily-derived million-device fleet.
+fn backfill(cohort: &mut Vec<usize>, sampled: &[usize],
+            claimed: &BTreeSet<usize>, estimator: &CapacityEstimator,
+            want: usize) {
+    if want == 0 {
+        return;
+    }
+    let mut candidates: Vec<(f64, usize)> = estimator
+        .seen()
+        .filter(|(i, _)| {
+            !claimed.contains(i) && sampled.binary_search(i).is_err()
+        })
+        .map(|(i, c)| (c.mu, i))
+        .collect();
+    candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    cohort.extend(candidates.into_iter().take(want).map(|(_, i)| i));
+    cohort.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_starts_full_and_caps_at_burst() {
+        let mut b = TokenBucket::new(3, 2);
+        assert_eq!(b.available(), 3);
+        assert_eq!(b.take(5), 3);
+        assert_eq!(b.available(), 0);
+        b.advance_round();
+        assert_eq!(b.available(), 2);
+        b.advance_round();
+        b.advance_round();
+        assert_eq!(b.available(), 3, "refill saturates at burst");
+    }
+
+    #[test]
+    fn token_bucket_reset_and_disable_contracts() {
+        let mut b = TokenBucket::new(4, 1);
+        assert_eq!(b.take(4), 4);
+        b.reset();
+        assert_eq!(b.available(), 4, "reset restores a full bucket");
+        b.take(4);
+        b.disable();
+        assert_eq!(b.available(), usize::MAX);
+        assert_eq!(b.take(100), 100, "disabled grants without deducting");
+        b.advance_round();
+        assert_eq!(b.tokens(), 1, "stored level keeps refilling");
+        b.enable();
+        assert_eq!(b.available(), 1, "enable resumes the stored level");
+    }
+
+    #[test]
+    fn unlimited_bucket_never_limits() {
+        let mut b = TokenBucket::unlimited();
+        assert!(!b.is_enabled());
+        assert_eq!(b.available(), usize::MAX);
+        assert_eq!(b.take(1_000_000), 1_000_000);
+        b.advance_round();
+        assert_eq!(b.available(), usize::MAX);
+    }
+
+    #[test]
+    fn backfill_prefers_fastest_seen_and_keeps_order() {
+        let mut est = CapacityEstimator::paper(10);
+        // seen: 1 (slow), 4 (fast), 7 (medium), 9 (claimed).
+        est.update(1, 0.09, 0.9);
+        est.update(4, 0.01, 0.1);
+        est.update(7, 0.05, 0.5);
+        est.update(9, 0.02, 0.2);
+        let claimed: BTreeSet<usize> = [2, 9].into_iter().collect();
+        // Sampled {2, 5}; device 2 was claimed → cohort {5}, lost 1.
+        let mut cohort = vec![5];
+        backfill(&mut cohort, &[2, 5], &claimed, &est, 1);
+        assert_eq!(cohort, vec![4, 5], "fastest unclaimed seen device");
+        // Wanting more than is known caps at what is known.
+        let mut cohort = vec![5];
+        backfill(&mut cohort, &[2, 5], &claimed, &est, 10);
+        assert_eq!(cohort, vec![1, 4, 5, 7]);
+    }
+
+    #[test]
+    fn backfill_never_duplicates_sampled_devices() {
+        let mut est = CapacityEstimator::paper(10);
+        est.update(3, 0.01, 0.1);
+        est.update(6, 0.02, 0.2);
+        let claimed = BTreeSet::new();
+        // Device 3 is already in the sampled cohort: only 6 may fill.
+        let mut cohort = vec![3];
+        backfill(&mut cohort, &[3], &claimed, &est, 2);
+        assert_eq!(cohort, vec![3, 6]);
+    }
+}

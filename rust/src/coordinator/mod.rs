@@ -20,12 +20,16 @@
 //! * [`async_engine`] — the staleness-windowed, event-driven round
 //!   loop (devices fold across round boundaries with staleness
 //!   weights);
+//! * [`jobs`] — the multi-job scheduler: disjoint per-job cohorts
+//!   over a shared fleet, per-job token-bucket ingest limits, and
+//!   capacity-based admission control (docs/MULTIJOB.md);
 //! * [`server`] — run configuration + the public entry points.
 
 pub mod aggregation;
 pub mod async_engine;
 pub mod capacity;
 pub mod engine;
+pub mod jobs;
 pub mod layout;
 pub mod lcd;
 pub mod participation;
@@ -37,5 +41,9 @@ pub mod trainer;
 
 pub use async_engine::AsyncEngine;
 pub use engine::RoundEngine;
+pub use jobs::{
+    AdmissionError, JobScheduler, JobSpec, MultiJobReport, RateLimit,
+    TokenBucket,
+};
 pub use serialize::Codec;
 pub use server::{run_federated, run_federated_with, FedConfig, ModelMeta};

@@ -288,6 +288,22 @@ mod tests {
     }
 
     #[test]
+    fn uniform_count_validates_against_residual_slice() {
+        // Multi-job admission hands validate the *residual* fleet
+        // slice (fleet minus earlier jobs' reservations), not the full
+        // fleet. A --sample-count that fits the fleet but not the
+        // residual must surface as a proper Err — the admission path
+        // turns it into AdmissionError::Participation — never a panic
+        // or a silently truncated cohort.
+        let p = UniformCount { count: 10 };
+        assert!(p.validate(80).is_ok(), "fits the whole fleet");
+        let err = p.validate(6).expect_err("must reject the residual");
+        assert!(err.contains("exceeds fleet size"), "{err}");
+        // Fully-reserved fleet: residual 0 rejects any count.
+        assert!(UniformCount { count: 1 }.validate(0).is_err());
+    }
+
+    #[test]
     fn by_name_covers_policies() {
         for n in ["full", "sample", "count", "deadline"] {
             assert!(by_name(n, 0.3, 10, 1.5).is_ok(), "{n}");

@@ -76,6 +76,19 @@ pub struct Tally {
     pub messages: usize,
 }
 
+impl Tally {
+    /// Component-wise sum. The multi-job scheduler runs one transport
+    /// endpoint per job and merges their tallies into the fleet-wide
+    /// traffic total (coordinator/jobs.rs).
+    pub fn merged(&self, other: &Tally) -> Tally {
+        Tally {
+            downlink: self.downlink + other.downlink,
+            uplink: self.uplink + other.uplink,
+            messages: self.messages + other.messages,
+        }
+    }
+}
+
 #[derive(Debug, Default)]
 struct Counters {
     downlink: AtomicUsize,
@@ -212,6 +225,18 @@ mod tests {
 
     const L: usize = 4;
     const R: usize = 3;
+
+    #[test]
+    fn tally_merged_sums_componentwise() {
+        let a = Tally { downlink: 10, uplink: 3, messages: 2 };
+        let b = Tally { downlink: 5, uplink: 7, messages: 1 };
+        let m = a.merged(&b);
+        assert_eq!(m, Tally { downlink: 15, uplink: 10, messages: 3 });
+        // Identity and commutativity — the scheduler folds per-job
+        // tallies in job-id order, but the total must not care.
+        assert_eq!(a.merged(&Tally::default()), a);
+        assert_eq!(a.merged(&b), b.merged(&a));
+    }
 
     fn global() -> TensorMap {
         TensorMap::zeros(&[

@@ -11,7 +11,10 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::participation::{Full, Participation};
 use crate::coordinator::strategy::{self, Strategy};
 use crate::coordinator::trainer::PjrtTrainer;
-use crate::coordinator::{run_federated_with, FedConfig, ModelMeta};
+use crate::coordinator::{
+    run_federated_with, FedConfig, JobScheduler, JobSpec, ModelMeta,
+    MultiJobReport, RateLimit,
+};
 use crate::data::Spec;
 use crate::device::{Fleet, FleetConfig, FleetView, LazyFleet};
 use crate::metrics::RunRecord;
@@ -99,6 +102,64 @@ impl ExpEnv {
         )
         .ok_or_else(|| anyhow!("unknown method {method:?}"))?;
         self.run_strategy_with(s.as_mut(), cfg, fleet_cfg, participation)
+    }
+
+    /// Run a named method as `n_jobs` concurrent tenants of one shared
+    /// fleet via the multi-job scheduler (docs/MULTIJOB.md). Job `j`
+    /// clones the base config with `seed = base.seed + j`, so tenants
+    /// differ while the whole run stays a pure function of the base
+    /// seed. `rate > 0` gives every job an ingest token bucket with
+    /// `burst = refill = rate`; `parts` supplies one participation
+    /// policy per job (length must equal `n_jobs`).
+    pub fn run_method_multi(&self, method: &str, base: &FedConfig,
+                            fleet_cfg: &FleetConfig, n_jobs: usize,
+                            rate: usize,
+                            parts: Vec<Box<dyn Participation>>)
+                            -> Result<MultiJobReport> {
+        if parts.len() != n_jobs {
+            return Err(anyhow!(
+                "need {n_jobs} participation policies, got {}",
+                parts.len()
+            ));
+        }
+        let mut sched = JobScheduler::new(
+            self.meta.clone(),
+            self.spec.clone(),
+            fleet_cfg.total(),
+        );
+        for (j, part) in parts.into_iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.seed = base.seed + j as u64;
+            let s = strategy::by_name(
+                method,
+                self.meta.n_layers,
+                self.meta.r_max,
+                self.meta.w_max,
+            )
+            .ok_or_else(|| anyhow!("unknown method {method:?}"))?;
+            let family: &'static str = match s.family() {
+                "adapter" => "adapter",
+                _ => "lora",
+            };
+            let trainer = PjrtTrainer::new(&self.rt, family, cfg.seed);
+            let global = self.fresh_global(family, cfg.seed);
+            let mut spec = JobSpec::new(cfg);
+            if rate > 0 {
+                spec.rate = Some(RateLimit { burst: rate, refill: rate });
+            }
+            sched
+                .admit(spec, s, Box::new(trainer), part, global)
+                .map_err(|e| anyhow!("job {j} rejected: {e}"))?;
+        }
+        // All tenants share one fleet, seeded by the base config so the
+        // device population is independent of the job count.
+        let fc = FleetConfig { seed: base.seed, ..fleet_cfg.clone() };
+        let mut fleet: Box<dyn FleetView> = if base.lazy_fleet {
+            Box::new(LazyFleet::new(fc))
+        } else {
+            Box::new(Fleet::new(fc))
+        };
+        sched.run(fleet.as_mut())
     }
 }
 

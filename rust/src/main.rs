@@ -29,6 +29,13 @@
 //!          moved less than H bitwise — see docs/ADAPTIVE.md).
 //!          --realloc-every 0 reproduces the static-plan engine
 //!          bitwise.
+//!          Multi-job: --jobs N runs N tenants of one shared fleet
+//!          through the capacity-aware scheduler (disjoint per-round
+//!          cohorts, admission control; job j uses seed + j);
+//!          --job-rate R caps each job's coordinator ingest at R
+//!          admitted updates/round (token bucket, burst = refill = R;
+//!          0 = unlimited). --jobs 1 reproduces the single-job engine
+//!          bitwise. See docs/MULTIJOB.md.
 //!   exp    regenerate a paper figure: legend exp --fig fig7 (or --all)
 //!   fleet  describe the simulated 80-device testbed (Table 1)
 //!   data   describe the synthetic datasets (Table 2)
@@ -119,6 +126,42 @@ fn run() -> Result<()> {
             let cfg = fed_config_from(&args)?;
             let method = args.get_or("method", "legend");
             let devices = args.get_parse("devices", 10usize)?;
+            let jobs = args.get_parse("jobs", 1usize)?;
+            let job_rate = args.get_parse("job-rate", 0usize)?;
+            if jobs == 0 {
+                return Err(anyhow!("--jobs must be ≥ 1"));
+            }
+            if jobs > 1 {
+                // Multi-tenant path: N policies (one per job), one
+                // shared fleet, disjoint cohorts each round.
+                let mut parts = Vec::with_capacity(jobs);
+                for _ in 0..jobs {
+                    parts.push(participation_from(&args)?);
+                }
+                args.reject_unknown()?;
+                let env = ExpEnv::load(&artifacts)?;
+                let fleet_cfg = FleetConfig::sized(devices);
+                let report = env.run_method_multi(
+                    &method, &cfg, &fleet_cfg, jobs, job_rate, parts)?;
+                let recs: Vec<_> =
+                    report.records.values().cloned().collect();
+                for (id, rec) in &report.records {
+                    let path = metrics::write_csv(
+                        &format!("run_{method}_{}_job{id}", cfg.task),
+                        std::slice::from_ref(rec))?;
+                    println!("wrote {path}");
+                }
+                println!("\n{}",
+                         metrics::summary_table(&recs, cfg.target_acc));
+                let t = &report.fleet_traffic;
+                println!(
+                    "fleet traffic: {} B down / {} B up / {} msgs \
+                     ({} jobs)",
+                    t.downlink, t.uplink, t.messages,
+                    report.records.len()
+                );
+                return Ok(());
+            }
             let mut part = participation_from(&args)?;
             args.reject_unknown()?;
             let env = ExpEnv::load(&artifacts)?;

@@ -214,6 +214,21 @@ test_loss,mean_depth,participants,dropped,plan_epoch";
     }
 }
 
+/// One canonical JSON document over a multi-job run's per-job
+/// records, keyed `"job<id>"` in ascending job-id order — the
+/// artifact the multi-job determinism oracle double-runs and diffs
+/// across processes (`results/DETERMINISM_multijob.json`).
+pub fn multi_job_json(
+    records: &std::collections::BTreeMap<usize, RunRecord>,
+) -> Value {
+    Value::Obj(
+        records
+            .iter()
+            .map(|(id, r)| (format!("job{id}"), r.to_json()))
+            .collect(),
+    )
+}
+
 /// Write a set of runs to `results/<name>.csv` (plus echo a summary).
 pub fn write_csv(name: &str, runs: &[RunRecord])
                  -> std::io::Result<String> {
@@ -326,6 +341,24 @@ mod tests {
             rows.lines().next().unwrap().split(',').count(),
             RunRecord::CSV_HEADER.split(',').count()
         );
+    }
+
+    #[test]
+    fn multi_job_json_keys_by_job_id_in_order() {
+        let mut records = std::collections::BTreeMap::new();
+        records.insert(1usize, run_with_accs(&[0.6]));
+        records.insert(0usize, run_with_accs(&[0.5, 0.7]));
+        let v = multi_job_json(&records);
+        let parsed =
+            crate::util::json::Value::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.get("job0").get("rounds").as_arr().unwrap().len(),
+                   2);
+        assert_eq!(parsed.get("job1").get("rounds").as_arr().unwrap().len(),
+                   1);
+        // BTreeMap keying ⇒ the serialized document lists job0 before
+        // job1, so a byte diff across processes is meaningful.
+        let text = v.to_string();
+        assert!(text.find("job0").unwrap() < text.find("job1").unwrap());
     }
 
     #[test]

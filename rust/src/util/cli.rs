@@ -252,6 +252,26 @@ mod tests {
     }
 
     #[test]
+    fn multi_job_knobs_parse_and_default() {
+        // The `run` surface for the multi-job scheduler
+        // (docs/MULTIJOB.md).
+        let a = parse("run --jobs 3 --job-rate 16");
+        assert_eq!(a.get_parse("jobs", 1usize).unwrap(), 3);
+        assert_eq!(a.get_parse("job-rate", 0usize).unwrap(), 16);
+        assert!(a.reject_unknown().is_ok());
+        // Omitted: single-job mode with no ingest limit — today's
+        // RoundEngine, bitwise.
+        let b = parse("run");
+        assert_eq!(b.get_parse("jobs", 1usize).unwrap(), 1);
+        assert_eq!(b.get_parse("job-rate", 0usize).unwrap(), 0);
+        // Malformed values fail loudly, mirroring --realloc-every.
+        let c = parse("run --jobs 1.5");
+        assert!(c.get_parse("jobs", 1usize).is_err());
+        let d = parse("run --job-rate=-2");
+        assert!(d.get_parse("job-rate", 0usize).is_err());
+    }
+
+    #[test]
     fn scale_knobs_parse_and_default() {
         // The `run` surface for the lazy fleet + edge-aggregation tier.
         let a = parse(

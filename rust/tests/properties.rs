@@ -1559,6 +1559,97 @@ fn prop_json_roundtrip_random_values() {
     });
 }
 
+/// A 2-job scheduler run (rate-limited LEGEND + sampling FedLoRA over
+/// the pretest fleet) with the fleet flavor and concurrency knobs
+/// exposed — the multi-job analogue of [`engine_run_scaled`]. The
+/// full invariant suite lives in `tests/multi_job.rs`; here the
+/// scheduler is held to the two contracts this file owns: lazy ≡
+/// eager bitwise, and invariance under the concurrency knobs.
+fn multi_job_records(seed: u64, lazy: bool, threads: usize,
+                     shards: usize, window: usize)
+                     -> std::collections::BTreeMap<
+                         usize, legend::metrics::RunRecord> {
+    use legend::coordinator::participation::UniformCount;
+    use legend::coordinator::{JobScheduler, JobSpec, RateLimit};
+    let meta = ModelMeta::synthetic(L, R, 32);
+    let mut sched = JobScheduler::new(meta.clone(), engine_spec(), 10);
+    for (j, (method, rate)) in
+        [("legend", Some(RateLimit { burst: 2, refill: 1 })),
+         ("fedlora", None)]
+        .into_iter()
+        .enumerate()
+    {
+        let cfg = FedConfig {
+            rounds: 3,
+            train_size: 256,
+            test_size: 64,
+            seed: seed + j as u64,
+            threads,
+            agg_shards: shards,
+            window,
+            ..Default::default()
+        };
+        let mut spec = JobSpec::new(cfg);
+        spec.rate = rate;
+        let s = fedstrategy::by_name(method, L, R, 32).unwrap();
+        let family = s.family();
+        let global = TensorMap::zeros(&[
+            TensorSpec {
+                name: "aq".into(),
+                shape: vec![L, meta.rank_dim(family), 4],
+            },
+            TensorSpec { name: "head_w".into(), shape: vec![4, 2] },
+        ]);
+        sched
+            .admit(spec, s, Box::new(MockTrainer::new(family)),
+                   Box::new(UniformCount { count: 4 }), global)
+            .unwrap();
+    }
+    let fc = FleetConfig { seed, ..FleetConfig::pretest() };
+    let mut fleet: Box<dyn FleetView> = if lazy {
+        Box::new(LazyFleet::new(fc))
+    } else {
+        Box::new(Fleet::new(fc))
+    };
+    sched.run(fleet.as_mut()).unwrap().records
+}
+
+#[test]
+fn prop_multi_job_run_is_a_pure_function_of_the_seed() {
+    // The multi-job scheduler inherits the engines' determinism
+    // contract wholesale: per-job RunRecords are bit-identical
+    // between eager and lazy fleets and at every threads ×
+    // agg-shards × window setting.
+    check("multi-job-lazy-eager-invariance", 5, |rng, case| {
+        let seed = rng.next_u64() % 1_000_003;
+        let base = multi_job_records(seed, false, 1, 1, 0);
+        prop_assert!(base.len() == 2, "two jobs, two records");
+        let (threads, shards, window) =
+            [(4usize, 2usize, 2usize), (2, 8, 1), (3, 2, 5)]
+                [case % 3];
+        for lazy in [false, true] {
+            let got =
+                multi_job_records(seed, lazy, threads, shards, window);
+            for (id, want) in &base {
+                prop_assert!(
+                    want.to_json().to_string()
+                        == got[id].to_json().to_string(),
+                    "seed {seed} job {id} lazy={lazy}: JSON diverged \
+                     at threads={threads} shards={shards} \
+                     window={window}"
+                );
+                prop_assert!(
+                    want.to_csv_rows() == got[id].to_csv_rows(),
+                    "seed {seed} job {id} lazy={lazy}: CSV diverged \
+                     at threads={threads} shards={shards} \
+                     window={window}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_rng_range_bounds() {
     check("rng-ranges", 256, |rng, _| {

@@ -25,6 +25,11 @@ Semantics:
     re-allocation (docs/ADAPTIVE.md) is an O(cohort) coordinator-side
     refit, so a run with --realloc-every 2 may cost at most 1.5x the
     static-plan run, independent of runner speed.
+  * `*multijob_overhead_ratio` is the same kind of hard UPPER bound
+    for the multi-job scheduler (docs/MULTIJOB.md): running 2 jobs
+    through JobScheduler may cost at most 1.5x the two equivalent
+    single-job engine runs back-to-back — partitioning and token
+    buckets are bookkeeping, not a second training pass.
   * A null baseline leaf means the committed baseline is unmeasured at
     that path. It is reported with a clear message and, under --strict,
     fails with a DISTINCT exit code (2) so CI can tell "baseline was
@@ -50,6 +55,7 @@ import sys
 RSS_RATIO_BOUND = 10.0  # acceptance: lazy peak RSS <= 10x eager-80
 SAVINGS_RATIO_BOUND = 0.35  # acceptance: codec saves >= 35% of bytes
 REALLOC_OVERHEAD_BOUND = 1.5  # acceptance: realloc run <= 1.5x static
+MULTIJOB_OVERHEAD_BOUND = 1.5  # acceptance: 2-job sched <= 1.5x serial
 
 EXIT_OK = 0
 EXIT_REGRESSION = 1  # a measured value regressed (or went missing)
@@ -97,6 +103,12 @@ def compare(baseline, current, tolerance):
                 regressions.append((path, REALLOC_OVERHEAD_BOUND, cur))
             else:
                 improvements.append((path, REALLOC_OVERHEAD_BOUND, cur))
+            continue
+        if path.endswith("multijob_overhead_ratio"):
+            if cur > MULTIJOB_OVERHEAD_BOUND:
+                regressions.append((path, MULTIJOB_OVERHEAD_BOUND, cur))
+            else:
+                improvements.append((path, MULTIJOB_OVERHEAD_BOUND, cur))
             continue
         if ref is None or not isinstance(ref, (int, float)):
             unmeasured.append(path)

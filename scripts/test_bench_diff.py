@@ -131,6 +131,24 @@ class CompareTests(unittest.TestCase):
             ok, [("realloc.realloc_overhead_ratio",
                   bench_diff.REALLOC_OVERHEAD_BOUND, 1.05)])
 
+    def test_multijob_overhead_bound_fires_even_with_null_baseline(self):
+        reg, _, unmeasured, _ = self.cmp(
+            {"multijob": {"multijob_overhead_ratio": None}},
+            {"multijob": {"multijob_overhead_ratio": 1.8}})
+        self.assertEqual(
+            reg, [("multijob.multijob_overhead_ratio",
+                   bench_diff.MULTIJOB_OVERHEAD_BOUND, 1.8)])
+        self.assertEqual(unmeasured, [])
+
+    def test_multijob_overhead_within_bound_is_ok(self):
+        reg, ok, _, _ = self.cmp(
+            {"multijob": {"multijob_overhead_ratio": None}},
+            {"multijob": {"multijob_overhead_ratio": 1.1}})
+        self.assertEqual(reg, [])
+        self.assertEqual(
+            ok, [("multijob.multijob_overhead_ratio",
+                  bench_diff.MULTIJOB_OVERHEAD_BOUND, 1.1)])
+
     def test_note_leaves_are_ignored(self):
         reg, ok, unmeasured, missing = self.cmp(
             {"note": "schema doc", "n": 1},
@@ -187,6 +205,12 @@ class MainExitCodeTests(unittest.TestCase):
         code = self.run_main(
             {"realloc": {"realloc_overhead_ratio": None}},
             {"realloc": {"realloc_overhead_ratio": 3.0}}, "--strict")
+        self.assertEqual(code, bench_diff.EXIT_REGRESSION)
+
+    def test_strict_multijob_bound_violation_exits_regression(self):
+        code = self.run_main(
+            {"multijob": {"multijob_overhead_ratio": None}},
+            {"multijob": {"multijob_overhead_ratio": 2.4}}, "--strict")
         self.assertEqual(code, bench_diff.EXIT_REGRESSION)
 
     def test_strict_filtered_run_tolerates_absent_sections(self):
